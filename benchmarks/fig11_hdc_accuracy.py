@@ -1,0 +1,58 @@
+"""Fig. 11: quantized HDC classification accuracy.
+
+(a) binary cosine (COSIME proxy) vs 3-bit cosine vs binary SEE-MCAM vs 3-bit
+    SEE-MCAM at D=1024, on the three Table III dataset stand-ins.
+(b) SEE-MCAM density scaling: the same cell budget stores D=1024 (1b/cell
+    baseline budget) vs D=2048 (2b) vs D=4096 (3b) dimensions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.core import hdc
+from repro.data import hdc_data
+
+
+def _fit_eval(spec, dim, bits, mode, seed=0):
+    x_tr, y_tr, x_te, y_te = hdc_data.make_dataset(spec)
+    cfg = hdc.HDCConfig(n_features=spec.n_features, n_classes=spec.n_classes,
+                        dim=dim, retrain_epochs=3, bits=bits, seed=seed)
+    model = hdc.fit(hdc.make_model(cfg), jnp.asarray(x_tr), jnp.asarray(y_tr))
+    hv = hdc.encode(model.projection, jnp.asarray(x_te))
+    if mode == "cos":
+        pred = hdc.predict_cosine_quantized(model.class_hvs, hv, bits)
+    else:
+        pred = hdc.predict_cam(model, hv)
+    return hdc.accuracy(pred, jnp.asarray(y_te))
+
+
+def run():
+    for name, spec in hdc_data.TABLE_III.items():
+        accs = {}
+        for label, (bits, mode) in {
+            "cos_1b": (1, "cos"), "cos_3b": (3, "cos"),
+            "cam_1b": (1, "cam"), "cam_3b": (3, "cam"),
+        }.items():
+            accs[label] = _fit_eval(spec, 1024, bits, mode)
+        emit(f"fig11a_{name}", 0.0,
+             ";".join(f"{k}={v:.4f}" for k, v in accs.items())
+             + f";cam3b_minus_cos3b={accs['cam_3b'] - accs['cos_3b']:+.4f}"
+             + f";cam1b_minus_cos1b={accs['cam_1b'] - accs['cos_1b']:+.4f}")
+
+    # (b) equal-cell-budget density scaling (1024 cells): 1b/2b/3b cells
+    for name, spec in hdc_data.TABLE_III.items():
+        a1 = _fit_eval(spec, 1024, 1, "cam")
+        a2 = _fit_eval(spec, 2048, 2, "cam")
+        a3 = _fit_eval(spec, 4096, 3, "cam")
+        emit(f"fig11b_{name}", 0.0,
+             f"d1024_1b={a1:.4f};d2048_2b={a2:.4f};d4096_3b={a3:.4f};"
+             f"density_gain={a3 - a1:+.4f}")
+
+
+if __name__ == "__main__":
+    run()

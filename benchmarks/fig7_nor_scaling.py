@@ -1,0 +1,44 @@
+"""Fig. 7: 2FeFET-1T (NOR) SEE-MCAM search energy/latency vs rows & cells."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.core import cam_array, energy
+
+
+def run():
+    # (a) energy/latency vs number of rows at 32 cells/word, 3 bits
+    for rows in (16, 32, 64, 128, 256):
+        e = energy.search_energy_array("nor", rows, 32, 3)
+        lat = energy.search_latency("nor", 32)
+        # functional search timing of the behavioural array (device model)
+        cfg = cam_array.SEEMCAMConfig(bits=3, n_cells=32, n_rows=rows)
+        arr = cam_array.SEEMCAMArray(cfg)
+        key = jax.random.PRNGKey(rows)
+        arr.program(jax.random.randint(key, (rows, 32), 0, 8))
+        q = jax.random.randint(key, (16, 32), 0, 8)
+        us = time_call(lambda qq: arr.search_batch(qq)[1], q)
+        emit(f"fig7a_rows{rows}", us,
+             f"energy_fj={e:.2f};latency_ps={lat:.1f}")
+
+    # (b) vs cells per row at 64 rows
+    for cells in (4, 8, 16, 32, 64):
+        e = energy.search_energy_array("nor", 64, cells, 3)
+        lat = energy.search_latency("nor", cells)
+        emit(f"fig7b_cells{cells}", 0.0,
+             f"energy_fj={e:.2f};latency_ps={lat:.1f};"
+             f"e_per_bit_fj={energy.search_energy_per_bit('nor', cells, 3):.4f}")
+
+    # derived claims: linear-in-rows energy; latency grows with cells
+    e64 = energy.search_energy_array("nor", 64, 32, 3)
+    e128 = energy.search_energy_array("nor", 128, 32, 3)
+    emit("fig7_derived", 0.0,
+         f"rows_linearity={e128 / e64:.3f};"
+         f"lat_32c_over_8c={energy.search_latency('nor', 32) / energy.search_latency('nor', 8):.2f}")
+
+
+if __name__ == "__main__":
+    run()

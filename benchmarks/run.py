@@ -1,0 +1,34 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Each emits ``name,us_per_call,derived`` CSV lines (see benchmarks/common.py).
+
+  python -m benchmarks.run            # everything
+  python -m benchmarks.run fig11      # one table/figure
+"""
+
+from __future__ import annotations
+
+import sys
+
+from benchmarks import (fig7_nor_scaling, fig8_nand_scaling, fig9_robustness,
+                        fig11_hdc_accuracy, fig12_speedup, table2_comparison)
+
+ALL = {
+    "fig7": fig7_nor_scaling.run,
+    "fig8": fig8_nand_scaling.run,
+    "table2": table2_comparison.run,
+    "fig9": fig9_robustness.run,
+    "fig11": fig11_hdc_accuracy.run,
+    "fig12": fig12_speedup.run,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(ALL)
+    print("name,us_per_call,derived")
+    for name in which:
+        ALL[name]()
+
+
+if __name__ == "__main__":
+    main()

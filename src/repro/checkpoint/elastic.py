@@ -1,0 +1,25 @@
+"""Elastic rescaling: restore a checkpoint onto a different mesh.
+
+Checkpoints store logical (full) arrays, so rescaling from M to N devices is:
+build the new mesh, rebuild sharding specs against it, and restore — every
+leaf is sliced per the new sharding inside ``make_array_from_callback``.
+Nothing about the checkpoint format depends on the mesh it was written from.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+def reshard_restore(ckpt: Checkpointer, target_template: Any,
+                    spec_tree: Any, new_mesh: jax.sharding.Mesh,
+                    step: int | None = None) -> tuple[Any, dict]:
+    """Restore ``ckpt`` onto ``new_mesh`` with logical specs ``spec_tree``."""
+    shardings = jax.tree.map(lambda s: NamedSharding(new_mesh, s), spec_tree,
+                             is_leaf=lambda x: isinstance(x, P))
+    return ckpt.restore(target_template, step=step, shardings=shardings)

@@ -1,0 +1,161 @@
+"""Fault-tolerance runtime: watchdog, straggler monitor, preemption handling,
+fault injection, and the restartable training loop that composes them.
+
+At 1000+ nodes the assumptions are: any step can hang (network partition),
+any host can die (preemption/hardware), and ~1% of hosts run slow
+(stragglers).  The loop's contract:
+
+* every N steps an **async** checkpoint is committed atomically;
+* a **watchdog** deadline per step turns hangs into exceptions;
+* on any exception the loop restores the latest checkpoint and replays —
+  the data pipeline is a pure function of step, so replay is exact;
+* SIGTERM/SIGINT triggers a synchronous save before exit (preemption);
+* per-step wall times feed a **straggler monitor** whose flags a scheduler
+  would use to re-shard or evict (here: logged + queryable).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import threading
+import time
+from typing import Any, Callable
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+class StepWatchdog:
+    """Raises in the main thread (via exception flag) if a step exceeds its
+    deadline — converts silent hangs into restartable failures."""
+
+    def __init__(self, timeout_s: float):
+        self.timeout_s = timeout_s
+        self._timer: threading.Timer | None = None
+        self.fired = threading.Event()
+
+    def __enter__(self):
+        self._timer = threading.Timer(self.timeout_s, self.fired.set)
+        self._timer.daemon = True
+        self._timer.start()
+        return self
+
+    def __exit__(self, *exc):
+        if self._timer:
+            self._timer.cancel()
+        return False
+
+    def check(self):
+        if self.fired.is_set():
+            raise TimeoutError(
+                f"step exceeded watchdog deadline of {self.timeout_s}s")
+
+
+class StragglerMonitor:
+    """Flags steps slower than median * threshold over a sliding window."""
+
+    def __init__(self, window: int = 50, threshold: float = 3.0):
+        self.window = window
+        self.threshold = threshold
+        self.times: list[float] = []
+        self.flagged: list[tuple[int, float]] = []
+
+    def record(self, step: int, dt: float):
+        self.times.append(dt)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        med = sorted(self.times)[len(self.times) // 2]
+        if len(self.times) >= 10 and dt > self.threshold * med:
+            self.flagged.append((step, dt))
+            return True
+        return False
+
+
+@dataclasses.dataclass
+class LoopReport:
+    final_step: int
+    restarts: int
+    straggler_flags: list
+    losses: list
+
+
+class FaultTolerantLoop:
+    """Restartable training loop.
+
+    ``fault_injector(step)``: test hook; raise to simulate a failure at a
+    given step.  The loop must converge to the same final state as a clean
+    run — asserted by tests/test_fault_tolerance.py.
+    """
+
+    def __init__(self, step_fn: Callable, init_state: Any,
+                 batch_fn: Callable[[int], Any], ckpt: Checkpointer,
+                 ckpt_every: int = 10, watchdog_s: float = 300.0,
+                 max_restarts: int = 5,
+                 fault_injector: Callable[[int], None] | None = None,
+                 state_shardings: Any = None):
+        self.step_fn = step_fn
+        self.init_state = init_state
+        self.batch_fn = batch_fn
+        self.ckpt = ckpt
+        self.ckpt_every = ckpt_every
+        self.watchdog_s = watchdog_s
+        self.max_restarts = max_restarts
+        self.fault_injector = fault_injector
+        self.state_shardings = state_shardings
+        self.straggler = StragglerMonitor()
+        self._preempted = threading.Event()
+
+    def _install_signal_handlers(self):
+        def handler(signum, frame):
+            self._preempted.set()
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass  # not on main thread (tests)
+
+    def run(self, num_steps: int) -> tuple[Any, LoopReport]:
+        self._install_signal_handlers()
+        restarts = 0
+        losses: list[float] = []
+        state, start = self._restore_or_init()
+
+        step = start
+        while step < num_steps:
+            try:
+                t0 = time.time()
+                with StepWatchdog(self.watchdog_s) as wd:
+                    if self.fault_injector is not None:
+                        self.fault_injector(step)
+                    batch = self.batch_fn(step)
+                    state, metrics = self.step_fn(state, batch)
+                    wd.check()
+                dt = time.time() - t0
+                self.straggler.record(step, dt)
+                losses.append(float(metrics["loss"]))
+                step += 1
+                if step % self.ckpt_every == 0:
+                    self.ckpt.save_async(step, state, {"step": step})
+            except (Exception, KeyboardInterrupt) as e:
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                self.ckpt.wait()
+                state, step = self._restore_or_init()
+            if self._preempted.is_set():
+                self.ckpt.wait()
+                self.ckpt.save(step, state, {"step": step, "preempted": True})
+                break
+
+        self.ckpt.wait()
+        self.ckpt.save(step, state, {"step": step})
+        return state, LoopReport(final_step=step, restarts=restarts,
+                                 straggler_flags=self.straggler.flagged,
+                                 losses=losses)
+
+    def _restore_or_init(self):
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return self.init_state, 0
+        state, meta = self.ckpt.restore(self.init_state,
+                                        shardings=self.state_shardings)
+        return state, int(meta["step"])

@@ -1,0 +1,10 @@
+"""Core SEE-MCAM library — the paper's primary contribution in JAX.
+
+FeFET device model, 2FeFET MIBO XOR cell, NOR/NAND CAM array models,
+analytical energy/latency/area models (Table II calibrated), Z-score
+quantization, quantized HDC pipeline, and the AssociativeMemory module.
+"""
+
+from repro.core import am, cam_array, energy, fefet, hdc, mibo, quantize
+
+__all__ = ["am", "cam_array", "energy", "fefet", "hdc", "mibo", "quantize"]

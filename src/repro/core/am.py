@@ -1,0 +1,132 @@
+"""AssociativeMemory — the SEE-MCAM search primitive as a composable module.
+
+This is the paper's contribution packaged for system use: a store of multi-bit
+codes over which batched associative searches run.  Three interchangeable
+backends:
+
+  "ref"     pure-jnp oracle (exact semantics, differentiable-free int path)
+  "pallas"  TPU Pallas kernel: one-hot Gram-matrix match counting on the MXU
+            (:mod:`repro.kernels.cam_search`) — the performance path
+  "analog"  behavioural circuit simulation through the FeFET/MIBO device model
+            (:mod:`repro.core.cam_array`) including V_TH variation — the
+            fidelity path used for robustness studies
+
+Higher layers (the HDC classifier head, the serving-side associative cache in
+``examples/serve_am_cache.py``) depend only on this interface.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class AMSearchResult:
+    mismatch_counts: jnp.ndarray   # (Q, N) int32 symbol-mismatch counts
+    exact_match: jnp.ndarray       # (Q, N) bool
+    best_row: jnp.ndarray          # (Q,) int32 argmin mismatch (analog ML rank)
+
+
+class AssociativeMemory:
+    """Multi-bit exact/nearest associative memory over integer symbol codes.
+
+    ``distance`` selects the nearest-row ranking semantics:
+      "hamming" — strict digital exact-match counting (#differing symbols);
+      "l1"      — the analog ML-discharge ranking: a mismatching cell's
+                  pull-down current grows with gate overdrive, i.e. with the
+                  level distance |q - t| (fefet.OVERDRIVE_SLOPE), so the word
+                  ranking is a weighted L1 distance.  Simulated digitally via
+                  thermometer coding: |a-b| = Hamming(therm(a), therm(b)),
+                  which also maps onto the same MXU Gram kernel.
+    Exact-match flags are identical under both (distance 0 <=> equal).
+    """
+
+    def __init__(self, bits: int = 3, backend: str = "ref",
+                 distance: str = "hamming",
+                 variation_key: jax.Array | None = None):
+        if backend not in ("ref", "pallas", "analog"):
+            raise ValueError(f"unknown backend {backend!r}")
+        if distance not in ("hamming", "l1"):
+            raise ValueError(f"unknown distance {distance!r}")
+        self.bits = bits
+        self.backend = backend
+        self.distance = distance
+        self.variation_key = variation_key
+        self._codes: jnp.ndarray | None = None
+
+    # -- write ---------------------------------------------------------------
+
+    def write(self, codes: jnp.ndarray) -> None:
+        """Store (N, D) int codes, each symbol in [0, 2**bits)."""
+        codes = jnp.asarray(codes, jnp.int32)
+        if codes.ndim != 2:
+            raise ValueError(f"codes must be (N, D), got {codes.shape}")
+        self._codes = codes
+
+    @property
+    def codes(self) -> jnp.ndarray:
+        if self._codes is None:
+            raise RuntimeError("AssociativeMemory is empty — call write() first")
+        return self._codes
+
+    # -- search ---------------------------------------------------------------
+
+    def search(self, queries: jnp.ndarray) -> AMSearchResult:
+        """Batched associative search of (Q, D) int queries."""
+        queries = jnp.asarray(queries, jnp.int32)
+        if queries.ndim == 1:
+            queries = queries[None]
+        codes = self.codes
+        if queries.shape[-1] != codes.shape[-1]:
+            raise ValueError(
+                f"query width {queries.shape[-1]} != stored width {codes.shape[-1]}")
+
+        bits = self.bits
+        if self.distance == "l1" and bits > 1 and self.backend != "analog":
+            # thermometer expansion: (N, D) b-bit -> (N, D*(2^b-1)) binary
+            queries = _thermometer(queries, bits)
+            codes = _thermometer(codes, bits)
+            bits = 1
+
+        if self.backend == "pallas":
+            from repro.kernels.cam_search import ops as cam_ops
+            mm = cam_ops.mismatch_counts(queries, codes, bits)
+        elif self.backend == "analog":
+            from repro.core.cam_array import SEEMCAMArray, SEEMCAMConfig
+            cfg = SEEMCAMConfig(bits=bits, n_cells=codes.shape[1],
+                                n_rows=codes.shape[0], variant="nor")
+            arr = SEEMCAMArray(cfg)
+            arr.program(codes, variation_key=self.variation_key)
+            res = [arr.search(q) for q in queries]
+            if self.distance == "l1":
+                # analog ranking: graded ML discharge current
+                mm = jnp.stack([r.ml_discharge_current for r in res])
+                mm = (mm / (1e-5)).astype(jnp.float32)  # normalise to ~counts
+            else:
+                mm = jnp.stack([r.mismatch_count for r in res])
+        else:
+            mm = _ref_mismatch_counts(queries, codes)
+
+        return AMSearchResult(
+            mismatch_counts=mm,
+            exact_match=mm == 0 if mm.dtype == jnp.int32 else mm < 0.5,
+            best_row=jnp.argmin(mm, axis=-1).astype(jnp.int32),
+        )
+
+
+def _thermometer(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """(..., D) levels in [0, 2^b) -> (..., D*(2^b-1)) binary thermometer."""
+    m = 1 << bits
+    rungs = jnp.arange(1, m)
+    out = (codes[..., None] >= rungs).astype(jnp.int32)
+    return out.reshape(*codes.shape[:-1], codes.shape[-1] * (m - 1))
+
+
+@jax.jit
+def _ref_mismatch_counts(queries: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """(Q, D) x (N, D) -> (Q, N) number of differing symbols."""
+    return jnp.sum(queries[:, None, :] != codes[None, :, :], axis=-1,
+                   dtype=jnp.int32)

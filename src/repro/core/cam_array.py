@@ -1,0 +1,186 @@
+"""Functional + analog-behavioural SEE-MCAM array models (paper Sec. III-B/C).
+
+Two array variants built on the 2FeFET MIBO cell (:mod:`repro.core.mibo`):
+
+* **NOR-type 2FeFET-1T** (Fig. 5): every cell's node D gates one NMOS hanging on
+  a precharged matchline.  ML stays HIGH iff *all* cells match; any mismatching
+  cell discharges it.  The analog discharge current is proportional to the
+  number of mismatching cells, which is what lets a CAM double as a
+  nearest-Hamming associative memory (Sec. IV-B).
+
+* **NAND-type 2FeFET-2T precharge-free** (Fig. 6): cells chain through
+  inverters, ``ML_i = ML_{i-1} * not(D_i)`` (Eq. 3).  The word matches iff the
+  final ML is HIGH.  Energy is event-driven: a node only consumes charge when
+  it *transitions* between consecutive searches — the functional simulator
+  counts these transitions so the analytical model in :mod:`repro.core.energy`
+  can be cross-checked against simulation.
+
+The arrays operate on integer symbols in [0, 2**bits); all search paths are
+jit-compatible and vectorised over query batches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fefet, mibo
+
+
+@dataclasses.dataclass(frozen=True)
+class SEEMCAMConfig:
+    """Array geometry + cell precision.
+
+    Attributes:
+      bits:     bits per cell (1..3 validated; ladder generalises further).
+      n_cells:  cells per word (row) — N in Eqs. (1)-(2).
+      n_rows:   number of stored words searched in parallel.
+      variant:  "nor" (2FeFET-1T) or "nand" (2FeFET-2T precharge-free).
+    """
+
+    bits: int = 3
+    n_cells: int = 32
+    n_rows: int = 64
+    variant: str = "nor"
+
+    def __post_init__(self):
+        if self.variant not in ("nor", "nand"):
+            raise ValueError(f"unknown variant {self.variant!r}")
+        if not 1 <= self.bits <= 6:
+            raise ValueError(f"bits out of supported range: {self.bits}")
+
+    @property
+    def levels(self) -> int:
+        return 1 << self.bits
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """Outcome of one parallel search over all rows."""
+
+    match: jnp.ndarray           # (rows,) bool — exact word match
+    mismatch_count: jnp.ndarray  # (rows,) int32 — #mismatching cells (Hamming)
+    ml_discharge_current: jnp.ndarray  # (rows,) float — analog ML current proxy
+    d_voltages: jnp.ndarray      # (rows, cells) float — node-D voltages
+
+
+class SEEMCAMArray:
+    """A programmed SEE-MCAM array; functional search + analog diagnostics."""
+
+    def __init__(self, config: SEEMCAMConfig, *,
+                 params: fefet.FeFETParams = fefet.DEFAULT):
+        self.config = config
+        self.params = params
+        self._codes: jnp.ndarray | None = None      # (rows, cells) int32
+        self._noise1: jnp.ndarray | None = None     # (rows, cells) V_TH noise F1
+        self._noise2: jnp.ndarray | None = None
+        # NAND event-driven state: previous per-cell chain node levels.
+        self._prev_ml_chain: jnp.ndarray | None = None
+        self.transition_count = 0                   # accumulated chain events
+
+    # -- write path ---------------------------------------------------------
+
+    def program(self, codes, *, variation_key: jax.Array | None = None) -> None:
+        """Write integer symbols (rows, cells); optionally draw V_TH variation.
+
+        Follows the row-write scheme of Sec. III-B: selected-word SL + column
+        WL pulses; unselected words see the write-inhibition scheme [20], [21]
+        (functionally: only the addressed rows change — modelled as full-array
+        reprogram here since we always write whole arrays).
+        """
+        codes = jnp.asarray(codes, jnp.int32)
+        if codes.ndim != 2 or codes.shape != (self.config.n_rows, self.config.n_cells):
+            raise ValueError(
+                f"codes shape {codes.shape} != "
+                f"({self.config.n_rows}, {self.config.n_cells})")
+        if int(jnp.max(codes)) >= self.config.levels or int(jnp.min(codes)) < 0:
+            raise ValueError("code symbol out of range for cell precision")
+        self._codes = codes
+        if variation_key is not None:
+            k1, k2 = jax.random.split(variation_key)
+            self._noise1 = fefet.sample_vth_variation(k1, codes.shape, self.params)
+            self._noise2 = fefet.sample_vth_variation(k2, codes.shape, self.params)
+        else:
+            self._noise1 = self._noise2 = None
+        self._prev_ml_chain = None
+        self.transition_count = 0
+
+    @property
+    def codes(self) -> jnp.ndarray:
+        if self._codes is None:
+            raise RuntimeError("array not programmed")
+        return self._codes
+
+    # -- search path --------------------------------------------------------
+
+    def search(self, query) -> SearchResult:
+        """One parallel associative search of ``query`` (cells,) over all rows."""
+        query = jnp.asarray(query, jnp.int32)
+        cfg = self.config
+        if query.shape != (cfg.n_cells,):
+            raise ValueError(f"query shape {query.shape} != ({cfg.n_cells},)")
+
+        codes = self.codes
+        d_v = mibo.mibo_d_voltage(codes, query[None, :], cfg.bits,
+                                  self._noise1, self._noise2, self.params)
+        i_cell = mibo.mibo_current(codes, query[None, :], cfg.bits,
+                                   self._noise1, self._noise2, self.params)
+        d_high = i_cell > mibo.I_D_THRESHOLD           # (rows, cells) mismatch
+        mismatch_count = jnp.sum(d_high, axis=-1).astype(jnp.int32)
+
+        if cfg.variant == "nor":
+            # Precharged ML discharges through every ON access NMOS: the
+            # discharge current ~ sum of conducting-cell currents.
+            match = mismatch_count == 0
+            i_ml = jnp.sum(jnp.where(d_high, i_cell, 0.0), axis=-1)
+        else:
+            # NAND chain: ml_i = ml_{i-1} & ~D_i  (Eq. 3) — prefix product.
+            chain = jnp.cumprod(jnp.logical_not(d_high), axis=-1)
+            match = chain[:, -1].astype(bool)
+            i_ml = jnp.where(match, 0.0, mibo.I_D_THRESHOLD)  # no static path
+            self._account_nand_transitions(chain)
+
+        return SearchResult(match=match, mismatch_count=mismatch_count,
+                            ml_discharge_current=i_ml, d_voltages=d_v)
+
+    def _account_nand_transitions(self, chain: jnp.ndarray) -> None:
+        """Count chain-node level changes between consecutive searches.
+
+        The precharge-free scheme (Sec. III-C) only spends energy when a chain
+        node transitions; consecutive same-state searches are free.
+        """
+        if self._prev_ml_chain is not None:
+            self.transition_count += int(
+                jnp.sum(chain != self._prev_ml_chain))
+        else:
+            # First search after program: every HIGH node had to be charged.
+            self.transition_count += int(jnp.sum(chain))
+        self._prev_ml_chain = chain
+
+    def search_batch(self, queries) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Vectorised search: returns (match (Q, rows) bool, mismatch (Q, rows))."""
+        queries = jnp.asarray(queries, jnp.int32)
+        return _search_batch(self.codes, queries, self.config.bits,
+                             self.config.variant == "nand")
+
+    def best_match(self, queries) -> jnp.ndarray:
+        """Associative-memory readout: row index with the fewest mismatching
+        cells per query (the analog ML-discharge-slope ranking of Sec. IV-B)."""
+        _, mm = self.search_batch(jnp.atleast_2d(jnp.asarray(queries, jnp.int32)))
+        return jnp.argmin(mm, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("bits", "nand"))
+def _search_batch(codes: jnp.ndarray, queries: jnp.ndarray, bits: int,
+                  nand: bool) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(Q, cells) queries vs (rows, cells) codes -> ((Q, rows) match, mismatch)."""
+    d_high = mibo.mibo_xor(codes[None], queries[:, None, :], bits)  # (Q,R,C)
+    mismatch = jnp.sum(d_high, axis=-1).astype(jnp.int32)
+    if nand:
+        match = jnp.cumprod(~d_high, axis=-1)[..., -1].astype(bool)
+    else:
+        match = mismatch == 0
+    return match, mismatch

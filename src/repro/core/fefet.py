@@ -1,0 +1,134 @@
+"""Behavioural FeFET device model with multi-level-cell (MLC) V_TH states.
+
+Models the HfO2 FeFET of the paper (45 nm Preisach-calibrated device, Fig. 1):
+
+* ``vth_levels(bits)``      — the 2**bits programmable threshold-voltage ladder
+                              (Fig. 1(c): >3-bit V_TH states).
+* ``write_pulse_to_vth``    — monotone write-pulse-amplitude -> V_TH mapping
+                              (Fig. 1(a): +/- gate pulses move polarization).
+* ``drain_current``         — smooth logistic I_D(V_G; V_TH) transfer curve
+                              (Fig. 1(b)) with a high I_ON/I_OFF ratio.
+* ``sample_vth_variation``  — Gaussian device-to-device V_TH variation with the
+                              experimentally measured sigma = 54 mV [37].
+
+All functions are pure jnp and vectorise over arbitrary leading axes, so a whole
+CAM array (rows x cells x 2 FeFETs) is evaluated in one call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Device constants (behavioural; calibrated against the paper's 45 nm device)
+# ---------------------------------------------------------------------------
+
+#: Saturated ON current of one FeFET (A). ~10 uA matches Fig. 1(b) scale.
+I_ON = 10e-6
+#: I_ON / I_OFF ratio; HfO2 FeFETs exhibit >1e6 (Sec. II-A).
+ON_OFF_RATIO = 1e6
+#: Sub-threshold slope factor (V) of the logistic transfer curve.  0.04 V gives
+#: ~90 mV/decade-ish turn-on, adequate for a behavioural margin model.
+SS_V = 0.040
+#: Above-threshold drive-current slope (1/V): I ~ I_ON * (1 + slope * (VG-VTH))
+#: for VG > VTH.  This linear overdrive term is what makes the analog ML
+#: discharge current of a mismatching word scale with the *level distance*
+#: (larger stored-vs-query gap -> larger gate overdrive -> more current), the
+#: property the paper's HDC associative-memory ranking exploits (Sec. IV-B).
+OVERDRIVE_SLOPE = 2.0
+#: Experimentally measured V_TH standard deviation (V) for low/high states [37].
+SIGMA_VTH = 0.054
+#: V_TH ladder range (V) for the MLC states.  Fig. 1(c) shows a ~3 V
+#: polarization window; 8 levels over 3.0 V -> 0.43 V spacing -> ~4 sigma
+#: worst-case sense margin at sigma(V_TH) = 54 mV, matching the paper's
+#: "sufficient robustness" Monte-Carlo result (Fig. 9).
+VTH_MIN = 0.20
+VTH_MAX = 3.20
+#: Write-pulse amplitude range (V) that sweeps V_TH across the full ladder.
+VPULSE_MIN = 2.0
+VPULSE_MAX = 4.0
+
+
+@dataclasses.dataclass(frozen=True)
+class FeFETParams:
+    """Bundle of behavioural FeFET constants (override for sensitivity studies)."""
+
+    i_on: float = I_ON
+    on_off_ratio: float = ON_OFF_RATIO
+    ss_v: float = SS_V
+    overdrive_slope: float = OVERDRIVE_SLOPE
+    sigma_vth: float = SIGMA_VTH
+    vth_min: float = VTH_MIN
+    vth_max: float = VTH_MAX
+
+    @property
+    def i_off(self) -> float:
+        return self.i_on / self.on_off_ratio
+
+
+DEFAULT = FeFETParams()
+
+
+def vth_levels(bits: int, params: FeFETParams = DEFAULT) -> jnp.ndarray:
+    """The 2**bits-entry programmable V_TH ladder (ascending, volts).
+
+    Evenly spaced levels across the polarization window, as in Fig. 1(c).
+    For bits=3 the spacing is 0.30 V, i.e. ~5.6 sigma between neighbours —
+    consistent with the paper's "sufficient robustness" claim.
+    """
+    if bits < 1:
+        raise ValueError(f"bits must be >= 1, got {bits}")
+    n = 1 << bits
+    return jnp.linspace(params.vth_min, params.vth_max, n)
+
+
+def write_pulse_to_vth(v_pulse: jnp.ndarray, params: FeFETParams = DEFAULT) -> jnp.ndarray:
+    """Map a positive write-pulse amplitude (V) to the programmed V_TH (V).
+
+    Monotone *decreasing*: a larger positive gate pulse switches more
+    polarization toward the channel -> lower V_TH (Fig. 1(a)).  Behavioural
+    linear map over the programming window, clipped at the ladder ends.
+    """
+    frac = (v_pulse - VPULSE_MIN) / (VPULSE_MAX - VPULSE_MIN)
+    frac = jnp.clip(frac, 0.0, 1.0)
+    return params.vth_max - frac * (params.vth_max - params.vth_min)
+
+
+def vth_to_write_pulse(vth: jnp.ndarray, params: FeFETParams = DEFAULT) -> jnp.ndarray:
+    """Inverse of :func:`write_pulse_to_vth` (used by the array write scheme)."""
+    frac = (params.vth_max - vth) / (params.vth_max - params.vth_min)
+    return VPULSE_MIN + jnp.clip(frac, 0.0, 1.0) * (VPULSE_MAX - VPULSE_MIN)
+
+
+def drain_current(v_g: jnp.ndarray, vth: jnp.ndarray,
+                  params: FeFETParams = DEFAULT) -> jnp.ndarray:
+    """Behavioural I_D(V_G; V_TH) transfer curve (A), Fig. 1(b)/(c).
+
+    Logistic switch between I_OFF and I_ON centred at V_TH.  Smooth (not a step)
+    so Monte-Carlo margin analysis sees realistic partial turn-on near V_TH.
+    """
+    x = (v_g - vth) / params.ss_v
+    # logistic in log-current space: smooth interpolation of log I
+    log_on = jnp.log(params.i_on)
+    log_off = jnp.log(params.i_off)
+    s = jax.nn.sigmoid(x)
+    i_switch = jnp.exp(log_off + (log_on - log_off) * s)
+    # linear drive-current growth with gate overdrive above V_TH
+    overdrive = jnp.maximum(v_g - vth, 0.0)
+    return i_switch * (1.0 + params.overdrive_slope * overdrive)
+
+
+def sample_vth_variation(key: jax.Array, shape: tuple[int, ...],
+                         params: FeFETParams = DEFAULT) -> jnp.ndarray:
+    """Gaussian V_TH perturbations (V) with the measured sigma = 54 mV [37]."""
+    return params.sigma_vth * jax.random.normal(key, shape)
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def program_levels(values: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """V_TH programmed for integer symbol ``values`` in [0, 2**bits)."""
+    return vth_levels(bits)[values]

@@ -1,0 +1,102 @@
+"""2FeFET Multi-bit-Input Binary-Output (MIBO) XOR structure (paper Sec. III-A).
+
+Two FeFETs F1/F2 in parallel form a push-pull pull-up from the sourceline SL to
+the output node D:
+
+* storing symbol v in [0, M), M = 2**bits:  F1 <- VTH[v],  F2 <- VTH[M-1-v]
+  (Fig. 4(a): '00' -> (VTH1, VTH4); '10' -> (VTH3, VTH2)).
+* searching symbol q:  gate(F1) <- VWL[q],  gate(F2) <- VWL[M-1-q]
+  (Fig. 4(b)-(d)), where VWL[k] sits in the gap below VTH[k]:
+      VTH[k-1] < VWL[k] < VTH[k].
+
+Consequences (the MIBO XOR truth table, Table I):
+  F1 conducts  <=>  v < q          F2 conducts  <=>  v > q
+  => both OFF  <=>  v == q  (node D stays low: MATCH)
+  => exactly ONE conducts on any mismatch (node D pulled high: MISMATCH).
+
+Everything vectorises over leading axes; `bits` is static.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fefet
+from repro.core.fefet import DEFAULT, FeFETParams
+
+#: Sourceline high level (V) during search (supply of the push-pull structure).
+V_SL = 0.80
+#: Current threshold (A) separating "node D charged" from "node D floating low".
+#: Geometric mean of I_ON and 2*I_OFF — maximal margin on both sides.
+I_D_THRESHOLD = (fefet.I_ON * 2 * fefet.I_ON / fefet.ON_OFF_RATIO) ** 0.5
+
+
+def wl_levels(bits: int, params: FeFETParams = DEFAULT) -> jnp.ndarray:
+    """Search wordline voltage ladder VWL[k], k in [0, 2**bits).
+
+    VWL[k] is the midpoint of (VTH[k-1], VTH[k]); VWL[0] sits half a rung below
+    VTH[0].  This realises `F conducts <=> VTH < VWL` exactly between rungs.
+    """
+    vth = fefet.vth_levels(bits, params)
+    step = (params.vth_max - params.vth_min) / max((1 << bits) - 1, 1)
+    below = jnp.concatenate([vth[:1] - step, vth[:-1]])
+    return 0.5 * (below + vth)
+
+
+def stored_vths(values: jnp.ndarray, bits: int,
+                params: FeFETParams = DEFAULT) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(V_TH of F1, V_TH of F2) encoding integer symbols ``values``."""
+    m = 1 << bits
+    ladder = fefet.vth_levels(bits, params)
+    return ladder[values], ladder[m - 1 - values]
+
+
+def search_gate_voltages(queries: jnp.ndarray, bits: int,
+                         params: FeFETParams = DEFAULT) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(gate V of F1, gate V of F2) for integer query symbols ``queries``."""
+    m = 1 << bits
+    ladder = wl_levels(bits, params)
+    return ladder[queries], ladder[m - 1 - queries]
+
+
+def mibo_current(values: jnp.ndarray, queries: jnp.ndarray, bits: int,
+                 vth_noise1: jnp.ndarray | None = None,
+                 vth_noise2: jnp.ndarray | None = None,
+                 params: FeFETParams = DEFAULT) -> jnp.ndarray:
+    """Total pull-up current (A) into node D for (stored, query) symbol pairs.
+
+    ``vth_noise1/2`` optionally perturb F1/F2 threshold voltages (device
+    variation, sigma = 54 mV) for Monte-Carlo robustness analysis (Fig. 9).
+    """
+    vth1, vth2 = stored_vths(values, bits, params)
+    if vth_noise1 is not None:
+        vth1 = vth1 + vth_noise1
+    if vth_noise2 is not None:
+        vth2 = vth2 + vth_noise2
+    g1, g2 = search_gate_voltages(queries, bits, params)
+    i1 = fefet.drain_current(g1, vth1, params)
+    i2 = fefet.drain_current(g2, vth2, params)
+    return i1 + i2
+
+
+def mibo_d_voltage(values: jnp.ndarray, queries: jnp.ndarray, bits: int,
+                   vth_noise1: jnp.ndarray | None = None,
+                   vth_noise2: jnp.ndarray | None = None,
+                   params: FeFETParams = DEFAULT) -> jnp.ndarray:
+    """Behavioural node-D voltage (V): smooth map of log-current around threshold.
+
+    V_D ~ V_SL on a mismatch (a FeFET conducts), ~0 on a match.  The smooth
+    transition makes sense-margin distributions meaningful under variation.
+    """
+    i_d = mibo_current(values, queries, bits, vth_noise1, vth_noise2, params)
+    x = jnp.log(i_d) - jnp.log(I_D_THRESHOLD)
+    return V_SL * jax.nn.sigmoid(2.0 * x)
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def mibo_xor(values: jnp.ndarray, queries: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Boolean MIBO XOR output: True = MISMATCH (D high), False = MATCH (D low)."""
+    return mibo_current(values, queries, bits) > I_D_THRESHOLD

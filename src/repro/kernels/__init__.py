@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the SEE-MCAM compute hot-spots.
+
+Each kernel package ships three modules: ``kernel`` (pl.pallas_call +
+BlockSpec VMEM tiling), ``ops`` (jitted public wrapper with padding/backend
+selection) and ``ref`` (pure-jnp oracle used by the allclose test sweeps).
+
+  cam_search  — multi-bit CAM associative search as one-hot Gram matmuls (MXU)
+  hdc_encode  — fused HDC random-projection encode + Z-score quantize
+  mibo_mc     — Monte-Carlo MIBO sense-margin device simulation (VPU)
+"""

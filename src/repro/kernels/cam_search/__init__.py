@@ -1,0 +1,3 @@
+from repro.kernels.cam_search import kernel, ops, ref
+
+__all__ = ["kernel", "ops", "ref"]

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: multi-bit CAM associative search as MXU Gram matmuls.
+
+TPU adaptation of the SEE-MCAM search (DESIGN.md §2).  The CAM computes, for a
+query word q and a stored word t, the number of *matching* multi-bit cells.
+Bit-serial/analog comparison does not map to a systolic array, but the one-hot
+reformulation does:
+
+    #matches(q, t) = sum_d sum_m 1[q_d = m] * 1[t_d = m]
+                   = sum_m  onehot_m(q) . onehot_m(t)
+
+i.e. M = 2**bits rank-D Gram products — dense (bq x bd) @ (bd x bn) matmuls
+that run on the **MXU** at bf16 throughput, instead of O(D) int compares per
+(q, t) pair on the VPU.  Mismatch count = D - #matches, which is exactly the
+analog ML-discharge ranking of the paper's array.
+
+Tiling: grid (Q/bq, N/bn, D/bd); the D axis is innermost so each (i, j) output
+block accumulates match counts in a VMEM f32 scratch across D steps.  Blocks
+default to (bq, bn, bd) = (128, 128, 512): VMEM = 2*(128*512) int8 inputs
++ 128*128 f32 acc + M bf16 one-hot temporaries ~= 0.7 MB << 16 MB v5e VMEM,
+and every matmul dimension is a multiple of the 128-lane MXU tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _cam_search_kernel(q_ref, t_ref, out_ref, acc_ref, *, levels: int,
+                       d_total: int, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]  # (bq, bd) int8 symbols
+    t = t_ref[...]  # (bn, bd) int8 symbols
+    acc = acc_ref[...]
+    for m in range(levels):
+        a = (q == m).astype(jnp.bfloat16)
+        b = (t == m).astype(jnp.bfloat16)
+        acc = acc + jax.lax.dot_general(
+            a, b, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    acc_ref[...] = acc
+
+    @pl.when(k == nk - 1)
+    def _finalize():
+        out_ref[...] = (jnp.float32(d_total) - acc_ref[...]).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("levels", "block_q", "block_n",
+                                             "block_d", "interpret"))
+def cam_search(queries: jnp.ndarray, table: jnp.ndarray, *, levels: int,
+               block_q: int = 128, block_n: int = 128, block_d: int = 512,
+               interpret: bool = False) -> jnp.ndarray:
+    """Mismatch-count matrix between ``queries`` (Q, D) and ``table`` (N, D).
+
+    Inputs are int8 symbols in [0, levels); Q, N, D must be multiples of the
+    block sizes (the ops wrapper pads).  Returns (Q, N) int32.
+    """
+    qn, d = queries.shape
+    tn, d2 = table.shape
+    assert d == d2, (d, d2)
+    assert qn % block_q == 0 and tn % block_n == 0 and d % block_d == 0, (
+        (qn, tn, d), (block_q, block_n, block_d))
+    nk = d // block_d
+
+    kernel = functools.partial(_cam_search_kernel, levels=levels, d_total=d,
+                               nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(qn // block_q, tn // block_n, nk),
+        in_specs=[
+            pl.BlockSpec((block_q, block_d), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_n, block_d), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qn, tn), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_q, block_n), jnp.float32)],
+        interpret=interpret,
+    )(queries, table)

@@ -1,0 +1,72 @@
+"""Jitted public wrapper around the CAM-search Pallas kernel.
+
+Handles padding to TPU-aligned block multiples, dtype normalisation, backend
+selection (interpret on CPU / compiled on TPU), and derived outputs
+(exact-match flags, best-row readout).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cam_search import kernel as _k
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int, value) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def mismatch_counts(queries: jnp.ndarray, table: jnp.ndarray, bits: int = 3,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """(Q, D) queries vs (N, D) stored codes -> (Q, N) int32 mismatch counts.
+
+    Symbols in [0, 2**bits).  Pads Q/N/D up to block multiples; padded D
+    positions hold the same sentinel on both sides (always match => no skew)
+    and padded rows/queries are sliced away.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    q = jnp.asarray(queries, jnp.int8)
+    t = jnp.asarray(table, jnp.int8)
+    qn, d = q.shape
+    tn = t.shape[0]
+
+    # Small problems keep small blocks (still MXU-aligned on the lane dim).
+    bq = 128 if qn > 64 else 8
+    bn = 128 if tn > 64 else 8
+    bd = 512 if d >= 512 else 128
+
+    qp = _pad_to(_pad_to(q, 0, bq, 0), 1, bd, 0)
+    tp = _pad_to(_pad_to(t, 0, bn, 0), 1, bd, 0)
+    out = _k.cam_search(qp, tp, levels=1 << bits, block_q=bq, block_n=bn,
+                        block_d=bd, interpret=interpret)
+    return out[:qn, :tn]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def exact_match(queries: jnp.ndarray, table: jnp.ndarray, bits: int = 3,
+                interpret: bool | None = None) -> jnp.ndarray:
+    """(Q, N) bool exact word-match flags (the digital CAM output)."""
+    return mismatch_counts(queries, table, bits, interpret) == 0
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def best_row(queries: jnp.ndarray, table: jnp.ndarray, bits: int = 3,
+             interpret: bool | None = None) -> jnp.ndarray:
+    """(Q,) int32 nearest-row readout (analog ML-discharge ranking)."""
+    return jnp.argmin(mismatch_counts(queries, table, bits, interpret),
+                      axis=-1).astype(jnp.int32)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the CAM-search kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def mismatch_counts(queries: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """(Q, D) x (N, D) int symbols -> (Q, N) int32 #differing positions."""
+    return jnp.sum(queries[:, None, :] != table[None, :, :], axis=-1,
+                   dtype=jnp.int32)

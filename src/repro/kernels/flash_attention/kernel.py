@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: causal GQA flash attention (online-softmax tiling).
+
+The §Roofline tables show every train/prefill cell's memory term dominated by
+materialized (S x S) f32 score tensors (~8 HBM round-trips each between
+forward, backward-recompute and gradients).  This kernel keeps score blocks
+in VMEM: grid (B*H, Sq/blk_q, Skv/blk_k) with the KV axis innermost; each
+(q-block, kv-block) step rescales a running (max, denominator, accumulator)
+triple held in VMEM scratch — scores never touch HBM.
+
+GQA without materializing repeated KV: K/V stay at (B*HK, T, dh) and the
+BlockSpec index map folds the q-head -> kv-head group mapping (bh // group),
+so each KV block is DMA'd once per group from its true storage.
+
+Block defaults (128, 128) x dh<=256: VMEM = q 64KB + k/v 128KB + acc 128KB
+f32 + scores 64KB ~= 0.4 MB << 16 MB v5e VMEM; every matmul is 128-aligned
+for the MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, blk_q: int, blk_k: int, nk: int,
+                  causal: bool):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qi = pl.program_id(1)
+    q = q_ref[0]                            # (blk_q, dh)
+    k = k_ref[0]                            # (blk_k, dh)
+    v = v_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        q_pos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (blk_q, blk_k), 0)
+        k_pos = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (blk_q, blk_k), 1)
+        mask = q_pos >= k_pos
+        s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                     # (blk_q, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    # fully-masked rows keep m == NEG_INF; guard exp against (-inf) - (-inf)
+    p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "causal", "blk_q",
+                                             "blk_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    group: int, causal: bool = True, blk_q: int = 128,
+                    blk_k: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """q: (BH, Sq, dh); k/v: (BH//group, Skv, dh) -> (BH, Sq, dh).
+
+    ``group`` = q heads per KV head (GQA); Sq % blk_q == Skv % blk_k == 0.
+    """
+    bh, sq, dh = q.shape
+    bhk, skv, _ = k.shape
+    assert bh == bhk * group, (bh, bhk, group)
+    assert sq % blk_q == 0 and skv % blk_k == 0, (sq, skv)
+    nk = skv // blk_k
+
+    kernel = functools.partial(_flash_kernel, scale=dh ** -0.5, blk_q=blk_q,
+                               blk_k=blk_k, nk=nk, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, sq // blk_q, nk),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, blk_k, dh), lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, blk_k, dh), lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, dh), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              group: int, causal: bool = True) -> jnp.ndarray:
+    """q: (BH, Sq, dh); k/v: (BH//group, Skv, dh) -> (BH, Sq, dh)."""
+    bh, sq, dh = q.shape
+    k = jnp.repeat(k, group, axis=0)
+    v = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q, k,
+                   preferred_element_type=jnp.float32) * (dh ** -0.5)
+    if causal:
+        skv = k.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p.astype(v.dtype), v).astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.hdc_encode import kernel, ops, ref
+
+__all__ = ["kernel", "ops", "ref"]

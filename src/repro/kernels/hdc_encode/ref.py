@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused HDC encode+quantize kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def encode_quantize(x: jnp.ndarray, proj: jnp.ndarray,
+                    thresholds: jnp.ndarray) -> jnp.ndarray:
+    """H = x @ proj; code = #{t: H > t * ||x||_row} — analytic Z-score bins."""
+    h = jnp.dot(x, proj, preferred_element_type=jnp.float32)
+    norm = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True) + 1e-12)
+    return jnp.sum(h[..., None] > thresholds * norm[..., None], axis=-1,
+                   dtype=jnp.int32)

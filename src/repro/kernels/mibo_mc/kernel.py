@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: Monte-Carlo MIBO sense-margin simulation (Fig. 9 at scale).
+
+Robustness analysis sweeps thousands of V_TH-variation samples of a CAM word
+and evaluates the matchline discharge current each time.  Per sample s and
+cell c the behavioural device model gives
+
+    I(s, c) = I(VWL1_c; VTH1_sc) + I(VWL2_c; VTH2_sc)     (2FeFET push-pull)
+    I_ML(s) = sum_c I(s, c) * 1[cell c mismatches]
+
+with the logistic log-current transfer of :mod:`repro.core.fefet`.  This is a
+pure VPU (transcendental-heavy) workload; the kernel tiles the sample axis so
+each block's (bs, C) device evaluations stay VMEM-resident, and reduces over
+cells in-register to emit one current per sample.
+
+Device constants arrive as static floats, gate voltages as (1, C) rows
+broadcast against the (bs, C) V_TH blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mibo_mc_kernel(vth1_ref, vth2_ref, g1_ref, g2_ref, out_ref, *,
+                    log_on: float, log_off: float, ss_v: float,
+                    overdrive: float, i_thresh: float):
+    vth1 = vth1_ref[...]              # (bs, C)
+    vth2 = vth2_ref[...]
+    g1 = g1_ref[...]                  # (1, C)
+    g2 = g2_ref[...]
+
+    def current(v_g, vth):
+        s = jax.nn.sigmoid((v_g - vth) / ss_v)
+        i = jnp.exp(log_off + (log_on - log_off) * s)
+        return i * (1.0 + overdrive * jnp.maximum(v_g - vth, 0.0))
+
+    i_cell = current(g1, vth1) + current(g2, vth2)          # (bs, C)
+    mismatch = i_cell > i_thresh
+    i_ml = jnp.sum(jnp.where(mismatch, i_cell, 0.0), axis=1, keepdims=True)
+    out_ref[...] = i_ml
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def mibo_mc(vth1: jnp.ndarray, vth2: jnp.ndarray, g1: jnp.ndarray,
+            g2: jnp.ndarray, *, block_s: int = 256,
+            interpret: bool = False) -> jnp.ndarray:
+    """(S, C) noised V_TH pairs + (1, C) gate voltages -> (S, 1) ML currents."""
+    s, c = vth1.shape
+    assert vth2.shape == (s, c) and g1.shape == (1, c) and g2.shape == (1, c)
+    assert s % block_s == 0, (s, block_s)
+
+    from repro.core import fefet, mibo
+    kernel = functools.partial(
+        _mibo_mc_kernel,
+        log_on=math.log(fefet.I_ON),
+        log_off=math.log(fefet.I_ON / fefet.ON_OFF_RATIO),
+        ss_v=fefet.SS_V,
+        overdrive=fefet.OVERDRIVE_SLOPE,
+        i_thresh=mibo.I_D_THRESHOLD,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(s // block_s,),
+        in_specs=[
+            pl.BlockSpec((block_s, c), lambda i: (i, 0)),
+            pl.BlockSpec((block_s, c), lambda i: (i, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_s, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, 1), jnp.float32),
+        interpret=interpret,
+    )(vth1, vth2, g1, g2)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the Monte-Carlo MIBO margin kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fefet, mibo
+
+
+def ml_currents(vth1: jnp.ndarray, vth2: jnp.ndarray, g1: jnp.ndarray,
+                g2: jnp.ndarray) -> jnp.ndarray:
+    """(S, C) noised V_TH + (1, C) gates -> (S, 1) matchline currents."""
+    i_cell = (fefet.drain_current(g1, vth1) + fefet.drain_current(g2, vth2))
+    mismatch = i_cell > mibo.I_D_THRESHOLD
+    return jnp.sum(jnp.where(mismatch, i_cell, 0.0), axis=1, keepdims=True)

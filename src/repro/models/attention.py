@@ -1,0 +1,277 @@
+"""Attention: GQA/MQA/MHA with two distribution layouts + local (windowed) form.
+
+All code is written against *logical* global shapes; distribution is expressed
+purely through GSPMD sharding constraints (DESIGN.md §3):
+
+  layout "tp": KV heads are repeated up to the TP width and the head axis is
+      sharded over `model` (Megatron).  The grouped-GQA einsum keeps q heads
+      grouped under their KV head so repeated KV is the only duplication.
+  layout "cp": heads stay unsharded; the query seq axis is sharded over
+      `model` and K/V are constrained replicated (GSPMD inserts the KV
+      all-gather) — context parallelism, the right trade for MQA/few-KV-head
+      archs.  Decode shards the KV cache seq axis instead and lets GSPMD
+      distribute the softmax reduction (softmax-merge flash decode).
+
+Attention math accumulates in f32; masks use additive -inf convention.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelCfg
+from repro.dist.specs import Rules, constrain
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+def init(key: jax.Array, cfg: ModelCfg, dtype=jnp.bfloat16) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    wk = layers.dense_init(kk, d, hk * dh, dtype)
+    wv = layers.dense_init(kv, d, hk * dh, dtype)
+    pre = cfg.parallel.kv_replicate
+    if pre > 1:
+        # weight-space KV replication: duplicate each KV head's columns so
+        # the stored head axis already divides the TP width (§Perf opt A).
+        tile = lambda w: jnp.repeat(w.reshape(d, hk, dh), pre,
+                                    axis=1).reshape(d, hk * pre * dh)
+        wk, wv = tile(wk), tile(wv)
+    return {
+        "wq": layers.dense_init(kq, d, h * dh, dtype),
+        "wk": wk,
+        "wv": wv,
+        "wo": layers.dense_init(ko, h * dh, d, dtype),
+    }
+
+
+def specs(rules: Rules) -> dict:
+    return {"wq": rules.w2(), "wk": rules.w2(), "wv": rules.w2(),
+            "wo": rules.w2_row()}
+
+
+def _kv_rep(cfg: ModelCfg, tp_size: int) -> int:
+    """Total KV replication so the stored/sharded head count divides TP."""
+    if cfg.parallel.layout != "tp":
+        return max(1, cfg.parallel.kv_replicate)
+    rep = max(1, cfg.parallel.kv_replicate)
+    while (cfg.n_kv_heads * rep) % tp_size and (cfg.n_kv_heads * rep) < cfg.n_heads:
+        rep *= 2
+    return rep
+
+
+def _project_qkv(params, x, cfg: ModelCfg, rules: Rules, tp_size: int,
+                 positions):
+    """x (B,S,D) -> q (B,S,H,dh), k/v (B,S,HK*rep,dh), rope applied."""
+    b, s, _ = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pre = max(1, cfg.parallel.kv_replicate)
+    hk_stored = hk * pre
+    q = (x @ params["wq"]).reshape(b, s, h, dh)
+    k = (x @ params["wk"]).reshape(b, s, hk_stored, dh)
+    v = (x @ params["wv"]).reshape(b, s, hk_stored, dh)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    rep = _kv_rep(cfg, tp_size) // pre
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    if cfg.parallel.layout == "tp":
+        q = constrain(q, rules.act_heads())
+        k = constrain(k, rules.act_heads())
+        v = constrain(v, rules.act_heads())
+    else:
+        q = constrain(q, rules.act_seq_heads())
+        # context parallel: K/V replicated across the seq (model) axis —
+        # GSPMD materialises this as the per-layer KV all-gather.
+        k = constrain(k, P(rules.dp, None, None, None))
+        v = constrain(v, P(rules.dp, None, None, None))
+    return q, k, v
+
+
+def _gqa_scores(q, k, cfg: ModelCfg):
+    """Grouped-GQA scores: (B,S,H,dh) x (B,T,HK,dh) -> (B,HK,G,S,T) f32."""
+    b, s, h, dh = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    qg = q.reshape(b, s, hk, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32)
+    return scores * (dh ** -0.5)
+
+
+def _apply_probs(probs, v):
+    """(B,HK,G,S,T) f32 x (B,T,HK,dh) -> (B,S,H,dh)."""
+    b, hk, g, s, t = probs.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(b, s, hk * g, -1)
+
+
+def _softmax_lp(scores: jnp.ndarray) -> jnp.ndarray:
+    """Low-precision softmax: big tensors in bf16, reductions in f32.
+
+    §Perf opt B: the (B,HK,G,S,T) score/prob tensors dominate HBM traffic in
+    non-flash attention; storing them bf16 halves that term.  The max and the
+    denominator are (.., S, 1)-shaped — kept f32 at negligible cost.
+    """
+    s16 = scores.astype(jnp.bfloat16)   # fuses into the score-dot epilogue
+    m = jnp.max(s16, axis=-1, keepdims=True)
+    e = jnp.exp(s16 - m)                                 # bf16, values <= 1
+    denom = jnp.sum(e, axis=-1, keepdims=True, dtype=jnp.float32)
+    return e / denom.astype(jnp.bfloat16)
+
+
+def full_attention(params, x, cfg: ModelCfg, rules: Rules, tp_size: int,
+                   positions) -> jnp.ndarray:
+    """Causal full self-attention over (B, S, D) — training / prefill."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg, rules, tp_size, positions)
+    if cfg.parallel.attn_impl == "flash":
+        from repro.kernels.flash_attention import ops as fl_ops
+        out = fl_ops.flash_attention_bshd(q, k, v, causal=True)
+        out = out.reshape(b, s, -1)
+        return constrain(out @ params["wo"], rules.act_resid())
+    scores = _gqa_scores(q, k, cfg)                      # (B,HK,G,S,T)
+    causal = positions[:, None, None, :, None] >= positions[:, None, None, None, :]
+    scores = jnp.where(causal, scores, NEG_INF)
+    if cfg.parallel.layout == "cp":
+        scores = constrain(scores, P(rules.dp, None, None, rules.tp, None))
+    if cfg.parallel.attn_bf16_scores:
+        probs = _softmax_lp(scores)
+    else:
+        probs = jax.nn.softmax(scores, axis=-1)
+    out = _apply_probs(probs, v)
+    out = out.reshape(b, s, -1)
+    return constrain(out @ params["wo"], rules.act_resid())
+
+
+def local_attention(params, x, cfg: ModelCfg, rules: Rules, tp_size: int,
+                    positions) -> jnp.ndarray:
+    """Sliding-window attention (window W), chunked so cost is O(S * W).
+
+    Queries in chunk c attend to keys in chunks {c-1, c} with an exact
+    banded mask — never materialising an (S, S) score matrix, which is what
+    makes the long_500k shapes feasible for the hybrid archs.
+    """
+    b, s, _ = x.shape
+    w = cfg.local_window
+    q, k, v = _project_qkv(params, x, cfg, rules, tp_size, positions)
+    if s <= w:
+        return _local_fallback(params, q, k, v, positions, cfg, rules)
+    assert s % w == 0, (s, w)
+    c = s // w
+    h, dh = cfg.n_heads, cfg.head_dim
+    hk = k.shape[2]
+    g = h // hk
+
+    qc = q.reshape(b, c, w, hk, g, dh)
+    kc = k.reshape(b, c, w, hk, dh)
+    vc = v.reshape(b, c, w, hk, dh)
+    # keys for chunk c = [chunk c-1 ; chunk c]  (length 2W window coverage)
+    k_prev = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_prev, kc], axis=2)           # (B,C,2W,HK,dh)
+    v2 = jnp.concatenate([v_prev, vc], axis=2)
+
+    pos_q = positions.reshape(b, c, w)
+    pos_k = jnp.concatenate(
+        [jnp.concatenate([jnp.full((b, 1, w), -1, positions.dtype),
+                          pos_q[:, :-1]], axis=1), pos_q], axis=2)
+
+    scores = jnp.einsum("bcskgd,bctkd->bckgst", qc, k2,
+                        preferred_element_type=jnp.float32) * (dh ** -0.5)
+    valid = (pos_q[:, :, None, None, :, None] >= pos_k[:, :, None, None, None, :]) \
+        & (pos_q[:, :, None, None, :, None] - pos_k[:, :, None, None, None, :] < w) \
+        & (pos_k[:, :, None, None, None, :] >= 0)
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bckgst,bctkd->bcskgd", probs.astype(v2.dtype), v2)
+    out = out.reshape(b, s, h * dh)
+    return constrain(out @ params["wo"], rules.act_resid())
+
+
+def _local_fallback(params, q, k, v, positions, cfg, rules):
+    """Short-sequence path: banded mask over the full (small) score matrix."""
+    b, s = q.shape[:2]
+    scores = _gqa_scores(q, k, cfg)
+    dpos = positions[:, None, None, :, None] - positions[:, None, None, None, :]
+    valid = (dpos >= 0) & (dpos < cfg.local_window)
+    probs = jax.nn.softmax(jnp.where(valid, scores, NEG_INF), axis=-1)
+    out = _apply_probs(probs, v).reshape(b, s, -1)
+    return constrain(out @ params["wo"], rules.act_resid())
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+def cache_shape(cfg: ModelCfg, batch: int, max_len: int, tp_size: int,
+                local: bool = False) -> tuple[tuple, tuple]:
+    """(k_cache, v_cache) shapes for one layer."""
+    hk = cfg.n_kv_heads * _kv_rep(cfg, tp_size)
+    t = min(max_len, cfg.local_window) if local else max_len
+    shp = (batch, t, hk, cfg.head_dim)
+    return shp, shp
+
+
+def decode_attention(params, x, cache_kv, pos, cfg: ModelCfg, rules: Rules,
+                     tp_size: int, local: bool = False,
+                     active=None):
+    """One decode step.  x: (B, 1, D); cache_kv: (k, v) each (B, T, HK, dh);
+    pos: scalar OR per-slot (B,) int32 positions (continuous batching).
+    ``active``: optional (B,) bool — inactive slots neither write the cache
+    nor advance (their scatter index is routed out of range and dropped).
+    Returns (out (B,1,D), new cache).
+
+    Local layers treat the cache as a ring buffer of window length.
+    """
+    b = x.shape[0]
+    k_cache, v_cache = cache_kv
+    t = k_cache.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = pos[:, None]
+    q, k_new, v_new = _project_qkv(params, x, cfg, rules, tp_size, positions)
+
+    # per-slot ring slot; for full caches pos < T so this is just pos.
+    slot = pos % t
+    if active is not None:
+        slot = jnp.where(active, slot, t)      # out of range -> dropped
+    bi = jnp.arange(b)
+    k_cache = k_cache.at[bi, slot].set(
+        k_new[:, 0].astype(k_cache.dtype), mode="drop")
+    v_cache = v_cache.at[bi, slot].set(
+        v_new[:, 0].astype(v_cache.dtype), mode="drop")
+    k_cache = constrain(k_cache, _cache_spec(rules))
+    v_cache = constrain(v_cache, _cache_spec(rules))
+
+    scores = _gqa_scores(q, k_cache, cfg)                # (B,HK,G,1,T)
+    kv_idx = jnp.arange(t)
+    if local:
+        rp = _ring_positions(kv_idx, pos, t)   # (B,T) stored global pos
+        # rp < 0 marks ring slots never written yet (prefix not full)
+        valid = (rp >= 0) & (pos[:, None] - rp < cfg.local_window)
+    else:
+        valid = kv_idx[None, :] <= pos[:, None]
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    # softmax over the (possibly model-sharded) cache axis: GSPMD distributes
+    # the max/sum reductions — the softmax-merge decode of DESIGN.md §3.
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _apply_probs(probs, v_cache).reshape(b, 1, -1)
+    out = out @ params["wo"]
+    return out, (k_cache, v_cache)
+
+
+def _ring_positions(kv_idx, pos, t):
+    """(B,T) global position stored in ring slot i at current positions."""
+    cur_slot = (pos % t)[:, None]
+    offset = kv_idx[None, :] - cur_slot
+    return pos[:, None] + jnp.where(offset > 0, offset - t, offset)
+
+
+def _cache_spec(rules: Rules) -> P:
+    if rules.layout == "tp":
+        return P(rules.dp, None, rules.tp, None)
+    return P(rules.dp, rules.tp, None, None)

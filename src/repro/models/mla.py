@@ -1,0 +1,150 @@
+"""Multi-head Latent Attention (DeepSeek-V2) — train and absorbed-decode paths.
+
+Geometry (deepseek-v2-lite): kv_lora_rank=512, rope_head_dim=64,
+nope_head_dim=128, v_head_dim=128, H=16 query heads.
+
+Train/prefill: the compressed KV latent c_kv (B,S,512) is up-projected to
+per-head K_nope/V and attention runs in the usual head space (heads sharded
+over `model`: 16 heads / 16-way TP).
+
+Decode: the *absorbed* formulation — W_uk is folded into the query and W_uv
+into the output so the cache stays in latent space:
+    score_t = q_nope^T W_uk c_t + q_rope^T k_rope_t
+    out     = (sum_t p_t c_t)^T W_uv
+Cache per layer: (c_kv (B,T,512), k_rope (B,T,64)) — 9x smaller than the
+equivalent GQA cache, which is MLA's entire point.  The cache seq axis is
+sharded over `model` (context parallel); GSPMD distributes the softmax.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelCfg
+from repro.dist.specs import Rules, constrain
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+def init(key: jax.Array, cfg: ModelCfg, dtype=jnp.bfloat16) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": layers.dense_init(ks[0], d, h * (m.nope_head_dim + m.rope_head_dim), dtype),
+        "w_dkv": layers.dense_init(ks[1], d, m.kv_lora_rank + m.rope_head_dim, dtype),
+        "w_uk": layers.dense_init(ks[2], m.kv_lora_rank, h * m.nope_head_dim, dtype),
+        "w_uv": layers.dense_init(ks[3], m.kv_lora_rank, h * m.v_head_dim, dtype),
+        "wo": layers.dense_init(ks[4], h * m.v_head_dim, d, dtype),
+    }
+
+
+def specs(rules: Rules) -> dict:
+    return {
+        "wq": rules.w2(),
+        # latent down-projection: tiny out dim (rank+rope) stays unsharded
+        "w_dkv": P(rules.fsdp, None),
+        "w_uk": rules.w2(),
+        "w_uv": rules.w2(),
+        "wo": rules.w2_row(),
+    }
+
+
+def _project_q(params, x, cfg: ModelCfg, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q = (x @ params["wq"]).reshape(b, s, h, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(params, x, cfg: ModelCfg, positions):
+    m = cfg.mla
+    kv = x @ params["w_dkv"]                              # (B,S,rank+rope)
+    c_kv, k_rope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    k_rope = layers.apply_rope(k_rope[:, :, None, :], positions,
+                               cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def full_attention(params, x, cfg: ModelCfg, rules: Rules, tp_size: int,
+                   positions) -> jnp.ndarray:
+    """Training / prefill MLA with materialised per-head K/V."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _project_q(params, x, cfg, positions)
+    c_kv, k_rope = _project_kv_latent(params, x, cfg, positions)
+    k_nope = (c_kv @ params["w_uk"]).reshape(b, s, h, m.nope_head_dim)
+    v = (c_kv @ params["w_uv"]).reshape(b, s, h, m.v_head_dim)
+
+    q_nope = constrain(q_nope, rules.act_heads())
+    k_nope = constrain(k_nope, rules.act_heads())
+    v = constrain(v, rules.act_heads())
+
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    scores = (jnp.einsum("bshd,bthd->bhst", q_nope, k_nope,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshd,btd->bhst", q_rope, k_rope,
+                           preferred_element_type=jnp.float32)) * scale
+    causal = positions[:, None, :, None] >= positions[:, None, None, :]
+    probs = jax.nn.softmax(jnp.where(causal, scores, NEG_INF), axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs.astype(v.dtype), v)
+    out = out.reshape(b, s, h * m.v_head_dim) @ params["wo"]
+    return constrain(out, rules.act_resid())
+
+
+# ---------------------------------------------------------------------------
+# Absorbed decode
+# ---------------------------------------------------------------------------
+
+def cache_shape(cfg: ModelCfg, batch: int, max_len: int) -> tuple[tuple, tuple]:
+    m = cfg.mla
+    return (batch, max_len, m.kv_lora_rank), (batch, max_len, m.rope_head_dim)
+
+
+def decode_attention(params, x, cache, pos, cfg: ModelCfg, rules: Rules,
+                     tp_size: int, active=None):
+    """Absorbed-matmul decode step.  cache = (c_kv, k_rope);
+    pos: scalar or per-slot (B,) positions (continuous batching)."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = pos[:, None]
+    q_nope, q_rope = _project_q(params, x, cfg, positions)   # (B,1,H,*)
+    c_new, kr_new = _project_kv_latent(params, x, cfg, positions)
+
+    c_cache, kr_cache = cache
+    t_max = c_cache.shape[1]
+    slot = pos if active is None else jnp.where(active, pos, t_max)
+    bi = jnp.arange(b)
+    c_cache = c_cache.at[bi, slot].set(
+        c_new[:, 0].astype(c_cache.dtype), mode="drop")
+    kr_cache = kr_cache.at[bi, slot].set(
+        kr_new[:, 0].astype(kr_cache.dtype), mode="drop")
+    c_cache = constrain(c_cache, P(rules.dp, rules.tp, None))
+    kr_cache = constrain(kr_cache, P(rules.dp, rules.tp, None))
+
+    # absorb W_uk into the query: q_lat (B,1,H,rank)
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, h, m.nope_head_dim)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    scores = (jnp.einsum("bshr,btr->bhst", q_lat, c_cache,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshd,btd->bhst", q_rope, kr_cache,
+                           preferred_element_type=jnp.float32)) * scale
+    t = c_cache.shape[1]
+    valid = jnp.arange(t)[None, :] <= pos[:, None]
+    probs = jax.nn.softmax(
+        jnp.where(valid[:, None, None, :], scores, NEG_INF), axis=-1)
+    out_lat = jnp.einsum("bhst,btr->bshr", probs.astype(c_cache.dtype), c_cache)
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bshr,rhd->bshd", out_lat, w_uv)
+    out = out.reshape(b, 1, h * m.v_head_dim) @ params["wo"]
+    return out, (c_cache, kr_cache)

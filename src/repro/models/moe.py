@@ -1,0 +1,250 @@
+"""Mixture-of-Experts with expert parallelism over the `model` mesh axis.
+
+Two execution paths:
+
+* ``moe_dense`` — reference: every token through every expert, gate-weighted
+  (O(E) flops; used as the correctness oracle and for tiny smoke configs).
+
+* ``moe_ep`` — production: a ``shard_map`` region over the full mesh.
+  Per device: top-k routing -> capacity-bucketed **all_to_all dispatch** over
+  the EP (`model`) axis -> per-shard **ragged_dot grouped GEMM** (MegaBlocks
+  on TPU: tokens sorted by local expert id, group_sizes drive the MXU) ->
+  all_to_all return -> gate-weighted combine.  Over-capacity tokens are
+  dropped (capacity_factor config), the standard TPU MoE contract.
+
+Shared experts (DeepSeek) run as a dense TP branch outside the shard_map.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelCfg
+from repro.dist.specs import Rules, constrain
+from repro.models import layers
+
+
+def init(key: jax.Array, cfg: ModelCfg, dtype=jnp.bfloat16) -> dict:
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff_expert, m.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": layers.dense_init(ks[0], d, e, jnp.float32),
+        # fused gate+up: (E, D, 2F); down: (E, F, D)
+        "w1": (jax.random.normal(ks[1], (e, d, 2 * f), jnp.float32)
+               * (1 / d) ** 0.5).astype(dtype),
+        "w2": (jax.random.normal(ks[2], (e, f, d), jnp.float32)
+               * (1 / f) ** 0.5).astype(dtype),
+    }
+    if m.n_shared:
+        p["shared"] = layers.mlp_init(ks[3], d, m.n_shared * f, dtype)
+    return p
+
+
+def specs(cfg: ModelCfg, rules: Rules, for_opt: bool = False) -> dict:
+    """Expert-weight sharding.
+
+    Default: experts on `model` + D on `data` (FSDP) -> a per-layer expert
+    all-gather at use.  With ``moe_zero1`` (§Perf opt C) the *weights* live
+    sharded on `model` only (no per-layer gather); the optimizer state
+    (``for_opt=True``) keeps the extra `data` sharding, so the data-axis
+    gather happens ONCE per step at the optimizer boundary instead of once
+    per layer per pass.
+    """
+    if cfg.parallel.moe_zero1 and not for_opt:
+        s = {
+            "router": P(None, None),
+            "w1": P(rules.tp, None, None),
+            "w2": P(rules.tp, None, None),
+        }
+    else:
+        s = {
+            "router": P(None, None),
+            "w1": P(rules.tp, rules.fsdp, None),   # experts on model, D fsdp
+            "w2": P(rules.tp, None, rules.fsdp),
+        }
+    if cfg.moe.n_shared:
+        s["shared"] = layers.mlp_specs(rules)
+    return s
+
+
+def _route(router_w, x_flat, top_k: int):
+    """(T, D) -> top-k (gates (T,k) f32 normalised, experts (T,k) int32)."""
+    logits = x_flat.astype(jnp.float32) @ router_w           # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, top_k)
+    gates = gates / (jnp.sum(gates, axis=-1, keepdims=True) + 1e-9)
+    return gates, experts.astype(jnp.int32), probs
+
+
+def load_balance_loss(probs: jnp.ndarray, experts: jnp.ndarray,
+                      n_experts: int) -> jnp.ndarray:
+    """Switch-style auxiliary loss: E * sum_e f_e * P_e."""
+    f = jnp.mean(jax.nn.one_hot(experts[..., 0], n_experts, dtype=jnp.float32),
+                 axis=0)
+    p = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(f * p)
+
+
+# ---------------------------------------------------------------------------
+# Dense oracle
+# ---------------------------------------------------------------------------
+
+def moe_dense(params, x, cfg: ModelCfg):
+    """(B,S,D) -> (B,S,D): every expert computes every token (oracle)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    gates, experts, probs = _route(params["router"], xf, m.top_k)
+    h = jnp.einsum("td,edf->tef", xf, params["w1"])
+    gate_h, up_h = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate_h) * up_h
+    y_all = jnp.einsum("tef,efd->ted", h, params["w2"])      # (T, E, D)
+    sel = jax.nn.one_hot(experts, m.n_experts, dtype=y_all.dtype)  # (T,k,E)
+    w = jnp.einsum("tke,tk->te", sel, gates.astype(y_all.dtype))
+    out = jnp.einsum("ted,te->td", y_all, w)
+    out = out.reshape(b, s, d)
+    if m.n_shared:
+        out = out + layers.mlp(params["shared"], x)
+    return out, load_balance_loss(probs, experts, m.n_experts)
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel path
+# ---------------------------------------------------------------------------
+
+def _expert_ffn_local(w1, w2, tokens, group_sizes):
+    """Grouped GEMM over the local expert shard via ragged_dot.
+
+    tokens (N, D) sorted by local expert id; group_sizes (E_local,)."""
+    h = jax.lax.ragged_dot(tokens, w1, group_sizes)          # (N, 2F)
+    gate_h, up_h = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate_h) * up_h
+    return jax.lax.ragged_dot(h, w2, group_sizes)            # (N, D)
+
+
+def _moe_ep_local(x_loc, router_w, w1_loc, w2_loc, *, cfg: ModelCfg,
+                  ep_axis: str, ep_size: int):
+    """Per-device body of the shard_map EP MoE.
+
+    x_loc: (T_loc, D) local tokens; w1_loc/w2_loc: (E_local, ...) local
+    experts.  Returns (T_loc, D) combined expert outputs + aux loss scalar.
+    """
+    m = cfg.moe
+    t_loc, d = x_loc.shape
+    e_local = m.n_experts // ep_size
+    k = m.top_k
+
+    gates, experts, probs = _route(router_w, x_loc, k)       # (T,k)
+    aux = load_balance_loss(probs, experts, m.n_experts)
+
+    # ---- flatten assignments and bucket by destination EP shard ----------
+    flat_exp = experts.reshape(-1)                           # (T*k,)
+    flat_gate = gates.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t_loc), k)              # source token id
+    dest = flat_exp // e_local                               # EP shard id
+
+    cap = int(max(8, -(-t_loc * k * m.capacity_factor // ep_size)))
+    order = jnp.argsort(dest, stable=True)
+    sdest = dest[order]
+    # rank within destination bucket
+    starts = jnp.searchsorted(sdest, jnp.arange(ep_size), side="left")
+    rank = jnp.arange(t_loc * k) - starts[sdest]
+    keep = rank < cap                                        # overflow dropped
+
+    # one extra garbage slot per destination absorbs dropped tokens, so valid
+    # slots never collide with masked writes (scatter order is undefined).
+    send_x = jnp.zeros((ep_size, cap + 1, d), x_loc.dtype)
+    send_eid = jnp.zeros((ep_size, cap + 1), jnp.int32)
+    send_src = jnp.zeros((ep_size, cap + 1), jnp.int32)
+    send_gate = jnp.zeros((ep_size, cap + 1), jnp.float32)
+    send_valid = jnp.zeros((ep_size, cap + 1), jnp.bool_)
+
+    rr = jnp.minimum(rank, cap)
+    src_tok = flat_tok[order]
+    send_x = send_x.at[sdest, rr].set(x_loc[src_tok])
+    send_eid = send_eid.at[sdest, rr].set(flat_exp[order] % e_local)
+    send_src = send_src.at[sdest, rr].set(src_tok)
+    send_gate = send_gate.at[sdest, rr].set(flat_gate[order])
+    send_valid = send_valid.at[sdest, rr].set(keep)
+    send_x, send_eid, send_src, send_gate, send_valid = jax.tree.map(
+        lambda a: a[:, :cap],
+        (send_x, send_eid, send_src, send_gate, send_valid))
+
+    # ---- dispatch: all_to_all over the EP axis ---------------------------
+    a2a = functools.partial(jax.lax.all_to_all, axis_name=ep_axis,
+                            split_axis=0, concat_axis=0, tiled=True)
+    recv_x = a2a(send_x)                                     # (EP, cap, D)
+    recv_eid = a2a(send_eid)
+    recv_valid = a2a(send_valid)
+
+    # ---- grouped GEMM over local experts ---------------------------------
+    rx = recv_x.reshape(ep_size * cap, d)
+    rvalid = recv_valid.reshape(-1)
+    # invalid rows are clamped onto the last expert and masked out after.
+    reid = jnp.where(rvalid, recv_eid.reshape(-1), e_local - 1)
+    sort_idx = jnp.argsort(reid, stable=True)
+    rx_sorted = rx[sort_idx]
+    group_sizes = jnp.bincount(reid[sort_idx], length=e_local)
+    y_sorted = _expert_ffn_local(w1_loc, w2_loc, rx_sorted,
+                                 group_sizes.astype(jnp.int32))
+    y = jnp.zeros_like(rx).at[sort_idx].set(y_sorted)
+    y = jnp.where(rvalid[:, None], y, 0.0)
+
+    # ---- return + combine -------------------------------------------------
+    back = a2a(y.reshape(ep_size, cap, d))                   # (EP, cap, D)
+    out = jnp.zeros((t_loc, d), x_loc.dtype)
+    out = out.at[send_src.reshape(-1)].add(
+        (back.reshape(-1, d) * send_gate.reshape(-1)[:, None]
+         * send_valid.reshape(-1)[:, None]).astype(x_loc.dtype))
+    return out, aux
+
+
+def moe_ep(params, x, cfg: ModelCfg, rules: Rules, mesh: jax.sharding.Mesh):
+    """Expert-parallel MoE over (B, S, D) via shard_map on the full mesh."""
+    m = cfg.moe
+    b, s, d = x.shape
+    ep_size = mesh.shape[rules.tp]
+    if m.n_experts % ep_size:
+        # EP width must divide experts; fall back to the dense oracle
+        return moe_dense(params, x, cfg)
+
+    body = functools.partial(_moe_ep_local, cfg=cfg, ep_axis=rules.tp,
+                             ep_size=ep_size)
+
+    all_axes = tuple(n for n in (*(rules.dp or ()), rules.tp)
+                     if n in mesh.axis_names)
+    # decode steps have seq==1: tokens are only batch-sharded there.
+    seq_sharded = s % ep_size == 0 and s > 1
+    x_spec = P(rules.dp, rules.tp, None) if seq_sharded else \
+        P(rules.dp, None, None)
+
+    def wrapped(x3, router_w, w1, w2):
+        xf = x3.reshape(-1, d)                               # local tokens
+        out, aux = body(xf, router_w, w1, w2)
+        return out.reshape(x3.shape), jax.lax.pmean(aux, all_axes)
+
+    out, aux = jax.shard_map(
+        wrapped,
+        mesh=mesh,
+        in_specs=(x_spec, P(None, None),
+                  P(rules.tp, None, None), P(rules.tp, None, None)),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(x, params["router"], params["w1"], params["w2"])
+
+    if m.n_shared:
+        out = out + layers.mlp(params["shared"], x)
+    return out, aux
+
+
+def moe_block(params, x, cfg: ModelCfg, rules: Rules,
+              mesh: jax.sharding.Mesh | None):
+    """Dispatch between EP and dense paths."""
+    if cfg.parallel.ep and mesh is not None:
+        return moe_ep(params, x, cfg, rules, mesh)
+    return moe_dense(params, x, cfg)

@@ -1,0 +1,131 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block = [linear input branch with GeLU gate] x [temporal branch:
+causal depthwise conv(4) -> Real-Gated Linear Recurrent Unit] -> down-proj.
+
+RG-LRU per channel:
+    r_t = sigmoid(x_t W_r + b_r)              (recurrence gate)
+    i_t = sigmoid(x_t W_i + b_i)              (input gate)
+    a_t = exp(-c * softplus(lam) * r_t)       (c = 8, learnable lam)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses ``jax.lax.associative_scan`` over the seq axis (log-depth), so a
+seq-sharded (context-parallel) residual stream stays sharded through the
+recurrence — GSPMD lowers the scan's shifted combines to collective-permutes.
+Decode is a single state update: state cache (B, R) per layer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelCfg
+from repro.dist.specs import Rules, constrain
+from repro.models import layers
+
+C_RGLRU = 8.0
+CONV_W = 4
+
+
+def init(key: jax.Array, cfg: ModelCfg, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    r = d  # lru_width = d_model in recurrentgemma-2b
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in_gate": layers.dense_init(ks[0], d, r, dtype),
+        "w_in_x": layers.dense_init(ks[1], d, r, dtype),
+        "conv_w": (jax.random.normal(ks[2], (CONV_W, r), jnp.float32)
+                   * 0.1).astype(dtype),
+        "w_r": layers.dense_init(ks[3], r, r, dtype),
+        "b_r": jnp.zeros((r,), jnp.float32),
+        "w_i": layers.dense_init(ks[4], r, r, dtype),
+        "b_i": jnp.zeros((r,), jnp.float32),
+        # softplus(lam) ~ U[...] so a^(1/c) ~ U[0.9, 0.999] (Griffin init)
+        "lam": jnp.asarray(
+            jnp.log(jnp.expm1(-jnp.log(
+                jax.random.uniform(ks[5], (r,), jnp.float32,
+                                   0.9, 0.999)) / C_RGLRU))),
+        "w_out": layers.dense_init(ks[6], r, d, dtype),
+    }
+
+
+def specs(rules: Rules) -> dict:
+    return {
+        "w_in_gate": rules.w2(), "w_in_x": rules.w2(),
+        "conv_w": P(None, rules.tp),
+        "w_r": rules.w2(), "b_r": P(rules.tp),
+        "w_i": rules.w2(), "b_i": P(rules.tp),
+        "lam": P(rules.tp),
+        "w_out": rules.w2_row(),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 state: jnp.ndarray | None = None):
+    """Depthwise causal conv, width CONV_W.  x: (B,S,R); state: (B,W-1,R)."""
+    if state is None:
+        pad = jnp.zeros((x.shape[0], CONV_W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                 # (B, S+W-1, R)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(CONV_W))
+    new_state = xp[:, -(CONV_W - 1):]
+    return out, new_state
+
+
+def _gates(params, x):
+    r = jax.nn.sigmoid((x @ params["w_r"]).astype(jnp.float32) + params["b_r"])
+    i = jax.nn.sigmoid((x @ params["w_i"]).astype(jnp.float32) + params["b_i"])
+    log_a = -C_RGLRU * jax.nn.softplus(params["lam"]) * r   # (B,S,R) f32
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * x.astype(jnp.float32))
+    return a, gated_x
+
+
+def rglru_scan(params, x: jnp.ndarray) -> jnp.ndarray:
+    """Parallel (associative-scan) RG-LRU over (B, S, R)."""
+    a, gx = _gates(params, x)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    return h.astype(x.dtype)
+
+
+def rglru_step(params, x: jnp.ndarray, h_prev: jnp.ndarray):
+    """Single decode step.  x: (B,1,R); h_prev: (B,R) f32."""
+    a, gx = _gates(params, x)
+    h = a[:, 0] * h_prev + gx[:, 0]
+    return h.astype(x.dtype)[:, None, :], h
+
+
+def block(params, x, cfg: ModelCfg, rules: Rules) -> jnp.ndarray:
+    """Training/prefill recurrent block over (B, S, D)."""
+    gate = jax.nn.gelu(x @ params["w_in_gate"])
+    xr = x @ params["w_in_x"]
+    xr = constrain(xr, rules.act_ff())
+    xr, _ = _causal_conv(xr, params["conv_w"])
+    h = rglru_scan(params, xr)
+    out = (h * gate) @ params["w_out"]
+    return constrain(out, rules.act_resid())
+
+
+def state_shape(cfg: ModelCfg, batch: int) -> dict:
+    r = cfg.d_model
+    return {"h": (batch, r), "conv": (batch, CONV_W - 1, r)}
+
+
+def block_decode(params, x, state: dict, cfg: ModelCfg, rules: Rules):
+    """Decode step.  x: (B,1,D); state: {"h": (B,R) f32, "conv": (B,3,R)}."""
+    gate = jax.nn.gelu(x @ params["w_in_gate"])
+    xr = x @ params["w_in_x"]
+    xr, conv_state = _causal_conv(xr, params["conv_w"], state["conv"])
+    h_out, h_new = rglru_step(params, xr, state["h"])
+    out = (h_out * gate) @ params["w_out"]
+    return out, {"h": h_new, "conv": conv_state.astype(state["conv"].dtype)}

@@ -1,0 +1,274 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, sequential scan), both with exponential gating.
+
+mLSTM recurrence per head (state C: (dk, dv) matrix, normaliser n: (dk,)):
+    f_t = sigmoid(f~_t)   i_t = exp(i~_t)        (stabilised in log space)
+    C_t = f_t C_{t-1} + i_t k_t v_t^T
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t^T q_t) / max(|n_t^T q_t|, 1)
+
+Training uses the **chunkwise-parallel form** (TPU adaptation): sequences are
+split into chunks of length W; within a chunk the contribution is a masked
+attention-like einsum with log-decay weights, across chunks a lax.scan carries
+(C, n, m) — O(S*W) work with MXU-friendly block matmuls instead of a length-S
+sequential scan.
+
+sLSTM keeps a per-head scalar memory and is inherently sequential: lax.scan
+over time (cheap at d_model=768).  Decode for both is a single state update.
+
+Block layout follows xLSTM-125m: pre-norm, up-projection x2, causal conv(4)
+feeding q/k, recurrence, learnable skip + gated down-projection. d_ff = 0 in
+the pool spec — there is no separate MLP; capacity lives in the block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelCfg
+from repro.dist.specs import Rules, constrain
+from repro.models import layers
+
+CHUNK = 64
+CONV_W = 4
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key: jax.Array, cfg: ModelCfg, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dqk = cfg.head_dim                     # per-head q/k dim
+    dv = cfg.head_dim                      # per-head value dim
+    up = 2 * d
+    ks = jax.random.split(key, 9)
+    return {
+        "w_up": layers.dense_init(ks[0], d, up, dtype),
+        "w_gate": layers.dense_init(ks[1], d, up, dtype),
+        "conv_w": (jax.random.normal(ks[2], (CONV_W, up), jnp.float32)
+                   * 0.1).astype(dtype),
+        "wq": layers.dense_init(ks[3], up, h * dqk, dtype),
+        "wk": layers.dense_init(ks[4], up, h * dqk, dtype),
+        "wv": layers.dense_init(ks[5], up, h * dv, dtype),
+        "w_if": layers.dense_init(ks[6], up, 2 * h, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((h,), jnp.float32),
+                                 3.0 * jnp.ones((h,), jnp.float32)]),
+        "w_down": layers.dense_init(ks[7], up, d, dtype),
+        "skip": (0.1 * jax.random.normal(ks[8], (up,), jnp.float32)).astype(dtype),
+    }
+
+
+def mlstm_specs(rules: Rules) -> dict:
+    return {
+        "w_up": rules.w2(), "w_gate": rules.w2(), "conv_w": P(None, rules.tp),
+        "wq": rules.w2(), "wk": rules.w2(), "wv": rules.w2(),
+        "w_if": P(rules.fsdp, None), "b_if": P(None),
+        "w_down": rules.w2_row(), "skip": P(rules.tp),
+    }
+
+
+def _mlstm_qkv(params, x, cfg: ModelCfg, conv_state=None):
+    """x (B,S,D) -> up (B,S,U), q/k/v (B,S,H,dh), gates (B,S,H) f32 x2."""
+    b, s, _ = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    up = x @ params["w_up"]
+    conv, new_conv = _conv(up, params["conv_w"], conv_state)
+    act = jax.nn.silu(conv)
+    q = (act @ params["wq"]).reshape(b, s, h, dh)
+    k = (act @ params["wk"]).reshape(b, s, h, dh) * (dh ** -0.5)
+    v = (up @ params["wv"]).reshape(b, s, h, dh)
+    gif = (act @ params["w_if"]).astype(jnp.float32) + params["b_if"]
+    log_i, logit_f = jnp.split(gif.reshape(b, s, 2, h), 2, axis=2)
+    log_f = jax.nn.log_sigmoid(logit_f[:, :, 0])           # (B,S,H)
+    return up, q, k, v, log_i[:, :, 0], log_f, new_conv
+
+
+def _conv(x, w, state=None):
+    if state is None:
+        pad = jnp.zeros((x.shape[0], CONV_W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(CONV_W))
+    return out, xp[:, -(CONV_W - 1):]
+
+
+def _mlstm_chunkwise(q, k, v, log_i, log_f):
+    """Chunkwise-parallel mLSTM.  q/k/v: (B,S,H,dh); gates (B,S,H) f32.
+
+    Returns h: (B,S,H,dh).  Stabilisation: per-chunk running max m.
+    """
+    b, s, h, dh = q.shape
+    w = min(CHUNK, s)
+    assert s % w == 0, (s, w)
+    nc = s // w
+
+    # reshape to chunks: (B, NC, W, H, ...)
+    qc = q.reshape(b, nc, w, h, dh).astype(jnp.float32)
+    kc = k.reshape(b, nc, w, h, dh).astype(jnp.float32)
+    vc = v.reshape(b, nc, w, h, dh).astype(jnp.float32)
+    li = log_i.reshape(b, nc, w, h)
+    lf = log_f.reshape(b, nc, w, h)
+    lf_cum = jnp.cumsum(lf, axis=2)                        # inclusive cumsum
+    lf_tot = lf_cum[:, :, -1]                              # (B,NC,H)
+
+    # ---- intra-chunk (parallel, attention-like) ---------------------------
+    # weight(i<-j) = exp(lf_cum[i] - lf_cum[j] + li[j]), j <= i
+    dmat = lf_cum[:, :, :, None, :] - lf_cum[:, :, None, :, :] \
+        + li[:, :, None, :, :]                             # (B,NC,Wq,Wk,H)
+    causal = jnp.tril(jnp.ones((w, w), bool))
+    dmat = jnp.where(causal[None, None, :, :, None], dmat, -jnp.inf)
+    m_intra = jnp.max(dmat, axis=3)                        # (B,NC,Wq,H)
+
+    def chunk_scan(carry, xs):
+        c_prev, n_prev, m_prev = carry      # (B,H,dk,dv), (B,H,dk), (B,H)
+        qi, ki, vi, lii, lfc, lft, dm, mi = xs
+        # stabiliser: incoming state decayed to position i vs intra-chunk max
+        m_inter = lfc + m_prev[:, None, :]                 # (B,W,H)
+        m_tot = jnp.maximum(mi, m_inter)                   # (B,W,H)
+        w_intra = jnp.exp(dm - m_tot[:, :, None, :])       # (B,Wq,Wk,H)
+        w_inter = jnp.exp(m_inter - m_tot)                 # (B,W,H)
+
+        scores = jnp.einsum("bihd,bjhd->bijh", qi, ki) * w_intra
+        h_num = jnp.einsum("bijh,bjhd->bihd", scores, vi) \
+            + jnp.einsum("bihd,bhde->bihe", qi, c_prev) * w_inter[..., None]
+        # denominator: q . (sum_j w_intra[i,j] k_j + w_inter[i] n_prev)
+        n_comb = jnp.einsum("bijh,bjhd->bihd", w_intra, ki) \
+            + n_prev[:, None, :, :] * w_inter[..., None]
+        den = jnp.maximum(jnp.abs(jnp.sum(qi * n_comb, axis=-1)),
+                          jnp.exp(-m_tot))                 # (B,W,H)
+        hi = h_num / den[..., None]
+
+        # ---- state update to end of chunk --------------------------------
+        # decay from in-chunk position j to the chunk end: lft - lfc[j] + li[j]
+        log_w = lft[:, None, :] - lfc + lii                # (B,W,H)
+        m_next = jnp.maximum(lft + m_prev, jnp.max(log_w, axis=1))
+        decay = jnp.exp(lft + m_prev - m_next)             # (B,H)
+        w_state = jnp.exp(log_w - m_next[:, None, :])      # (B,W,H)
+        c_next = c_prev * decay[..., None, None] \
+            + jnp.einsum("bjh,bjhd,bjhe->bhde", w_state, ki, vi)
+        n_next = n_prev * decay[..., None] \
+            + jnp.einsum("bjh,bjhd->bhd", w_state, ki)
+        return (c_next, n_next, m_next), hi
+
+    c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    xs = (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), li.transpose(1, 0, 2, 3),
+          lf_cum.transpose(1, 0, 2, 3), lf_tot.transpose(1, 0, 2),
+          dmat.transpose(1, 0, 2, 3, 4), m_intra.transpose(1, 0, 2, 3))
+    _, hs = jax.lax.scan(chunk_scan, (c0, n0, m0), xs)
+    return hs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+
+
+def mlstm_block(params, x, cfg: ModelCfg, rules: Rules) -> jnp.ndarray:
+    b, s, d = x.shape
+    up, q, k, v, log_i, log_f, _ = _mlstm_qkv(params, x, cfg)
+    hh = _mlstm_chunkwise(q, k, v, log_i, log_f)
+    hh = hh.reshape(b, s, -1).astype(x.dtype)
+    # (xLSTM couples h back through the up-proj width; project v-width -> up)
+    gate = jax.nn.silu(x @ params["w_gate"])
+    mixed = jnp.concatenate([hh, hh], axis=-1) if hh.shape[-1] * 2 == gate.shape[-1] \
+        else jnp.pad(hh, ((0, 0), (0, 0), (0, gate.shape[-1] - hh.shape[-1])))
+    out = (gate * (mixed + params["skip"] * up)) @ params["w_down"]
+    return constrain(out, rules.act_resid())
+
+
+def mlstm_state_shape(cfg: ModelCfg, batch: int) -> dict:
+    h, dh = cfg.n_heads, cfg.head_dim
+    up = 2 * cfg.d_model
+    return {"c": (batch, h, dh, dh), "n": (batch, h, dh), "m": (batch, h),
+            "conv": (batch, CONV_W - 1, up)}
+
+
+def mlstm_block_decode(params, x, state, cfg: ModelCfg, rules: Rules):
+    """Single-token recurrent update (exact mLSTM recurrence)."""
+    b = x.shape[0]
+    up, q, k, v, log_i, log_f, new_conv = _mlstm_qkv(
+        params, x, cfg, conv_state=state["conv"])
+    q1, k1, v1 = (t[:, 0].astype(jnp.float32) for t in (q, k, v))  # (B,H,dh)
+    li, lf = log_i[:, 0], log_f[:, 0]                               # (B,H)
+    m_prev, c_prev, n_prev = state["m"], state["c"], state["n"]
+    m_new = jnp.maximum(lf + m_prev, li)
+    f_eff = jnp.exp(lf + m_prev - m_new)
+    i_eff = jnp.exp(li - m_new)
+    c_new = c_prev * f_eff[..., None, None] \
+        + i_eff[..., None, None] * k1[..., :, None] * v1[..., None, :]
+    n_new = n_prev * f_eff[..., None] + i_eff[..., None] * k1
+    num = jnp.einsum("bhd,bhde->bhe", q1, c_new)
+    den = jnp.maximum(jnp.abs(jnp.sum(q1 * n_new, axis=-1)),
+                      jnp.exp(-m_new))
+    hh = (num / den[..., None]).reshape(b, 1, -1).astype(x.dtype)
+    gate = jax.nn.silu(x @ params["w_gate"])
+    mixed = jnp.concatenate([hh, hh], axis=-1) if hh.shape[-1] * 2 == gate.shape[-1] \
+        else jnp.pad(hh, ((0, 0), (0, 0), (0, gate.shape[-1] - hh.shape[-1])))
+    out = (gate * (mixed + params["skip"] * up)) @ params["w_down"]
+    new_state = {"c": c_new, "n": n_new, "m": m_new,
+                 "conv": new_conv.astype(state["conv"].dtype)}
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key: jax.Array, cfg: ModelCfg, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        # fused z/i/f/o pre-activations
+        "w_zifo": layers.dense_init(ks[0], d, 4 * d, dtype),
+        "b_zifo": jnp.zeros((4 * d,), jnp.float32),
+        "w_down": layers.dense_init(ks[1], d, d, dtype),
+    }
+
+
+def slstm_specs(rules: Rules) -> dict:
+    return {"w_zifo": rules.w2(), "b_zifo": P(None), "w_down": rules.w2_row()}
+
+
+def _slstm_gates(params, x):
+    zifo = (x @ params["w_zifo"]).astype(jnp.float32) + params["b_zifo"]
+    z, i, f, o = jnp.split(zifo, 4, axis=-1)
+    return jnp.tanh(z), i, jax.nn.log_sigmoid(f), jax.nn.sigmoid(o)
+
+
+def _slstm_step(carry, xs):
+    c_prev, n_prev, m_prev = carry
+    z, log_i, log_f, o = xs
+    m_new = jnp.maximum(log_f + m_prev, log_i)
+    i_eff = jnp.exp(log_i - m_new)
+    f_eff = jnp.exp(log_f + m_prev - m_new)
+    c_new = f_eff * c_prev + i_eff * z
+    n_new = f_eff * n_prev + i_eff
+    h = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new), h
+
+
+def slstm_block(params, x, cfg: ModelCfg, rules: Rules) -> jnp.ndarray:
+    b, s, d = x.shape
+    z, i, log_f, o = _slstm_gates(params, x)
+    xs = jax.tree.map(lambda a: a.transpose(1, 0, 2), (z, i, log_f, o))
+    init = (jnp.zeros((b, d), jnp.float32),) * 2 + (
+        jnp.full((b, d), -1e30, jnp.float32),)
+    _, hs = jax.lax.scan(_slstm_step, init, xs)
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    return constrain(h @ params["w_down"], rules.act_resid())
+
+
+def slstm_state_shape(cfg: ModelCfg, batch: int) -> dict:
+    return {"c": (batch, cfg.d_model), "n": (batch, cfg.d_model),
+            "m": (batch, cfg.d_model)}
+
+
+def slstm_block_decode(params, x, state, cfg: ModelCfg, rules: Rules):
+    z, i, log_f, o = _slstm_gates(params, x)
+    carry = (state["c"], state["n"], state["m"])
+    carry, h = _slstm_step(carry, (z[:, 0], i[:, 0], log_f[:, 0], o[:, 0]))
+    out = h[:, None, :].astype(x.dtype) @ params["w_down"]
+    return out, {"c": carry[0], "n": carry[1], "m": carry[2]}

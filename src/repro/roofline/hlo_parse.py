@@ -1,0 +1,380 @@
+"""Parse compiled HLO text for collective-communication byte counts.
+
+``compiled.cost_analysis()`` reports FLOPs and memory bytes but NOT collective
+traffic, so we walk the optimized HLO:
+
+* split the module into computations,
+* walk the call graph from ENTRY, multiplying through ``while`` loops by their
+  trip count (collectives inside a scanned layer stack appear once in the text
+  but execute L times — ignoring this understates traffic by ~L),
+* for every all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute, convert the result shape + replica-group size into bytes
+  moved per device under the standard ring algorithms,
+* classify each collective as intra-pod (ICI) or cross-pod (DCN) from whether
+  its replica group crosses the pod boundary (device id >= devices_per_pod).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{")
+_CALLED_RE = re.compile(
+    r"(?:calls=|to_apply=|body=|condition=|branch_computations={)%?([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{\{(\d+),(\d+)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    """Total bytes of all shapes appearing before the op name."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    bytes_total: float
+    bytes_ici: float
+    bytes_dcn: float
+    counts: dict
+
+
+def split_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = _COMP_START_RE.match(line.strip())
+        if m and ("->" in line):
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _entry_name(hlo: str) -> str | None:
+    for line in hlo.splitlines():
+        s = line.strip()
+        if s.startswith("ENTRY"):
+            m = _COMP_START_RE.match(s)
+            if m:
+                return m.group(1)
+    return None
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Best-effort scan trip count from the while condition computation."""
+    consts = []
+    for line in cond_lines:
+        if "constant(" in line and ("s32[]" in line or "u32[]" in line
+                                    or "s64[]" in line):
+            for m in re.finditer(r"constant\((\d+)\)", line):
+                consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def _group_size_and_span(line: str, total_devices: int) -> tuple[int, bool]:
+    """(replica group size, crosses_first_axis_boundary)."""
+    half = max(total_devices // 2, 1)
+    m = _GROUPS_RE.search(line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",")]
+        return len(ids), (total_devices > 1 and min(ids) < half <= max(ids))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        n_groups, per = int(m.group(1)), int(m.group(2))
+        return per, per > half
+    m = _SRC_TGT_RE.search(line)
+    if m:
+        a, b = int(m.group(1)), int(m.group(2))
+        return 2, total_devices > 1 and (a < half) != (b < half)
+    return 1, False
+
+
+def _wire_bytes(kind: str, result_bytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g * result_bytes
+    if kind == "all-gather":
+        return (g - 1) / g * result_bytes
+    if kind == "reduce-scatter":
+        return float(g - 1) * result_bytes
+    if kind == "all-to-all":
+        return (g - 1) / g * result_bytes
+    if kind == "collective-permute":
+        return float(result_bytes)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Program cost (flops + HBM traffic) from the optimized HLO
+# ---------------------------------------------------------------------------
+# XLA:CPU's HloCostAnalysis is unusable for this purpose (while bodies counted
+# once, large dots under-counted), so we derive both metrics from the HLO text
+# with correct while-loop trip multipliers:
+#   flops     — every `dot` contributes 2 * |result| * prod(contracting dims)
+#               (descending into fusion bodies, where dots may be fused);
+#   hbm bytes — per *top-level* op in each executed computation, bytes(result)
+#               + bytes(operands).  Post-fusion HLO means fusion intermediates
+#               stay on-chip, so op boundaries are exactly the HBM traffic
+#               model.  Fusion bodies are NOT descended for bytes.
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+) = ((?:\w+)\[([\d,]*)\])")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPNAME_RE = re.compile(r"= (?:\w+\[[\d,]*\]\{[\d,]*\} |\([^=]*?\) |\w+\[[\d,]*\] )?([\w\-]+)\(")
+_NO_TRAFFIC_OPS = frozenset({
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota",
+})
+_CTRL_KWARGS_RE = re.compile(
+    r"(?:calls|to_apply|body|condition)=%[\w.\-]+|"
+    r"branch_computations=\{[^}]*\}|metadata=\{[^}]*\}")
+
+
+def _shape_table(hlo: str) -> tuple[dict[str, tuple[int, int]],
+                                    dict[str, str]]:
+    """(%name -> (element_count, bytes), %name -> opname) for every def."""
+    table: dict[str, tuple[int, int]] = {}
+    opnames: dict[str, str] = {}
+    for line in hlo.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape_txt, dims = m.group(1), m.group(2), m.group(3)
+        om = _OPNAME_RE.search(line)
+        if om:
+            opnames[name] = om.group(1)
+        dt = shape_txt.split("[")[0]
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        table[name] = (n, n * DTYPE_BYTES[dt])
+    return table, opnames
+
+
+_SCORE_DIMS_RE = re.compile(r"\w+\[([\d,]+)\]")
+
+
+def _is_score_shaped(line_or_dims) -> bool:
+    """Attention-score tensors + their staging duplicates.
+
+    Used by the flash counterfactual — tensors a flash kernel keeps in VMEM:
+      * (..., Sq, Skv) score/prob/grad tensors: ndim>=4, kv axis >=1024,
+        Sq*Skv >= 1M elements;
+      * the 3-D transposed q/k/dscore layouts XLA materialises to feed the
+        grouped score einsums (metadata carries the 'bkgst' einsum tag).
+    """
+    if isinstance(line_or_dims, str):
+        line = line_or_dims
+        m = _SCORE_DIMS_RE.search(line)
+        if not m:
+            return False
+        dims = [int(d) for d in m.group(1).split(",") if d]
+        if ("bkgst" in line and len(dims) == 3
+                and dims[-1] * dims[-2] >= 1 << 23):
+            return True
+    else:
+        dims = list(line_or_dims)
+    return (len(dims) >= 4 and dims[-1] >= 1024
+            and dims[-1] * dims[-2] >= 1 << 20)
+
+
+def program_costs(hlo: str, exclude_attn_scores: bool = False
+                  ) -> dict[str, float]:
+    """{"flops", "hbm_bytes"} for one device's program, trip-count aware.
+
+    HBM traffic rules (fusion-boundary accounting, loop-carry aware):
+      * op traffic = bytes(result) + sum(bytes(operands)), EXCEPT
+      * inside a while body, an operand that is a get-tuple-element of the
+        carried tuple and much larger than the result is a stacked (L, ...)
+        scan carry accessed via a per-iteration slice -> count bytes/trip;
+      * dynamic-update-slice results (incl. DUS fusions) functionally return
+        the full carry but update in place -> count bytes/trip.
+
+    ``exclude_attn_scores``: the flash-attention counterfactual — drop HBM
+    traffic of score-shaped tensors (kept in VMEM by the Pallas kernel in
+    src/repro/kernels/flash_attention; Mosaic does not compile on the CPU
+    dry-run host, so its effect is modelled from the same compiled HLO).
+    """
+    comps = split_computations(hlo)
+    entry = _entry_name(hlo) or (next(iter(comps)) if comps else None)
+    shapes, opnames = _shape_table(hlo)
+    score_names: set[str] = set()
+    if exclude_attn_scores:
+        for line in hlo.splitlines():
+            m = _DEF_RE.match(line)
+            if m and _is_score_shaped(line.strip()):
+                score_names.add(m.group(1))
+    total = {"flops": 0.0, "hbm_bytes": 0.0}
+
+    def op_flops(line: str) -> float:
+        m = _DEF_RE.match(line)
+        if m is None or " dot(" not in line:
+            return 0.0
+        result_elems = shapes.get(m.group(1), (0, 0))[0]
+        ops_m = re.findall(r"dot\((?:[\w\[\]\{\},\s]*?)%([\w.\-]+)", line)
+        cm = _CONTRACT_RE.search(line)
+        if not ops_m or cm is None:
+            return 0.0
+        # recover lhs dims from its def to size the contraction
+        lhs_def = _find_dims(hlo, ops_m[0])
+        if lhs_def is None:
+            return 0.0
+        k = 1
+        for d in (cm.group(1).split(",") if cm.group(1) else []):
+            if d and int(d) < len(lhs_def):
+                k *= lhs_def[int(d)]
+        return 2.0 * result_elems * k
+
+    dims_cache: dict[str, tuple[int, ...] | None] = {}
+
+    def _find_dims(_hlo, name):
+        if name in dims_cache:
+            return dims_cache[name]
+        m = re.search(rf"%{re.escape(name)} = \w+\[([\d,]*)\]", _hlo)
+        out = tuple(int(d) for d in m.group(1).split(",") if d) if m else None
+        dims_cache[name] = out
+        return out
+
+    def walk(name: str, mult: float, *, bytes_mode: bool, trip: int, stack):
+        if name not in comps or name in stack:
+            return
+        stack.append(name)
+        for line in comps[name]:
+            s = line.strip()
+            om = _OPNAME_RE.search(s)
+            opname = om.group(1) if om else None
+            if opname == "dot":
+                total["flops"] += op_flops(s) * mult
+            if bytes_mode and opname and opname not in _NO_TRAFFIC_OPS:
+                dm = _DEF_RE.match(s)
+                if dm and dm.group(1) in shapes:
+                    res_b = 0 if dm.group(1) in score_names else \
+                        shapes[dm.group(1)][1]
+                    is_dus = "dynamic-update-slice" in s.split("(")[0]
+                    b = res_b / trip if (is_dus and trip > 1) else res_b
+                    clean = _CTRL_KWARGS_RE.sub("", s)
+                    for ref in re.findall(r"%([\w.\-]+)", clean)[1:]:
+                        if ref in score_names:
+                            continue
+                        ob = shapes.get(ref, (0, 0))[1]
+                        if (trip > 1
+                                and opnames.get(ref) == "get-tuple-element"
+                                and ob > 4 * res_b):
+                            ob = ob / trip    # stacked scan carry: sliced read
+                        b += ob
+                    total["hbm_bytes"] += b * mult
+            # control flow
+            if " while(" in s:
+                mb = re.search(r"body=%?([\w.\-]+)", s)
+                mc = re.search(r"condition=%?([\w.\-]+)", s)
+                t = _trip_count(comps.get(mc.group(1), [])) if mc else 1
+                if mb:
+                    walk(mb.group(1), mult * max(t, 1),
+                         bytes_mode=bytes_mode, trip=max(t, 1), stack=stack)
+            elif opname == "fusion":
+                fm = re.search(r"calls=%?([\w.\-]+)", s)
+                if fm:  # descend for dots only; bytes counted at call site
+                    walk(fm.group(1), mult, bytes_mode=False, trip=trip,
+                         stack=stack)
+            elif opname in ("call", "conditional", "async-start"):
+                for callee in _CALLED_RE.findall(s):
+                    walk(callee, mult, bytes_mode=bytes_mode, trip=trip,
+                         stack=stack)
+        stack.pop()
+
+    if entry:
+        walk(entry, 1.0, bytes_mode=True, trip=1, stack=[])
+    return total
+
+
+def collective_stats(hlo: str, devices_per_pod: int | None = None,
+                     default_trip: int = 1,
+                     exclude_score_shaped: bool = False) -> CollectiveStats:
+    comps = split_computations(hlo)
+    entry = _entry_name(hlo)
+    if entry is None and comps:
+        entry = next(iter(comps))
+    total_devices = devices_per_pod * 2 if devices_per_pod else 2
+
+    bytes_by_kind: dict[str, float] = defaultdict(float)
+    counts: dict[str, int] = defaultdict(int)
+    ici = dcn = 0.0
+    visited_stack: list[str] = []
+
+    def walk(name: str, mult: float):
+        nonlocal ici, dcn
+        if name not in comps or name in visited_stack:
+            return
+        visited_stack.append(name)
+        for line in comps[name]:
+            s = line.strip()
+            kind = next((k for k in COLLECTIVES
+                         if re.search(rf"= ?[\w\[\]\(\), ]*{k}(-start)?\(", s)
+                         or f" {k}(" in s.split("metadata")[0]), None)
+            if kind and "-done" not in s:
+                if exclude_score_shaped and _is_score_shaped(s):
+                    continue   # flash counterfactual: scores never reshard
+                lhs = s.split(" = ", 1)
+                shape_txt = lhs[1].split(kind)[0] if len(lhs) == 2 else s
+                rb = _shape_bytes(shape_txt)
+                g, crosses = _group_size_and_span(s, total_devices)
+                wb = _wire_bytes(kind, rb, g) * mult
+                bytes_by_kind[kind] += wb
+                counts[kind] += int(mult)
+                if crosses and devices_per_pod:
+                    dcn += wb
+                else:
+                    ici += wb
+            if " while(" in s:
+                body = cond = None
+                mb = re.search(r"body=%?([\w.\-]+)", s)
+                mc = re.search(r"condition=%?([\w.\-]+)", s)
+                if mb:
+                    body = mb.group(1)
+                if mc:
+                    cond = mc.group(1)
+                trip = _trip_count(comps.get(cond, [])) if cond else default_trip
+                if body:
+                    walk(body, mult * max(trip, 1))
+            else:
+                for callee in _CALLED_RE.findall(s):
+                    if callee in comps:
+                        walk(callee, mult)
+        visited_stack.pop()
+
+    if entry:
+        walk(entry, 1.0)
+    total = sum(bytes_by_kind.values())
+    return CollectiveStats(bytes_by_kind=dict(bytes_by_kind),
+                           bytes_total=total, bytes_ici=ici, bytes_dcn=dcn,
+                           counts=dict(counts))

@@ -1,0 +1,147 @@
+"""Three-term roofline model for TPU v5e (the assignment's target chip).
+
+    compute term    = per-device HLO FLOPs / peak FLOP/s
+    memory term     = per-device HLO bytes accessed / HBM bandwidth
+    collective term = per-device collective wire bytes / ICI bandwidth
+
+``cost_analysis()`` of an SPMD executable reports ONE device's program, so all
+three terms are per-chip; dividing global quantities by chip count (the
+assignment's formula) is algebraically identical.
+
+MODEL_FLOPS = 6*N*D (dense; N = params participating per token, D = tokens) —
+the useful-work yardstick against which HLO FLOPs reveal remat/dispatch waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS_BF16 = 197e12      # TPU v5e per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW_PER_LINK = 50e9        # bytes/s per link (~4 usable links/chip on v5e)
+ICI_LINKS = 4
+DCN_BW = 25e9                 # conservative inter-pod bytes/s per chip
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                # per-device HLO flops
+    hbm_bytes: float            # per-device bytes accessed
+    coll_bytes_ici: float       # per-device collective bytes (intra-pod)
+    coll_bytes_dcn: float       # per-device collective bytes (cross-pod)
+    model_flops_global: float   # 6*N*D useful flops (global)
+    n_chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return (self.coll_bytes_ici / (ICI_BW_PER_LINK * ICI_LINKS)
+                + self.coll_bytes_dcn / DCN_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline step time: overlapped model = max of the three engines."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO FLOPs — remat/redundancy waste metric."""
+        total = self.flops * self.n_chips
+        return self.model_flops_global / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Roofline-implied MFU: useful flops / (chips * peak * t_bound)."""
+        denom = self.n_chips * PEAK_FLOPS_BF16 * self.t_bound
+        return self.model_flops_global / denom if denom else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "coll_bytes_ici": self.coll_bytes_ici,
+            "coll_bytes_dcn": self.coll_bytes_dcn,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "t_bound_s": self.t_bound,
+            "bottleneck": self.bottleneck,
+            "model_flops_global": self.model_flops_global,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "mfu_bound": self.mfu_bound,
+            "n_chips": self.n_chips,
+        }
+
+
+def count_params(cfg) -> int:
+    """Analytic parameter count (total) for MODEL_FLOPS."""
+    d, l, v = cfg.d_model, cfg.n_layers, cfg.vocab_size
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    total = v * d                                   # embeddings (tied head)
+    for i in range(l):
+        kind = cfg.block_kind(i)
+        if kind in ("attn", "local"):
+            if cfg.mla is not None:
+                m = cfg.mla
+                total += d * h * (m.nope_head_dim + m.rope_head_dim)
+                total += d * (m.kv_lora_rank + m.rope_head_dim)
+                total += m.kv_lora_rank * h * (m.nope_head_dim + m.v_head_dim)
+                total += h * m.v_head_dim * d
+            else:
+                total += d * (h + 2 * hk) * dh + h * dh * d
+            if cfg.moe is not None:
+                total += d * cfg.moe.n_experts      # router
+                total += cfg.moe.n_experts * 3 * d * cfg.moe.d_ff_expert
+                total += cfg.moe.n_shared * 3 * d * cfg.moe.d_ff_expert
+            else:
+                total += 3 * d * cfg.d_ff
+        elif kind == "rglru":
+            r = d
+            total += 2 * d * r + 2 * r * r + r * d + 4 * r
+            total += 3 * d * cfg.d_ff
+        elif kind == "mlstm":
+            up = 2 * d
+            total += 2 * d * up + 3 * up * h * dh + up * 2 * h + up * d
+        elif kind == "slstm":
+            total += 4 * d * d + d * d
+    return total
+
+
+def active_params(cfg) -> int:
+    """Params touched per token (MoE: only routed top-k + shared)."""
+    if cfg.moe is None:
+        return count_params(cfg)
+    m = cfg.moe
+    full = count_params(cfg)
+    all_experts = cfg.n_layers * m.n_experts * 3 * cfg.d_model * m.d_ff_expert
+    act_experts = cfg.n_layers * (m.top_k + m.n_shared) * 3 * cfg.d_model \
+        * m.d_ff_expert
+    # shared experts were counted separately already; subtract routed-only
+    return full - all_experts + cfg.n_layers * m.top_k * 3 * cfg.d_model \
+        * m.d_ff_expert
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """6*N_active*D for training; 2*N_active*D for inference steps."""
+    n = active_params(cfg)
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,97 @@
+"""Batched serving engine: one compiled decode step, per-slot positions.
+
+The decode step is compiled once for a fixed slot count; each slot carries
+its own position and an active flag, so the :class:`ContinuousBatcher`
+(serve/scheduler.py) can admit/retire requests mid-flight without
+recompilation — inactive slots neither write KV nor advance.
+
+An optional :class:`repro.core.am.AssociativeMemory` response cache — the
+paper's CAM as a serving-side exact-match cache — is demonstrated in
+examples/serve_am_cache.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelCfg
+from repro.dist.specs import Rules, make_rules
+from repro.models import transformer
+
+
+@dataclasses.dataclass
+class Engine:
+    cfg: ModelCfg
+    params: Any
+    mesh: jax.sharding.Mesh
+    rules: Rules
+    tp: int
+    max_len: int
+    batch: int
+    cache: Any = None
+    pos: np.ndarray = None            # (B,) per-slot positions (host-side)
+
+    @classmethod
+    def create(cls, cfg: ModelCfg, params, mesh, *, batch: int = 4,
+               max_len: int = 256):
+        rules = make_rules(mesh, cfg.parallel.layout, batch_size=batch)
+        tp = mesh.shape[rules.tp]
+        cache = transformer.init_cache(cfg, batch, max_len, tp)
+        eng = cls(cfg=cfg, params=params, mesh=mesh, rules=rules, tp=tp,
+                  max_len=max_len, batch=batch, cache=cache,
+                  pos=np.zeros((batch,), np.int32))
+        eng._decode = jax.jit(
+            lambda p, c, t, pos, act: transformer.decode_step(
+                p, cfg, c, t, pos, rules, tp, mesh, active=act))
+        return eng
+
+    # -- core step -------------------------------------------------------------
+
+    def step_logits(self, tokens: np.ndarray,
+                    active: np.ndarray | None = None) -> np.ndarray:
+        """Feed one token per slot -> (B, vocab) next-token logits.
+
+        Inactive slots don't write cache and don't advance their position.
+        """
+        if active is None:
+            active = np.ones((self.batch,), bool)
+        with jax.set_mesh(self.mesh):
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(tokens)[:, None],
+                jnp.asarray(self.pos), jnp.asarray(active))
+        self.pos = self.pos + active.astype(np.int32)
+        return np.asarray(logits[:, 0, :self.cfg.vocab_size], np.float32)
+
+    # -- convenience (uniform batch) --------------------------------------------
+
+    def prefill(self, prompts: jnp.ndarray) -> jnp.ndarray:
+        """Feed (B, S0) prompts token-by-token; returns last logits (B, V)."""
+        logits = None
+        for i in range(prompts.shape[1]):
+            logits = self.step_logits(np.asarray(prompts[:, i]))
+        return jnp.asarray(logits)
+
+    def step(self, tokens: jnp.ndarray, temperature: float = 0.0,
+             key: jax.Array | None = None) -> jnp.ndarray:
+        """One decode step for (B, 1) tokens -> (B,) next token ids."""
+        logits = jnp.asarray(self.step_logits(np.asarray(tokens[:, 0])))
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        key = key if key is not None else jax.random.PRNGKey(int(self.pos[0]))
+        return jax.random.categorical(key, logits / temperature, axis=-1)
+
+    def generate(self, prompts: jnp.ndarray, num_tokens: int,
+                 temperature: float = 0.0) -> jnp.ndarray:
+        """Greedy/temperature generation; returns (B, num_tokens)."""
+        logits = self.prefill(prompts)
+        tok = jnp.argmax(logits, axis=-1)
+        out = [tok]
+        for _ in range(num_tokens - 1):
+            tok = self.step(tok[:, None], temperature)
+            out.append(tok)
+        return jnp.stack(out, axis=1)

@@ -1,0 +1,154 @@
+"""Train step: loss, grads, optimizer application, and the compressed
+hierarchical cross-pod gradient all-reduce variant.
+
+Baseline path: everything under one jit; GSPMD reduces gradients across the
+full DP domain (pod x data) implicitly.
+
+Compressed path (``grad_compress=True``, multi-pod meshes): a ``shard_map``
+manual only over the ``pod`` axis computes per-pod gradients (inner axes stay
+GSPMD-auto), int8-quantizes them with error feedback, and psums the int8
+codes across pods — 4x fewer bytes on the slow inter-pod links, with the
+quantization error recycled into the next step (1-bit-Adam-style EF).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelCfg
+from repro.dist.specs import Rules, constrain
+from repro.models import transformer
+from repro.train import optimizer as opt
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: opt.OptState
+    step: jnp.ndarray
+    ef: Any = None          # error-feedback buffers (compressed mode only)
+
+
+def init_state(key: jax.Array, cfg: ModelCfg, compressed: bool = False
+               ) -> TrainState:
+    params = transformer.init_params(key, cfg)
+    ef = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params) \
+        if compressed else None
+    return TrainState(params=params, opt=opt.init(params),
+                      step=jnp.zeros((), jnp.int32), ef=ef)
+
+
+def state_specs(cfg: ModelCfg, rules: Rules, compressed: bool = False
+                ) -> TrainState:
+    pspecs = transformer.param_specs(cfg, rules)
+    # optimizer state may shard more finely than the weights (MoE ZeRO-1)
+    ospecs = transformer.param_specs(cfg, rules, for_opt=True)
+    ident = lambda: jax.tree.map(lambda s: s, pspecs,
+                                 is_leaf=lambda x: isinstance(x, P))
+    return TrainState(params=pspecs, opt=opt.state_specs(ospecs), step=P(),
+                      ef=ident() if compressed else None)
+
+
+def loss_fn(params, cfg: ModelCfg, batch, rules: Rules, tp: int, mesh=None):
+    """Next-token cross entropy (fp32 logits path), plus MoE aux loss."""
+    logits, aux = transformer.forward(params, cfg, batch["tokens"], rules, tp,
+                                      batch.get("embeds"), mesh)
+    labels = batch["labels"]
+    # stub-frontend prefixes are not scored
+    prefix = logits.shape[1] - labels.shape[1]
+    logits = logits[:, prefix:]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    metrics = {"loss": loss, "aux": aux,
+               "tokens": jnp.sum(mask)}
+    return loss + AUX_LOSS_WEIGHT * aux, metrics
+
+
+def make_train_step(cfg: ModelCfg, rules: Rules, tp: int,
+                    opt_cfg: opt.OptCfg = opt.OptCfg(), mesh=None):
+    """Baseline GSPMD train step: (state, batch) -> (state, metrics)."""
+
+    def step(state: TrainState, batch):
+        grad_fn = jax.value_and_grad(
+            functools.partial(loss_fn, cfg=cfg, batch=batch, rules=rules,
+                              tp=tp, mesh=mesh), has_aux=True)
+        (_, metrics), grads = grad_fn(state.params)
+        new_params, new_opt, stats = opt.apply(opt_cfg, state.opt, grads,
+                                               state.params)
+        metrics.update(stats)
+        return TrainState(params=new_params, opt=new_opt,
+                          step=state.step + 1, ef=state.ef), metrics
+
+    return step
+
+
+def make_train_step_compressed(cfg: ModelCfg, rules: Rules, tp: int,
+                               mesh: jax.sharding.Mesh,
+                               opt_cfg: opt.OptCfg = opt.OptCfg()):
+    """Hierarchical DP: per-pod grads (GSPMD inside), int8+EF psum across pods.
+
+    Requires a mesh with a ``pod`` axis.  Inside the pod-manual shard_map the
+    loss is computed on the pod-local batch; gradients are then quantized
+    against the persistent error-feedback buffer and summed across pods as
+    **int8 on the wire** — per-pod codes are clipped to +/-(127 // n_pods) so
+    the elementwise sum cannot overflow int8.  vs bf16 gradients that is a
+    2x cut of cross-pod (DCN) all-reduce bytes; the quantization error is
+    recycled through the EF buffer (1-bit-Adam-style convergence guarantee).
+    """
+    assert "pod" in mesh.axis_names, "compressed DP needs a pod axis"
+    n_pods = mesh.shape["pod"]
+    levels = max(127 // n_pods, 1)
+
+    def per_pod(params, ef, batch):
+        grad_fn = jax.value_and_grad(
+            functools.partial(loss_fn, cfg=cfg, batch=batch, rules=rules,
+                              tp=tp, mesh=None), has_aux=True)
+        (_, metrics), grads = grad_fn(params)
+
+        def reduce_leaf(g, e):
+            gc = g.astype(jnp.float32) + e
+            scale = jax.lax.pmax(jnp.max(jnp.abs(gc)) / levels + 1e-12, "pod")
+            q = jnp.clip(jnp.round(gc / scale), -levels, levels).astype(jnp.int8)
+            new_e = gc - q.astype(jnp.float32) * scale
+            total = jax.lax.psum(q, "pod")        # int8 payload on the wire
+            return total.astype(jnp.float32) * scale / n_pods, new_e
+
+        out = jax.tree.map(reduce_leaf, grads, ef)
+        g_mean = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        new_ef = jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        metrics = jax.tree.map(lambda x: jax.lax.pmean(x, "pod"), metrics)
+        return g_mean, new_ef, metrics
+
+    def step(state: TrainState, batch):
+        grads, new_ef, metrics = jax.shard_map(
+            per_pod,
+            mesh=mesh,
+            in_specs=(P(), P(), P("pod")),
+            out_specs=(P(), P(), P()),
+            axis_names={"pod"},
+            check_vma=False,
+        )(state.params, state.ef, batch)
+        new_params, new_opt, stats = opt.apply(opt_cfg, state.opt, grads,
+                                               state.params)
+        metrics.update(stats)
+        return TrainState(params=new_params, opt=new_opt,
+                          step=state.step + 1, ef=new_ef), metrics
+
+    return step

@@ -1,0 +1,328 @@
+"""Unit + property tests for the core SEE-MCAM library (DESIGN.md §7)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import am, cam_array, energy, fefet, hdc, mibo, quantize as q
+
+
+# ---------------------------------------------------------------------------
+# FeFET device model
+# ---------------------------------------------------------------------------
+
+def test_vth_ladder_monotone_and_sized():
+    for bits in (1, 2, 3, 4):
+        lv = np.asarray(fefet.vth_levels(bits))
+        assert lv.shape == (1 << bits,)
+        assert np.all(np.diff(lv) > 0)
+
+
+def test_write_pulse_roundtrip():
+    vth = fefet.vth_levels(3)
+    pulses = fefet.vth_to_write_pulse(vth)
+    back = fefet.write_pulse_to_vth(pulses)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(vth), atol=1e-6)
+    # larger positive pulse -> lower V_TH (polarization toward channel)
+    assert float(fefet.write_pulse_to_vth(jnp.float32(4.0))) < float(
+        fefet.write_pulse_to_vth(jnp.float32(2.0)))
+
+
+def test_drain_current_switching():
+    vth = jnp.float32(1.0)
+    i_off = float(fefet.drain_current(jnp.float32(0.2), vth))
+    i_on = float(fefet.drain_current(jnp.float32(2.0), vth))
+    assert i_on / i_off > 1e5
+    # 1 V overdrive -> I_ON * (1 + slope)
+    want = fefet.I_ON * (1 + fefet.OVERDRIVE_SLOPE * 1.0)
+    assert abs(i_on - want) / want < 0.05
+
+
+def test_drain_current_overdrive_grades_with_level_distance():
+    """Mismatch current grows with |stored - query| level gap — the physics
+    behind the analog L1 associative ranking (DESIGN.md §2)."""
+    from repro.core import mibo
+    currents = [float(mibo.mibo_current(jnp.int32(0), jnp.int32(q), 3))
+                for q in range(1, 8)]
+    assert all(b > a for a, b in zip(currents, currents[1:]))
+
+
+def test_am_l1_distance_mode():
+    codes = jnp.array([[0, 0], [7, 7], [3, 3]])
+    m = am.AssociativeMemory(bits=3, distance="l1")
+    m.write(codes)
+    r = m.search(jnp.array([[2, 2]]))
+    assert int(r.best_row[0]) == 2          # L1 picks the nearest level
+    np.testing.assert_array_equal(np.asarray(r.mismatch_counts[0]),
+                                  [4, 10, 2])
+    # pallas backend agrees through the thermometer trick
+    mp = am.AssociativeMemory(bits=3, distance="l1", backend="pallas")
+    mp.write(codes)
+    rp = mp.search(jnp.array([[2, 2]]))
+    np.testing.assert_array_equal(np.asarray(rp.mismatch_counts),
+                                  np.asarray(r.mismatch_counts))
+
+
+# ---------------------------------------------------------------------------
+# MIBO XOR truth table (the key cell invariant)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [1, 2, 3])
+def test_mibo_truth_table(bits):
+    m = 1 << bits
+    v, qq = jnp.meshgrid(jnp.arange(m), jnp.arange(m), indexing="ij")
+    mm = np.asarray(mibo.mibo_xor(v, qq, bits))
+    np.testing.assert_array_equal(mm, np.asarray(v != qq))
+
+
+@pytest.mark.parametrize("bits", [2, 3])
+def test_exactly_one_fefet_conducts_on_mismatch(bits):
+    m = 1 << bits
+    v, qq = jnp.meshgrid(jnp.arange(m), jnp.arange(m), indexing="ij")
+    vth1, vth2 = mibo.stored_vths(v, bits)
+    g1, g2 = mibo.search_gate_voltages(qq, bits)
+    i1 = np.asarray(fefet.drain_current(g1, vth1)) > mibo.I_D_THRESHOLD / 2
+    i2 = np.asarray(fefet.drain_current(g2, vth2)) > mibo.I_D_THRESHOLD / 2
+    v_, q_ = np.asarray(v), np.asarray(qq)
+    np.testing.assert_array_equal(i1, v_ < q_)   # F1 conducts iff stored < query
+    np.testing.assert_array_equal(i2, v_ > q_)   # F2 conducts iff stored > query
+
+
+def test_mibo_d_voltage_levels():
+    # match -> D near 0; mismatch -> D near V_SL (Fig. 4(c)/(d))
+    v = jnp.array([3, 5]); qq = jnp.array([3, 2])
+    dv = np.asarray(mibo.mibo_d_voltage(v, qq, 3))
+    assert dv[0] < 0.05 * mibo.V_SL
+    assert dv[1] > 0.95 * mibo.V_SL
+
+
+# ---------------------------------------------------------------------------
+# CAM arrays
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.integers(1, 3), rows=st.integers(1, 24), cells=st.integers(1, 24),
+       seed=st.integers(0, 2**31 - 1), variant=st.sampled_from(["nor", "nand"]))
+def test_array_search_matches_exact_oracle(bits, rows, cells, seed, variant):
+    key = jax.random.PRNGKey(seed)
+    codes = jax.random.randint(key, (rows, cells), 0, 1 << bits)
+    cfg = cam_array.SEEMCAMConfig(bits=bits, n_cells=cells, n_rows=rows,
+                                  variant=variant)
+    arr = cam_array.SEEMCAMArray(cfg)
+    arr.program(codes)
+    queries = jax.random.randint(jax.random.fold_in(key, 1),
+                                 (5, cells), 0, 1 << bits)
+    match, mismatch = arr.search_batch(queries)
+    want_mm = np.sum(np.asarray(queries)[:, None, :] != np.asarray(codes)[None],
+                     axis=-1)
+    np.testing.assert_array_equal(np.asarray(mismatch), want_mm)
+    np.testing.assert_array_equal(np.asarray(match), want_mm == 0)
+
+
+def test_nand_chain_equals_prefix_product():
+    key = jax.random.PRNGKey(0)
+    codes = jax.random.randint(key, (16, 12), 0, 8)
+    cfg = cam_array.SEEMCAMConfig(bits=3, n_cells=12, n_rows=16, variant="nand")
+    arr = cam_array.SEEMCAMArray(cfg)
+    arr.program(codes)
+    r = arr.search(codes[3])
+    assert bool(r.match[3])
+    # Eq. (3): ML_i = ML_{i-1} * not(D_i) — word matches iff no cell mismatched
+    assert np.asarray(r.mismatch_count)[3] == 0
+
+
+def test_nand_transition_accounting_precharge_free():
+    """Consecutive identical searches must consume zero chain transitions."""
+    key = jax.random.PRNGKey(1)
+    codes = jax.random.randint(key, (8, 16), 0, 8)
+    cfg = cam_array.SEEMCAMConfig(bits=3, n_cells=16, n_rows=8, variant="nand")
+    arr = cam_array.SEEMCAMArray(cfg)
+    arr.program(codes)
+    query = jax.random.randint(jax.random.fold_in(key, 2), (16,), 0, 8)
+    arr.search(query)
+    t1 = arr.transition_count
+    arr.search(query)           # identical search: no node changes state
+    assert arr.transition_count == t1
+
+
+def test_analog_ml_current_scales_with_mismatches():
+    codes = jnp.zeros((1, 16), jnp.int32)
+    cfg = cam_array.SEEMCAMConfig(bits=3, n_cells=16, n_rows=1, variant="nor")
+    arr = cam_array.SEEMCAMArray(cfg)
+    arr.program(codes)
+    i_prev = 0.0
+    for k in (0, 1, 4, 16):
+        query = jnp.where(jnp.arange(16) < k, 1, 0)
+        i_ml = float(arr.search(query).ml_discharge_current[0])
+        assert i_ml >= i_prev
+        i_prev = i_ml
+    assert i_prev > 10 * fefet.I_ON  # 16 conducting cells
+
+
+# ---------------------------------------------------------------------------
+# Energy / latency / area model vs Table II
+# ---------------------------------------------------------------------------
+
+def test_table_ii_calibration():
+    s = energy.model_summary(n_cells=32, bits=3)
+    assert abs(s["nor"]["energy_fj_per_bit"] - 0.060) / 0.060 < 0.15
+    assert abs(s["nor"]["latency_ps"] - 371.8) / 371.8 < 0.15
+    assert abs(s["nor"]["area_um2_per_bit"] - 0.12) / 0.12 < 0.15
+    assert abs(s["nand"]["energy_fj_per_bit"] - 0.039) / 0.039 < 0.15
+    assert abs(s["nand"]["latency_ps"] - 2040.0) / 2040.0 < 0.15
+    assert abs(s["nand"]["area_um2_per_bit"] - 0.146) / 0.146 < 0.15
+
+
+def test_headline_ratios():
+    r = energy.energy_ratios()
+    assert abs(r["16T CMOS [8]"] - 9.8) < 1.0        # 9.8x vs CMOS
+    assert abs(r["NC'20 [15]"] - 8.7) < 1.0          # 8.7x vs ReRAM MCAM
+    assert abs(r["IEDM'20 [18]"] - 4.9) < 0.6        # 4.9x vs FeFET MCAM
+    assert abs(r["Nat Ele'19 [10]"] - 6.7) < 0.8     # 6.7x vs 2FeFET TCAM
+    # latency: 1.6x less than CMOS CAM
+    lat = energy.search_latency("nor", 32)
+    assert abs(582.4 / lat - 1.6) < 0.2
+
+
+def test_scaling_trends_fig7_fig8():
+    # energy linear in rows (independent rows)
+    e64 = energy.search_energy_array("nor", 64, 32, 3)
+    e128 = energy.search_energy_array("nor", 128, 32, 3)
+    assert abs(e128 / e64 - 2.0) < 1e-6
+    # latency increases with cells/word for both variants
+    for variant in ("nor", "nand"):
+        lats = [energy.search_latency(variant, n) for n in (8, 16, 32, 64)]
+        assert all(b > a for a, b in zip(lats, lats[1:]))
+    # NOR latency ~flat in rows (row-independent) — model has no row term
+    # NAND word energy below NOR word energy (the precharge-free win)
+    assert (energy.nand_search_energy_word(32, 3)
+            < energy.nor_search_energy_word(32, 3))
+    # Eq.(1) vs Eq.(2): FeCAM ML capacitance strictly larger
+    assert energy.fecam_ml_capacitance(32) > energy.nor_ml_capacitance(32)
+
+
+def test_3bit_density_claim():
+    # 3 bits/cell => 3x storage density vs BCAM at equal cell count
+    cfg = cam_array.SEEMCAMConfig(bits=3, n_cells=32, n_rows=4)
+    assert cfg.bits * cfg.n_cells == 3 * 32
+
+
+# ---------------------------------------------------------------------------
+# Quantizer
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(bits=st.integers(1, 3), seed=st.integers(0, 2**31 - 1))
+def test_quantizer_properties(bits, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4096,))
+    lv = np.asarray(q.quantize(x, bits))
+    assert lv.min() >= 0 and lv.max() < (1 << bits)
+    # monotone: larger value -> same or larger level
+    order = np.argsort(np.asarray(x))
+    assert np.all(np.diff(lv[order]) >= 0)
+
+
+def test_quantizer_balanced_bins():
+    x = jax.random.normal(jax.random.PRNGKey(0), (200_000,))
+    for bits in (1, 2, 3):
+        lv = np.asarray(q.quantize(x, bits))
+        freq = np.bincount(lv, minlength=1 << bits) / lv.size
+        np.testing.assert_allclose(freq, 1 / (1 << bits), atol=0.01)
+
+
+def test_dequantize_representatives_ordered():
+    reps = np.asarray(q.level_representatives(3))
+    assert np.all(np.diff(reps) > 0)
+    assert abs(reps.mean()) < 0.05  # symmetric around 0
+
+
+# ---------------------------------------------------------------------------
+# HDC + AssociativeMemory
+# ---------------------------------------------------------------------------
+
+def _blobs(key, n, k, num, noise=0.7):
+    kc, ky, kn = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (k, n)) * 2.0
+    y = jax.random.randint(ky, (num,), 0, k)
+    x = centers[y] + noise * jax.random.normal(kn, (num, n))
+    return x, y
+
+
+def test_hdc_end_to_end_backends_agree():
+    cfg = hdc.HDCConfig(n_features=32, n_classes=5, dim=256, retrain_epochs=2)
+    model = hdc.make_model(cfg)
+    x, y = _blobs(jax.random.PRNGKey(0), 32, 5, 400)
+    model = hdc.fit(model, x, y)
+    hv = hdc.encode(model.projection, x)
+    p_ref = np.asarray(hdc.predict_cam(model, hv, backend="ref"))
+    p_pal = np.asarray(hdc.predict_cam(model, hv, backend="pallas"))
+    np.testing.assert_array_equal(p_ref, p_pal)
+    assert hdc.accuracy(jnp.asarray(p_ref), y) > 0.9
+
+
+def test_hdc_retrain_improves_or_holds():
+    cfg = hdc.HDCConfig(n_features=24, n_classes=6, dim=512, retrain_epochs=0)
+    x, y = _blobs(jax.random.PRNGKey(3), 24, 6, 600, noise=1.8)
+    m0 = hdc.fit(hdc.make_model(cfg), x, y)
+    hv = hdc.encode(m0.projection, x)
+    acc0 = hdc.accuracy(hdc.predict_cosine(m0.class_hvs, hv), y)
+    import dataclasses
+    m5 = hdc.fit(hdc.make_model(dataclasses.replace(cfg, retrain_epochs=5)), x, y)
+    acc5 = hdc.accuracy(hdc.predict_cosine(m5.class_hvs, hv), y)
+    assert acc5 >= acc0 - 0.02
+
+
+def test_am_backends_consistent_with_analog():
+    key = jax.random.PRNGKey(5)
+    codes = jax.random.randint(key, (20, 24), 0, 8)
+    queries = jax.random.randint(jax.random.fold_in(key, 1), (7, 24), 0, 8)
+    outs = {}
+    for backend in ("ref", "pallas", "analog"):
+        m = am.AssociativeMemory(bits=3, backend=backend)
+        m.write(codes)
+        outs[backend] = np.asarray(m.search(queries).mismatch_counts)
+    np.testing.assert_array_equal(outs["ref"], outs["pallas"])
+    np.testing.assert_array_equal(outs["ref"], outs["analog"])
+
+
+def test_am_exact_match_semantics():
+    codes = jnp.array([[1, 2, 3], [4, 5, 6]])
+    m = am.AssociativeMemory(bits=3)
+    m.write(codes)
+    r = m.search(jnp.array([[1, 2, 3], [1, 2, 4]]))
+    assert bool(r.exact_match[0, 0]) and not bool(r.exact_match[0, 1])
+    assert not bool(r.exact_match[1, 0])
+    assert int(r.best_row[0]) == 0
+
+
+# ---------------------------------------------------------------------------
+# Baselines: 2FeFET TCAM (wildcards) + FeCAM Eq.(1) energy
+# ---------------------------------------------------------------------------
+
+def test_tcam_wildcard_semantics():
+    from repro.core import baselines
+    cfg = baselines.TCAMConfig(n_cells=6, n_rows=3)
+    arr = baselines.FeFETTCAMArray(cfg)
+    W = baselines.WILDCARD
+    arr.program(jnp.array([
+        [0, 1, 0, 1, 0, 1],
+        [0, 1, W, W, 0, 1],     # wildcards in the middle
+        [1, 1, 1, 1, 1, 1],
+    ]))
+    match, counts = arr.search_batch(jnp.array([[0, 1, 1, 0, 0, 1]]))
+    np.testing.assert_array_equal(np.asarray(match[0]), [False, True, False])
+    # wildcard cells contribute no mismatches (row 1's two wilds are free)
+    np.testing.assert_array_equal(np.asarray(counts[0]), [2, 0, 3])
+
+
+def test_fecam_eq1_energy_structurally_higher():
+    """Eq.(1) vs Eq.(2): FeCAM's 2-FeFET-on-ML cap costs measurably more."""
+    from repro.core import baselines
+    # C_ML-only structural advantage ~1.6x; the rest of the published 3.0x
+    # (TED'20 row) comes from FeCAM's peripheral differences.
+    ratio = baselines.fecam_energy_ratio()
+    assert 1.3 < ratio < 3.5
+    # ratio grows with word width (cap difference is per-cell)
+    assert baselines.fecam_energy_ratio(64) > baselines.fecam_energy_ratio(8)

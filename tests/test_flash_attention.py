@@ -1,0 +1,80 @@
+"""Flash-attention kernel vs oracle: shape/dtype sweeps + properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import ops as fl_ops
+from repro.kernels.flash_attention import ref as fl_ref
+from repro.kernels.flash_attention import kernel as fl_k
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("b,s,t,h,hk,dh", [
+    (1, 128, 128, 2, 1, 64),
+    (2, 256, 256, 4, 2, 64),
+    (1, 128, 256, 4, 4, 128),
+    (2, 384, 128, 6, 2, 32),
+])
+def test_flash_matches_ref(b, s, t, h, hk, dh, causal):
+    if causal and s != t:
+        pytest.skip("causal requires square here")
+    key = jax.random.PRNGKey(s + t + h)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, s, h, dh), jnp.float32)
+    k = jax.random.normal(kk, (b, t, hk, dh), jnp.float32)
+    v = jax.random.normal(kv, (b, t, hk, dh), jnp.float32)
+    got = fl_ops.flash_attention_bshd(q, k, v, causal=causal)
+    want = fl_ref.attention(
+        q.transpose(0, 2, 1, 3).reshape(b * h, s, dh),
+        k.transpose(0, 2, 1, 3).reshape(b * hk, t, dh),
+        v.transpose(0, 2, 1, 3).reshape(b * hk, t, dh),
+        group=h // hk, causal=causal,
+    ).reshape(b, h, s, dh).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_bf16():
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 128, 2, 64), jnp.bfloat16)
+    k = jax.random.normal(key, (1, 128, 1, 64), jnp.bfloat16)
+    v = jax.random.normal(key, (1, 128, 1, 64), jnp.bfloat16)
+    got = fl_ops.flash_attention_bshd(q, k, v)
+    want = fl_ref.attention(
+        q.transpose(0, 2, 1, 3).reshape(2, 128, 64),
+        k.transpose(0, 2, 1, 3).reshape(1, 128, 64),
+        v.transpose(0, 2, 1, 3).reshape(1, 128, 64), group=2,
+    ).reshape(1, 2, 128, 64).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+@settings(max_examples=8, deadline=None)
+@given(nq=st.integers(1, 3), nk=st.integers(1, 3), group=st.integers(1, 3),
+       seed=st.integers(0, 2**31 - 1))
+def test_flash_property_blocks(nq, nk, group, seed):
+    """Arbitrary block-count grids agree with the oracle (non-causal)."""
+    dh = 32
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (group, nq * 128, dh), jnp.float32)
+    k = jax.random.normal(kk, (1, nk * 128, dh), jnp.float32)
+    v = jax.random.normal(kv, (1, nk * 128, dh), jnp.float32)
+    got = fl_k.flash_attention(q, k, v, group=group, causal=False,
+                               interpret=True)
+    want = fl_ref.attention(q, k, v, group=group, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_row_stochasticity():
+    """Softmax rows sum the value vectors: with v = const, out = const."""
+    q = jax.random.normal(jax.random.PRNGKey(1), (2, 128, 64))
+    k = jax.random.normal(jax.random.PRNGKey(2), (2, 128, 64))
+    v = jnp.ones((2, 128, 64))
+    out = fl_k.flash_attention(q, k, v, group=1, causal=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), 1.0, atol=1e-5)

@@ -1,0 +1,70 @@
+"""Serving engine + continuous batcher: correctness of per-slot state."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.dist.specs import make_rules
+from repro.launch.mesh import make_test_mesh
+from repro.models import transformer
+from repro.serve.engine import Engine
+from repro.serve.scheduler import ContinuousBatcher, Request
+
+
+def _setup(batch=3, max_len=48):
+    cfg = get_config("yi_6b", smoke=True)
+    mesh = make_test_mesh()
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine.create(cfg, params, mesh, batch=batch, max_len=max_len)
+    return cfg, mesh, params, eng
+
+
+def _reference_greedy(cfg, params, mesh, prompt, n):
+    """Uniform-batch greedy generation as the oracle."""
+    eng = Engine.create(cfg, params, mesh, batch=1, max_len=48)
+    return [int(t) for t in np.asarray(
+        eng.generate(prompt[None], num_tokens=n))[0]]
+
+
+def test_engine_inactive_slots_do_not_advance():
+    cfg, mesh, params, eng = _setup()
+    toks = np.array([5, 7, 9], np.int32)
+    eng.step_logits(toks, active=np.array([True, False, True]))
+    np.testing.assert_array_equal(eng.pos, [1, 0, 1])
+
+
+def test_continuous_batcher_matches_uniform_greedy():
+    """Requests admitted at different times must generate exactly what a
+    dedicated single-request engine generates (per-slot isolation)."""
+    cfg, mesh, params, eng = _setup(batch=2)
+    key = jax.random.PRNGKey(3)
+    p1 = np.asarray(jax.random.randint(key, (4,), 2, cfg.vocab_size))
+    p2 = np.asarray(jax.random.randint(jax.random.fold_in(key, 1), (6,), 2,
+                                       cfg.vocab_size))
+    p3 = np.asarray(jax.random.randint(jax.random.fold_in(key, 2), (3,), 2,
+                                       cfg.vocab_size))
+
+    batcher = ContinuousBatcher(eng)
+    for rid, (p, n) in enumerate([(p1, 5), (p2, 4), (p3, 5)]):
+        batcher.submit(Request(rid=rid, prompt=p, max_new_tokens=n))
+    done = batcher.run()
+    assert len(done) == 3
+    got = {r.rid: r.generated for r in done}
+
+    assert got[0] == _reference_greedy(cfg, params, mesh, jnp.asarray(p1), 5)
+    assert got[1] == _reference_greedy(cfg, params, mesh, jnp.asarray(p2), 4)
+    assert got[2] == _reference_greedy(cfg, params, mesh, jnp.asarray(p3), 5)
+    # request 3 reused a slot freed mid-run: ticks < sum of sequential costs
+    assert batcher.ticks < (4 + 5) + (6 + 4) + (3 + 5)
+
+
+def test_generate_shapes_and_determinism():
+    cfg, mesh, params, eng = _setup(batch=2)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0,
+                                 cfg.vocab_size)
+    out = eng.generate(prompts, num_tokens=6)
+    assert out.shape == (2, 6)
+    eng2 = Engine.create(cfg, params, mesh, batch=2, max_len=48)
+    out2 = eng2.generate(prompts, num_tokens=6)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
