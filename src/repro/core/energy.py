@@ -91,6 +91,46 @@ def nor_search_energy_word(n_cells: int, bits: int,
     return e_ml + _word_drive_energy(n_cells, 1.0 - p_match_cell)
 
 
+def nand_expected_chain_events(n_cells: int, bits: int,
+                               p_match_cell: float | None = None) -> float:
+    """Expected HIGH chain nodes per word after one search (Sec. III-C).
+
+    Chain node i is HIGH iff the first i cells all match — probability p**i
+    for uniform random symbols — so the expectation is the geometric tail sum
+    ``sum_{i=1..N} p^i``.  Starting from the discharged (just-programmed)
+    state every HIGH node is one charging event, which is the per-search
+    chain-energy term of :func:`nand_search_energy_word`; the functional
+    simulator (``SEEMCAMArray.transition_count``) counts the same events.
+    """
+    if p_match_cell is None:
+        p_match_cell = 1.0 / (1 << bits)
+    p = p_match_cell
+    if p >= 1:
+        return float(n_cells)
+    return p * (1.0 - p ** n_cells) / (1.0 - p)
+
+
+def nand_expected_transitions_per_search(n_cells: int, bits: int,
+                                         p_match_cell: float | None = None
+                                         ) -> float:
+    """Expected chain-node level CHANGES between consecutive random searches.
+
+    Node i is HIGH with probability q_i = p**i independently across searches,
+    so it transitions (either direction) with probability 2 q_i (1 - q_i):
+    ``sum_i 2 p^i (1 - p^i)``.  Half of these are charging (0 -> 1) events,
+    bounded above by :func:`nand_expected_chain_events` — the steady-state
+    regime the event-driven energy model assumes.
+    """
+    if p_match_cell is None:
+        p_match_cell = 1.0 / (1 << bits)
+    p = p_match_cell
+    if p >= 1:
+        return 0.0
+    up = nand_expected_chain_events(n_cells, bits, p)            # sum p^i
+    up2 = nand_expected_chain_events(n_cells, bits, p * p)       # sum p^2i
+    return 2.0 * (up - up2)
+
+
 def nand_search_energy_word(n_cells: int, bits: int,
                             p_match_cell: float | None = None) -> float:
     """Average precharge-free NAND-type search energy per word (fJ).
@@ -103,9 +143,7 @@ def nand_search_energy_word(n_cells: int, bits: int,
     """
     if p_match_cell is None:
         p_match_cell = 1.0 / (1 << bits)
-    p = p_match_cell
-    # expected charging events over the chain: sum_{i=1..N} p^i  (p<1)
-    exp_chain_events = p * (1.0 - p ** n_cells) / (1.0 - p) if p < 1 else float(n_cells)
+    exp_chain_events = nand_expected_chain_events(n_cells, bits, p_match_cell)
     e_chain = exp_chain_events * C_STAGE * V_PRE ** 2
     e_d = n_cells * NAND_ACT * (C_INV_IN + C_D_NODE) * V_SL ** 2
     e_wl = 2 * n_cells * C_WL_GATE * V_WL_SWING ** 2 * WL_TOGGLE

@@ -1,0 +1,183 @@
+"""Sharding-rule engine: one ``Rules`` object maps logical tensors to mesh axes.
+
+Model code never names mesh axes directly.  Every layer asks the ``Rules``
+object for the :class:`~jax.sharding.PartitionSpec` of a *logical* tensor role
+(residual activations, per-head activations, 2-D weights, embeddings, ...) and
+wraps intermediate values in :func:`constrain`.  All distribution decisions —
+which mesh axis is tensor-parallel, whether the residual stream is
+sequence-sharded, how the batch spreads over ``pod``/``data`` — therefore live
+here, in one place, selected by the ``layout`` string from
+:class:`repro.configs.base.ParallelCfg`:
+
+  ``"tp"``  Megatron tensor parallelism: head/FF dims on ``model``, optional
+            sequence-parallel residual stream, FSDP weights over ``data``.
+  ``"cp"``  Context parallelism: heads stay unsharded, the sequence axis is
+            sharded over ``model``, weights are 2-D FSDP.
+
+Specs factories (shapes they describe):
+
+  ``act_resid``      (B, S, D)     residual-stream activations
+  ``act_heads``      (B, S, H, dh) attention activations, heads sharded (tp)
+  ``act_seq_heads``  (B, S, H, dh) attention activations, sequence sharded (cp)
+  ``act_ff``         (B, S, F)     feed-forward hidden activations
+  ``w2``             (d_in, d_out) column-parallel 2-D weight
+  ``w2_row``         (d_in, d_out) row-parallel 2-D weight
+  ``embed``          (V, D)        embedding table (vocab on tp, D on fsdp)
+  ``logits``         (B, S, V)     output logits
+
+``make_rules`` binds a mesh: it picks the batch (data-parallel) axes from
+whatever subset of ``("pod", "data")`` the mesh has AND divides the global
+batch, so decode shapes with tiny batches degrade gracefully to replication.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import compat
+
+#: Mesh axes considered data-parallel, outermost first.
+DP_AXES = ("pod", "data")
+#: The tensor-parallel mesh axis.
+TP_AXIS = "model"
+#: The weight-sharding (FSDP) mesh axis.
+FSDP_AXIS = "data"
+
+LAYOUTS = ("tp", "cp")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Axis bindings + PartitionSpec factories for one (mesh, layout) pair.
+
+    Attributes:
+      layout: ``"tp"`` or ``"cp"`` (see module docstring).
+      tp:     tensor-parallel mesh axis name (``mesh.shape[rules.tp]`` is the
+              TP width).
+      dp:     tuple of batch axes, or ``None`` when the batch is replicated
+              (``*(rules.dp or ())`` is the idiomatic iteration).
+      fsdp:   weight-sharding axis name, or ``None``.
+      resid_seq_shard: sequence-parallel residual stream (Megatron-SP) in the
+              ``tp`` layout; the ``cp`` layout always sequence-shards.
+    """
+
+    layout: str
+    tp: str
+    dp: tuple | None
+    fsdp: str | None
+    resid_seq_shard: bool = True
+
+    # -- activations ---------------------------------------------------------
+
+    def act_resid(self) -> P:
+        """(B, S, D) residual stream."""
+        if self.layout == "cp" or self.resid_seq_shard:
+            return P(self.dp, self.tp, None)
+        return P(self.dp, None, None)
+
+    def act_heads(self) -> P:
+        """(B, S, H, dh): heads on tp (Megatron); seq on tp under cp."""
+        if self.layout == "tp":
+            return P(self.dp, None, self.tp, None)
+        return P(self.dp, self.tp, None, None)
+
+    def act_seq_heads(self) -> P:
+        """(B, S, H, dh) with the sequence axis sharded (context parallel)."""
+        return P(self.dp, self.tp, None, None)
+
+    def act_ff(self) -> P:
+        """(B, S, F) feed-forward hidden activations."""
+        if self.layout == "tp":
+            return P(self.dp, None, self.tp)
+        return P(self.dp, self.tp, None)
+
+    # -- weights -------------------------------------------------------------
+
+    def w2(self) -> P:
+        """(d_in, d_out) column-parallel weight: output dim on tp, FSDP in."""
+        return P(self.fsdp, self.tp)
+
+    def w2_row(self) -> P:
+        """(d_in, d_out) row-parallel weight: input dim on tp, FSDP out."""
+        return P(self.tp, self.fsdp)
+
+    def embed(self) -> P:
+        """(V, D) embedding table; V is 256-padded so it divides the TP width
+        (and its transpose serves as the tied LM head)."""
+        return P(self.tp, self.fsdp)
+
+    # -- outputs -------------------------------------------------------------
+
+    def logits(self) -> P:
+        """(B, S, V) logits: vocab on tp (tp) / sequence on tp (cp)."""
+        if self.layout == "tp":
+            return P(self.dp, None, self.tp)
+        return P(self.dp, self.tp, None)
+
+
+def make_rules(mesh: jax.sharding.Mesh, layout: str, *,
+               batch_size: int | None = None,
+               resid_seq_shard: bool = True) -> Rules:
+    """Bind a :class:`Rules` object to ``mesh``.
+
+    Args:
+      mesh: the device mesh; expected axes are a subset of
+        ``("pod", "data", "model")`` (any may be missing or size 1).
+      layout: ``"tp"`` or ``"cp"``.
+      batch_size: when given, data-parallel axes are kept outermost-first only
+        while their cumulative product still divides it; a batch of 1 yields a
+        fully replicated batch rather than an invalid sharding.
+      resid_seq_shard: Megatron-SP residual stream for the ``tp`` layout.
+    """
+    if layout not in LAYOUTS:
+        raise ValueError(f"unknown layout {layout!r}; expected one of {LAYOUTS}")
+    names = mesh.axis_names
+    tp = TP_AXIS if TP_AXIS in names else names[-1]
+    dp = tuple(a for a in DP_AXES if a in names and a != tp)
+    if batch_size is not None:
+        kept: list = []
+        prod = 1
+        for axis in dp:
+            if batch_size % (prod * mesh.shape[axis]) != 0:
+                break
+            kept.append(axis)
+            prod *= mesh.shape[axis]
+        dp = tuple(kept)
+    fsdp = FSDP_AXIS if (FSDP_AXIS in names and FSDP_AXIS != tp) else None
+    return Rules(layout=layout, tp=tp, dp=dp or None, fsdp=fsdp,
+                 resid_seq_shard=resid_seq_shard)
+
+
+def constrain(x: jax.Array, spec: P) -> jax.Array:
+    """Apply a GSPMD sharding constraint, or return ``x`` untouched when the
+    constraint cannot apply.
+
+    No-op conditions:
+      * no ambient mesh (``jax.set_mesh`` not active) — single-process unit
+        tests and eager helpers;
+      * tracing inside a shard_map/pmap body — mesh axes are bound manual
+        there, so auto-sharding constraints naming them are invalid;
+      * the spec mentions no axis of the ambient mesh (e.g. rules built for a
+        larger mesh) — remaining entries are scrubbed to None first.
+    """
+    mesh = compat.ambient_mesh()
+    if mesh is None or compat.in_manual_region():
+        return x
+    axis_names = set(mesh.axis_names)
+
+    def scrub(entry):
+        if entry is None:
+            return None
+        names = entry if isinstance(entry, tuple) else (entry,)
+        names = tuple(n for n in names if n in axis_names)
+        if not names:
+            return None
+        return names if len(names) > 1 else names[0]
+
+    entries = tuple(scrub(e) for e in spec)
+    if all(e is None for e in entries):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*entries))

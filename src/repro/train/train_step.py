@@ -133,16 +133,26 @@ def make_train_step_compressed(cfg: ModelCfg, rules: Rules, tp: int,
                               is_leaf=lambda x: isinstance(x, tuple))
         new_ef = jax.tree.map(lambda t: t[1], out,
                               is_leaf=lambda x: isinstance(x, tuple))
+        # Shared (pod-averaged) error feedback: the EF identity
+        # mean_i(dequant_i) + new_ef == mean_i(g_i) + ef holds exactly for
+        # the mean gradient, and the buffer is genuinely replicated — its
+        # P() out_spec below would otherwise claim replication of
+        # pod-varying values.
+        new_ef = jax.tree.map(lambda e: jax.lax.pmean(e, "pod"), new_ef)
         metrics = jax.tree.map(lambda x: jax.lax.pmean(x, "pod"), metrics)
         return g_mean, new_ef, metrics
 
     def step(state: TrainState, batch):
+        # Manual over the FULL mesh: params/EF replicated, batch split over
+        # `pod` only.  (Partial-manual regions — pod manual, data/model left
+        # to GSPMD — hit partitioner CHECK failures on older XLA builds; with
+        # replicated inner compute the int8 wire format is unchanged.)
         grads, new_ef, metrics = jax.shard_map(
             per_pod,
             mesh=mesh,
             in_specs=(P(), P(), P("pod")),
             out_specs=(P(), P(), P()),
-            axis_names={"pod"},
+            axis_names=set(mesh.axis_names),
             check_vma=False,
         )(state.params, state.ef, batch)
         new_params, new_opt, stats = opt.apply(opt_cfg, state.opt, grads,

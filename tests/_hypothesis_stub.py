@@ -1,0 +1,97 @@
+"""Minimal ``hypothesis`` stand-in for hermetic environments.
+
+The real library cannot always be installed in the pinned test container, but
+the suite's property tests only use a small surface: ``@settings``, ``@given``
+with keyword strategies, ``st.integers`` and ``st.sampled_from``.  This shim
+reimplements exactly that surface as a *seeded randomized sweep*: each
+``@given`` test runs ``max_examples`` times with draws from a ``random.Random``
+seeded by the test's qualified name, so runs are deterministic across
+processes and machines (no shrinking, no database, no coverage-guided search).
+
+``install()`` registers the shim under ``sys.modules['hypothesis']`` /
+``'hypothesis.strategies'``; when the real package is importable the stub is
+never installed (see tests/conftest.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+import sys
+import types
+
+DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(options) -> _Strategy:
+    options = list(options)
+    return _Strategy(lambda rng: options[rng.randrange(len(options))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    """Decorator recording the example budget on the (given-wrapped) test."""
+
+    def decorate(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def given(**strategies):
+    """Decorator running the test over deterministic random draws."""
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for i in range(n):
+                draws = {name: s.draw(rng) for name, s in strategies.items()}
+                try:
+                    fn(*args, **kwargs, **draws)
+                except Exception as e:
+                    raise AssertionError(
+                        f"property test failed on example {i + 1}/{n} with "
+                        f"arguments {draws!r}") from e
+        # pytest resolves fixture requests through __wrapped__'s signature;
+        # the strategy-drawn parameters must stay invisible to it.
+        del wrapper.__wrapped__
+        return wrapper
+
+    return decorate
+
+
+def install() -> None:
+    """Register the shim as ``hypothesis`` in ``sys.modules``."""
+    mod = types.ModuleType("hypothesis")
+    mod.__doc__ = __doc__
+    strategies = types.ModuleType("hypothesis.strategies")
+    for fn in (integers, sampled_from, booleans, floats):
+        setattr(strategies, fn.__name__, fn)
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strategies
+    mod.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

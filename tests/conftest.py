@@ -1,0 +1,36 @@
+"""Test-session environment pinning.
+
+Must run before the first ``import jax`` anywhere in the test process:
+
+* forces the CPU platform and 8 fake host devices, so every mesh-dependent
+  test sees the same deterministic device topology on any host (laptop, CI,
+  TPU pod frontend);
+* when the real ``hypothesis`` package is unavailable (hermetic containers),
+  installs the minimal shim from ``tests/_hypothesis_stub.py`` so property
+  tests still run as seeded randomized sweeps.
+"""
+
+import os
+import sys
+
+# -- JAX platform pinning (before any jax import) ---------------------------
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+_FLAG = "--xla_force_host_platform_device_count=8"
+_existing = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _existing:
+    os.environ["XLA_FLAGS"] = f"{_existing} {_FLAG}".strip()
+
+assert "jax" not in sys.modules, (
+    "jax was imported before tests/conftest.py could pin XLA_FLAGS; "
+    "check for jax imports in pytest plugins or earlier conftests")
+
+# -- hypothesis fallback ----------------------------------------------------
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+    _hypothesis_stub.install()

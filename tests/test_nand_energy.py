@@ -1,0 +1,115 @@
+"""NAND event-driven energy: simulator transition counts vs analytical model.
+
+The precharge-free NAND array (paper Sec. III-C) only spends chain energy when
+a matchline chain node changes level between consecutive searches.  The
+functional simulator (``SEEMCAMArray.transition_count``) counts those events;
+:mod:`repro.core.energy` prices them analytically.  These tests cross-check
+the two over consecutive-search sequences:
+
+* first search after programming charges E[sum_i p^i] nodes per word
+  (``nand_expected_chain_events`` — the chain term of the energy model);
+* steady-state random search flips E[sum_i 2 p^i (1-p^i)] nodes per word
+  (``nand_expected_transitions_per_search``);
+* repeating the same query is free — the defining event-driven property.
+
+Rows are programmed i.i.d. uniform, so the ``n_rows`` words of one array act
+as Monte-Carlo samples; tolerances are ~4 sigma for the seeds used.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import cam_array, energy
+
+N_CELLS = 16
+N_ROWS = 1024
+N_STEADY = 200
+REL_TOL = 0.12
+
+
+def _programmed_array(bits: int):
+    cfg = cam_array.SEEMCAMConfig(bits=bits, n_cells=N_CELLS, n_rows=N_ROWS,
+                                  variant="nand")
+    arr = cam_array.SEEMCAMArray(cfg)
+    codes = jax.random.randint(jax.random.PRNGKey(bits), (N_ROWS, N_CELLS), 0,
+                               cfg.levels)
+    arr.program(codes)
+    return cfg, arr
+
+
+def _query(cfg, bits: int, t: int) -> jnp.ndarray:
+    key = jax.random.fold_in(jax.random.PRNGKey(100 + bits), t)
+    return jax.random.randint(key, (N_CELLS,), 0, cfg.levels)
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3])
+def test_first_search_charging_matches_chain_events_model(bits):
+    """Post-program search charges ~ n_rows * sum_i p^i chain nodes."""
+    cfg, arr = _programmed_array(bits)
+    assert arr.transition_count == 0
+    arr.search(_query(cfg, bits, 0))
+    want = energy.nand_expected_chain_events(N_CELLS, bits) * N_ROWS
+    assert abs(arr.transition_count - want) <= REL_TOL * want, (
+        arr.transition_count, want)
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3])
+def test_steady_state_transitions_match_model(bits):
+    """Across consecutive random searches the per-search transition count
+    converges to the analytical 2 sum_i p^i (1 - p^i) per word."""
+    cfg, arr = _programmed_array(bits)
+    arr.search(_query(cfg, bits, 0))
+    first = arr.transition_count
+    for t in range(1, N_STEADY + 1):
+        arr.search(_query(cfg, bits, t))
+    steady = arr.transition_count - first
+
+    per_word = energy.nand_expected_transitions_per_search(N_CELLS, bits)
+    want = per_word * N_ROWS * N_STEADY
+    assert abs(steady - want) <= REL_TOL * want, (steady, want)
+
+    # The energy model prices charging (0->1) events — half the transitions —
+    # and bounds them by the first-search chain-events term.
+    charging_per_search = steady / 2 / N_STEADY
+    bound = energy.nand_expected_chain_events(N_CELLS, bits) * N_ROWS
+    assert charging_per_search <= bound
+
+
+@pytest.mark.parametrize("bits", [1, 3])
+def test_repeated_query_is_free(bits):
+    """Event-driven energy: an identical consecutive search flips nothing."""
+    cfg, arr = _programmed_array(bits)
+    q = _query(cfg, bits, 0)
+    arr.search(q)
+    after_first = arr.transition_count
+    assert after_first > 0          # some rows matched a prefix and charged
+    for _ in range(3):
+        arr.search(q)
+    assert arr.transition_count == after_first
+
+
+def test_program_resets_event_state():
+    cfg, arr = _programmed_array(3)
+    arr.search(_query(cfg, 3, 0))
+    assert arr.transition_count > 0
+    arr.program(arr.codes)          # rewrite discharges the chain state
+    assert arr.transition_count == 0
+    arr.search(_query(cfg, 3, 1))
+    assert arr.transition_count > 0
+
+
+def test_model_internal_consistency():
+    """The closed forms agree with direct series evaluation."""
+    for bits in (1, 2, 3):
+        p = 1.0 / (1 << bits)
+        series_up = sum(p ** i for i in range(1, N_CELLS + 1))
+        series_flip = sum(2 * p ** i * (1 - p ** i)
+                          for i in range(1, N_CELLS + 1))
+        assert energy.nand_expected_chain_events(N_CELLS, bits) == \
+            pytest.approx(series_up, rel=1e-12)
+        assert energy.nand_expected_transitions_per_search(N_CELLS, bits) == \
+            pytest.approx(series_flip, rel=1e-12)
+    # steady-state charging is strictly cheaper than the cold-start charge
+    assert energy.nand_expected_transitions_per_search(N_CELLS, 3) / 2 < \
+        energy.nand_expected_chain_events(N_CELLS, 3)

@@ -5,11 +5,14 @@ Runs in a subprocess with 8 fake devices: mesh (pod=2, data=2, model=2),
 layers sequentially.
 """
 
+import os
 import subprocess
 import sys
 import textwrap
 
 from repro.dist.pipeline import bubble_fraction
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 SCRIPT = textwrap.dedent("""
     import os
@@ -60,6 +63,6 @@ def test_bubble_fraction():
 
 
 def test_pipeline_matches_sequential():
-    out = subprocess.run([sys.executable, "-c", SCRIPT], cwd="/root/repo",
+    out = subprocess.run([sys.executable, "-c", SCRIPT], cwd=REPO_ROOT,
                          capture_output=True, text=True, timeout=500)
     assert "PIPELINE_OK" in out.stdout, (out.stdout[-500:], out.stderr[-2000:])
