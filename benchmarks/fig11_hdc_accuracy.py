@@ -8,12 +8,9 @@
 
 from __future__ import annotations
 
-import dataclasses
-
-import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit
 from repro.core import hdc
 from repro.data import hdc_data
 
@@ -27,6 +24,7 @@ def _fit_eval(spec, dim, bits, mode, seed=0):
     if mode == "cos":
         pred = hdc.predict_cosine_quantized(model.class_hvs, hv, bits)
     else:
+        # the library's shipped CAM inference path (AMTable + am.search)
         pred = hdc.predict_cam(model, hv)
     return hdc.accuracy(pred, jnp.asarray(y_te))
 

@@ -6,20 +6,24 @@ No GPU exists offline, so the comparison is (clearly labelled):
   * GPU proxy — analytic GTX 1080ti model at the paper's operating point
     (11.3 TFLOP/s peak fp32, 30% matmul efficiency, 180 W board power),
     which reproduces the scale of the paper's nvidia-smi measurements;
-  * Host measured — the same exact-match search timed via XLA on this host,
-    anchoring the proxy with a real measurement.
+  * Host measured — the same search through the functional ``am.search``
+    API (jitted as a whole, table passed as a pytree) timed via XLA on this
+    host, anchoring the proxy with a real measurement.
 Derived: speedup_x / energy_eff_x — the paper reports up to 3 orders of
 magnitude for both; the model should land in that regime.
+
+``--smoke`` runs one tiny shape with minimal timing iterations — the CI
+guard that fails fast when the benchmark layer drifts off the search API.
 """
 
 from __future__ import annotations
 
+import argparse
+
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit, time_call
-from repro.core import energy
-from repro.kernels.cam_search import ref as cam_ref
+from repro.core import am, energy
 
 GPU_PEAK_FLOPS = 11.3e12
 GPU_EFF = 0.30
@@ -47,21 +51,26 @@ def gpu_cost(n_rows: int, d_cells: int, batch: int):
     return t, t * GPU_POWER_W
 
 
-def run():
-    for k_classes, d in ((26, 1024), (26, 4096), (12, 1024), (5, 1024)):
+def run(smoke: bool = False):
+    shapes = ((5, 128),) if smoke else ((26, 1024), (26, 4096), (12, 1024),
+                                        (5, 1024))
+    batch = 8 if smoke else 1024
+    iters = 2 if smoke else 5
+    for k_classes, d in shapes:
         t_cam, e_cam = cam_search_cost(k_classes, d, 3)
         # online single-query regime (the AM lookup inside an inference loop)
         t_g1, e_g1 = gpu_cost(k_classes, d, batch=1)
         # large-batch amortized regime
-        batch = 1024
         t_gb, e_gb = gpu_cost(k_classes, d, batch)
         t_gb, e_gb = t_gb / batch, e_gb / batch
-        # host-measured anchor (XLA compare-reduce on this CPU)
+        # host-measured anchor: the functional top-1 search, jitted end to
+        # end with the table as a pytree argument
         key = jax.random.PRNGKey(0)
-        table = jax.random.randint(key, (k_classes, d), 0, 8)
+        table = am.make_table(jax.random.randint(key, (k_classes, d), 0, 8),
+                              bits=3)
         q = jax.random.randint(key, (batch, d), 0, 8)
-        fn = jax.jit(lambda a, b: cam_ref.mismatch_counts(a, b))
-        us_host = time_call(fn, q, table) / batch
+        fn = jax.jit(lambda t, b: am.search(t, b, k=1))
+        us_host = time_call(fn, table, q, iters=iters) / batch
         emit(f"fig12_K{k_classes}_D{d}", us_host,
              f"cam_ns={t_cam * 1e9:.2f};"
              f"speedup_single_x={t_g1 / t_cam:.0f};"
@@ -72,4 +81,7 @@ def run():
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + minimal iterations (CI guard)")
+    run(smoke=ap.parse_args().smoke)

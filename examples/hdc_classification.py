@@ -42,6 +42,14 @@ def main():
     print(f"3-bit SEE-MCAM (MXU)  : {acc_cam_pl:.4f}")
     assert acc_cam == acc_cam_pl, "kernel must agree with oracle"
 
+    # top-k retrieval view: how often the true class is among the k nearest
+    # stored codes (the nearest-neighbor workload of the scaled search API)
+    res = hdc.predict_cam_topk(model, hv_te, k=min(3, spec.n_classes))
+    in_topk = jnp.any(res.indices == y[:, None], axis=-1)
+    print(f"true class in top-{res.indices.shape[-1]} : "
+          f"{float(jnp.mean(in_topk)):.4f}")
+    assert float(jnp.mean(in_topk)) >= acc_cam
+
 
 if __name__ == "__main__":
     main()

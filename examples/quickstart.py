@@ -31,13 +31,12 @@ def main():
     noisy = codes[21].at[3].set((codes[21][3] + 1) % 8)
     print(f"1-cell-corrupted query -> best row = {int(arr.best_match(noisy)[0])}")
 
-    # 4. the same search through the AssociativeMemory backends
+    # 4. the same search through the functional AM API, every backend
+    table = am.make_table(codes, bits=3)
     for backend in ("ref", "pallas", "analog"):
-        m = am.AssociativeMemory(bits=3, backend=backend)
-        m.write(codes)
-        res = m.search(noisy[None])
-        print(f"backend={backend:7s} best_row={int(res.best_row[0])} "
-              f"mismatches={int(res.mismatch_counts[0, res.best_row[0]])}")
+        res = am.search(table, noisy, k=3, backend=backend)
+        print(f"backend={backend:7s} top3_rows={[int(i) for i in res.indices]} "
+              f"distances={[float(d) for d in res.distances]}")
 
     # 5. calibrated circuit model (Table II operating point)
     s = energy.model_summary(n_cells=32, bits=3)

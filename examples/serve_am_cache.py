@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config
-from repro.core import am, hdc, quantize
+from repro.core import am, quantize
 from repro.launch.mesh import make_test_mesh
 from repro.models import transformer
 from repro.serve.engine import Engine
@@ -25,30 +25,33 @@ BITS = 3
 
 
 class AMCache:
-    """Exact-match associative cache keyed by quantized HDC codes."""
+    """Exact-match associative cache keyed by quantized HDC codes.
+
+    Holds ONE immutable :class:`am.AMTable` and appends a row per insert —
+    no key-table rebuild on lookup; the search itself is the pure, jittable
+    ``am.search`` with exact-match (distance-0) semantics.
+    """
 
     def __init__(self, vocab: int):
         self.proj = jax.random.normal(jax.random.PRNGKey(9), (vocab, DIM))
-        self.keys: list[np.ndarray] = []
+        self.table = am.make_table(jnp.zeros((0, DIM), jnp.int32), bits=BITS)
         self.values: list[np.ndarray] = []
 
-    def _encode(self, prompt: jnp.ndarray) -> np.ndarray:
+    def _encode(self, prompt: jnp.ndarray) -> jnp.ndarray:
         # bag-of-tokens HDC encoding of the prompt, Z-score quantized
         hv = jnp.sum(self.proj[prompt], axis=0)
-        return np.asarray(quantize.quantize(hv, BITS))
+        return quantize.quantize(hv, BITS)
 
     def lookup(self, prompt: jnp.ndarray):
-        if not self.keys:
+        if self.table.n_rows == 0:
             return None
-        mem = am.AssociativeMemory(bits=BITS, backend="pallas")
-        mem.write(jnp.asarray(np.stack(self.keys)))
-        res = mem.search(jnp.asarray(self._encode(prompt))[None])
-        if bool(res.exact_match[0, res.best_row[0]]):
-            return self.values[int(res.best_row[0])]
+        res = am.search(self.table, self._encode(prompt), backend="pallas")
+        if bool(res.exact[0]):
+            return self.values[int(res.best_row)]
         return None
 
     def insert(self, prompt: jnp.ndarray, generation: np.ndarray):
-        self.keys.append(self._encode(prompt))
+        self.table = am.append(self.table, self._encode(prompt))
         self.values.append(generation)
 
 

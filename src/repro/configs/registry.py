@@ -6,7 +6,6 @@ geometry) and ``SMOKE`` (a reduced same-family config for CPU smoke tests).
 
 from __future__ import annotations
 
-import dataclasses
 import importlib
 
 ARCH_IDS = (

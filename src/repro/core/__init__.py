@@ -2,7 +2,10 @@
 
 FeFET device model, 2FeFET MIBO XOR cell, NOR/NAND CAM array models,
 analytical energy/latency/area models (Table II calibrated), Z-score
-quantization, quantized HDC pipeline, and the AssociativeMemory module.
+quantization, quantized HDC pipeline, and the functional associative-search
+API (:mod:`repro.core.am`: immutable ``AMTable`` pytree + top-k/threshold
+``search`` with pluggable ref/pallas/analog backends and a sharded
+multi-bank path).
 """
 
 from repro.core import am, cam_array, energy, fefet, hdc, mibo, quantize

@@ -1,132 +1,509 @@
-"""AssociativeMemory — the SEE-MCAM search primitive as a composable module.
+"""Functional associative-search API — the SEE-MCAM primitive as pure JAX.
 
-This is the paper's contribution packaged for system use: a store of multi-bit
-codes over which batched associative searches run.  Three interchangeable
-backends:
+The paper's contribution packaged for system use: an immutable :class:`AMTable`
+of multi-bit codes plus one pure entry point :func:`search` that runs batched
+top-k / threshold associative lookups over it.  Everything is data-in/data-out:
 
-  "ref"     pure-jnp oracle (exact semantics, differentiable-free int path)
-  "pallas"  TPU Pallas kernel: one-hot Gram-matrix match counting on the MXU
-            (:mod:`repro.kernels.cam_search`) — the performance path
-  "analog"  behavioural circuit simulation through the FeFET/MIBO device model
-            (:mod:`repro.core.cam_array`) including V_TH variation — the
-            fidelity path used for robustness studies
+  >>> table = am.make_table(codes, bits=3, distance="l1")
+  >>> table = am.append(table, more_codes)             # returns a NEW table
+  >>> res = am.search(table, queries, k=4, threshold=2, backend="pallas")
+  >>> res.indices, res.distances, res.exact, res.matched   # all (Q, k)
 
-Higher layers (the HDC classifier head, the serving-side associative cache in
-``examples/serve_am_cache.py``) depend only on this interface.
+``AMTable`` and :class:`AMSearchResult` are registered pytrees, so ``search``
+jits as a whole (the table is a traced argument — no hidden host state), vmaps
+over query batches, and passes through ``shard_map``.  :func:`search_sharded`
+row-partitions the table over the ``model`` mesh axis (the paper's multi-bank
+organisation) and merges per-bank top-k candidates with an all-gather.
+
+Backends are plugins registered through :func:`register_backend`; ``"ref"``
+(pure jnp oracle), ``"pallas"`` (MXU one-hot Gram kernel,
+:mod:`repro.kernels.cam_search`) and ``"analog"`` (behavioural FeFET circuit
+model, :mod:`repro.core.cam_array`) ship by default.
+
+Distance-unit contract (every backend must satisfy it)
+------------------------------------------------------
+A backend is ``fn(queries, codes, bits, distance) -> (Q, N) array`` where the
+entries are distances in units of **binary cell mismatches**:
+
+* ``distance="hamming"`` — the number of differing multi-bit symbols;
+* ``distance="l1"``      — the total level distance ``sum_d |q_d - t_d|``
+  (each symbol contributes its thermometer-code Hamming distance).
+
+Requirements:
+
+* an entry is ``0`` **iff** the query word equals the stored word exactly
+  (digital backends return exact integers; analog backends may return floats
+  but must keep every true match below ``EXACT_MATCH_EPS`` = 0.5 and every
+  mismatch above it — the analog unit is one LSB-mismatch discharge current,
+  :func:`repro.core.mibo.lsb_mismatch_current`);
+* for digital backends the value must equal the integer distance exactly, so
+  ``threshold`` semantics are bit-precise;
+* the analog ``"l1"`` path reports the *physical* ML discharge in LSB units —
+  monotone in the level distance of each cell but not numerically equal to
+  the digital L1 sum (the device's overdrive response is affine, not
+  proportional); rankings agree on exact matches and single-cell gaps.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
+import warnings
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import fefet, mibo
 
-@dataclasses.dataclass
-class AMSearchResult:
-    mismatch_counts: jnp.ndarray   # (Q, N) int32 symbol-mismatch counts
-    exact_match: jnp.ndarray       # (Q, N) bool
-    best_row: jnp.ndarray          # (Q,) int32 argmin mismatch (analog ML rank)
+#: Distances below this are exact word matches (half of one LSB mismatch —
+#: the smallest distance any backend may report for a true mismatch is ~1.0).
+EXACT_MATCH_EPS = 0.5
+
+DISTANCES = ("hamming", "l1")
 
 
-class AssociativeMemory:
-    """Multi-bit exact/nearest associative memory over integer symbol codes.
+# ---------------------------------------------------------------------------
+# AMTable — the immutable code store
+# ---------------------------------------------------------------------------
 
-    ``distance`` selects the nearest-row ranking semantics:
-      "hamming" — strict digital exact-match counting (#differing symbols);
-      "l1"      — the analog ML-discharge ranking: a mismatching cell's
-                  pull-down current grows with gate overdrive, i.e. with the
-                  level distance |q - t| (fefet.OVERDRIVE_SLOPE), so the word
-                  ranking is a weighted L1 distance.  Simulated digitally via
-                  thermometer coding: |a-b| = Hamming(therm(a), therm(b)),
-                  which also maps onto the same MXU Gram kernel.
-    Exact-match flags are identical under both (distance 0 <=> equal).
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class AMTable:
+    """Immutable multi-bit code table (a registered pytree).
+
+    Children: ``codes`` (N, D) int32 symbols in [0, 2**bits) and the optional
+    per-row ``meta`` array (e.g. value ids for an associative cache — any
+    array whose leading axis aligns with rows).  ``bits`` and ``distance``
+    are static aux data, so a jitted function specialises on them exactly
+    like on shapes.
     """
 
-    def __init__(self, bits: int = 3, backend: str = "ref",
-                 distance: str = "hamming",
-                 variation_key: jax.Array | None = None):
-        if backend not in ("ref", "pallas", "analog"):
-            raise ValueError(f"unknown backend {backend!r}")
-        if distance not in ("hamming", "l1"):
-            raise ValueError(f"unknown distance {distance!r}")
-        self.bits = bits
-        self.backend = backend
-        self.distance = distance
-        self.variation_key = variation_key
-        self._codes: jnp.ndarray | None = None
+    codes: jnp.ndarray
+    meta: jnp.ndarray | None = None
+    bits: int = 3
+    distance: str = "hamming"
 
-    # -- write ---------------------------------------------------------------
+    def tree_flatten(self):
+        return (self.codes, self.meta), (self.bits, self.distance)
 
-    def write(self, codes: jnp.ndarray) -> None:
-        """Store (N, D) int codes, each symbol in [0, 2**bits)."""
-        codes = jnp.asarray(codes, jnp.int32)
-        if codes.ndim != 2:
-            raise ValueError(f"codes must be (N, D), got {codes.shape}")
-        self._codes = codes
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, meta = children
+        return cls(codes=codes, meta=meta, bits=aux[0], distance=aux[1])
 
     @property
-    def codes(self) -> jnp.ndarray:
-        if self._codes is None:
-            raise RuntimeError("AssociativeMemory is empty — call write() first")
-        return self._codes
+    def n_rows(self) -> int:
+        return self.codes.shape[0]
 
-    # -- search ---------------------------------------------------------------
+    @property
+    def width(self) -> int:
+        return self.codes.shape[1]
 
-    def search(self, queries: jnp.ndarray) -> AMSearchResult:
-        """Batched associative search of (Q, D) int queries."""
-        queries = jnp.asarray(queries, jnp.int32)
-        if queries.ndim == 1:
-            queries = queries[None]
-        codes = self.codes
-        if queries.shape[-1] != codes.shape[-1]:
+
+def make_table(codes, *, bits: int = 3, distance: str = "hamming",
+               meta=None) -> AMTable:
+    """Build an :class:`AMTable` from (N, D) integer symbol codes."""
+    if distance not in DISTANCES:
+        raise ValueError(f"unknown distance {distance!r}; expected {DISTANCES}")
+    codes = jnp.asarray(codes, jnp.int32)
+    if codes.ndim != 2:
+        raise ValueError(f"codes must be (N, D), got {codes.shape}")
+    if meta is not None:
+        meta = jnp.asarray(meta)
+        if meta.shape[:1] != codes.shape[:1]:
             raise ValueError(
-                f"query width {queries.shape[-1]} != stored width {codes.shape[-1]}")
-
-        bits = self.bits
-        if self.distance == "l1" and bits > 1 and self.backend != "analog":
-            # thermometer expansion: (N, D) b-bit -> (N, D*(2^b-1)) binary
-            queries = _thermometer(queries, bits)
-            codes = _thermometer(codes, bits)
-            bits = 1
-
-        if self.backend == "pallas":
-            from repro.kernels.cam_search import ops as cam_ops
-            mm = cam_ops.mismatch_counts(queries, codes, bits)
-        elif self.backend == "analog":
-            from repro.core.cam_array import SEEMCAMArray, SEEMCAMConfig
-            cfg = SEEMCAMConfig(bits=bits, n_cells=codes.shape[1],
-                                n_rows=codes.shape[0], variant="nor")
-            arr = SEEMCAMArray(cfg)
-            arr.program(codes, variation_key=self.variation_key)
-            res = [arr.search(q) for q in queries]
-            if self.distance == "l1":
-                # analog ranking: graded ML discharge current
-                mm = jnp.stack([r.ml_discharge_current for r in res])
-                mm = (mm / (1e-5)).astype(jnp.float32)  # normalise to ~counts
-            else:
-                mm = jnp.stack([r.mismatch_count for r in res])
-        else:
-            mm = _ref_mismatch_counts(queries, codes)
-
-        return AMSearchResult(
-            mismatch_counts=mm,
-            exact_match=mm == 0 if mm.dtype == jnp.int32 else mm < 0.5,
-            best_row=jnp.argmin(mm, axis=-1).astype(jnp.int32),
-        )
+                f"meta leading axis {meta.shape[:1]} != rows {codes.shape[:1]}")
+    return AMTable(codes=codes, meta=meta, bits=bits, distance=distance)
 
 
-def _thermometer(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
-    """(..., D) levels in [0, 2^b) -> (..., D*(2^b-1)) binary thermometer."""
+def write(table: AMTable, codes, meta=None) -> AMTable:
+    """Replace the stored codes, returning a new table (pure update)."""
+    return make_table(codes, bits=table.bits, distance=table.distance,
+                      meta=meta)
+
+
+def append(table: AMTable, codes, meta=None) -> AMTable:
+    """Append (M, D) rows, returning a new table."""
+    codes = jnp.asarray(codes, jnp.int32)
+    if codes.ndim == 1:
+        codes = codes[None]
+    if codes.shape[-1] != table.width:
+        raise ValueError(
+            f"appended width {codes.shape[-1]} != table width {table.width}")
+    new_codes = jnp.concatenate([table.codes, codes], axis=0)
+    if (table.meta is None) != (meta is None):
+        raise ValueError("append meta presence must match the table's")
+    new_meta = None
+    if meta is not None:
+        meta = jnp.atleast_1d(jnp.asarray(meta))
+        if meta.shape[:1] != codes.shape[:1]:
+            raise ValueError(
+                f"meta leading axis {meta.shape[:1]} != appended rows "
+                f"{codes.shape[:1]}")
+        new_meta = jnp.concatenate([table.meta, meta], axis=0)
+    return AMTable(codes=new_codes, meta=new_meta, bits=table.bits,
+                   distance=table.distance)
+
+
+def delete(table: AMTable, rows) -> AMTable:
+    """Drop rows by (static) index, returning a new table.
+
+    Shape-changing, so not jittable — intended for host-side table
+    maintenance (cache eviction, tombstone compaction).
+    """
+    rows = jnp.asarray(rows)
+    new_codes = jnp.delete(table.codes, rows, axis=0)
+    new_meta = None if table.meta is None else jnp.delete(table.meta, rows,
+                                                          axis=0)
+    return AMTable(codes=new_codes, meta=new_meta, bits=table.bits,
+                   distance=table.distance)
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+BackendFn = Callable[[jnp.ndarray, jnp.ndarray, int, str], jnp.ndarray]
+
+_BACKENDS: dict[str, BackendFn] = {}
+DEFAULT_BACKEND = "ref"
+
+
+def register_backend(name: str, fn: BackendFn) -> None:
+    """Register (or replace) a search backend under ``name``.
+
+    ``fn(queries, codes, bits, distance)`` must return the (Q, N) distance
+    matrix under the module-level unit contract (see module docstring).
+    """
+    _BACKENDS[name] = fn
+
+
+def get_backend(name: str) -> BackendFn:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {backend_names()}"
+        ) from None
+
+
+def backend_names() -> tuple[str, ...]:
+    return tuple(_BACKENDS)
+
+
+def _resolve_backend(backend: str | BackendFn | None) -> BackendFn:
+    if backend is None:
+        return _BACKENDS[DEFAULT_BACKEND]
+    if callable(backend):
+        return backend
+    return get_backend(backend)
+
+
+def thermometer(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """(..., D) levels in [0, 2^b) -> (..., D*(2^b-1)) binary thermometer.
+
+    ``|a - b| = Hamming(therm(a), therm(b))`` — the expansion digital
+    backends share to realise the L1 distance on Hamming hardware.
+    """
     m = 1 << bits
     rungs = jnp.arange(1, m)
     out = (codes[..., None] >= rungs).astype(jnp.int32)
     return out.reshape(*codes.shape[:-1], codes.shape[-1] * (m - 1))
 
 
-@jax.jit
-def _ref_mismatch_counts(queries: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
-    """(Q, D) x (N, D) -> (Q, N) number of differing symbols."""
+def _expand_l1(queries, codes, bits, distance):
+    """Apply the thermometer trick for digital backends in L1 mode."""
+    if distance == "l1" and bits > 1:
+        return thermometer(queries, bits), thermometer(codes, bits), 1
+    return queries, codes, bits
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "distance"))
+def _ref_backend(queries, codes, bits, distance):
+    # jitted so eager callers get a fused compare-reduce instead of
+    # materialising the (Q, N, D) broadcast comparison
+    queries, codes, bits = _expand_l1(queries, codes, bits, distance)
     return jnp.sum(queries[:, None, :] != codes[None, :, :], axis=-1,
                    dtype=jnp.int32)
+
+
+def _pallas_backend(queries, codes, bits, distance):
+    from repro.kernels.cam_search import ops as cam_ops
+    queries, codes, bits = _expand_l1(queries, codes, bits, distance)
+    return cam_ops.mismatch_counts(queries, codes, bits)
+
+
+def make_analog_backend(variation_key: jax.Array | None = None,
+                        params: fefet.FeFETParams = fefet.DEFAULT) -> BackendFn:
+    """Build an analog (device-model) backend, optionally with V_TH variation.
+
+    ``"hamming"`` counts cells whose MIBO node D charged; ``"l1"`` reports the
+    graded matchline discharge current in LSB-mismatch units
+    (:func:`repro.core.mibo.lsb_mismatch_current`), the paper's analog
+    nearest-match ranking.  The default registered ``"analog"`` backend is
+    this with no variation; register a keyed instance for robustness studies::
+
+        am.register_backend("analog_mc", am.make_analog_backend(key))
+
+    Variation-keyed instances are **not shard-safe**: the noise is drawn from
+    ``codes.shape``, so under :func:`search_sharded` every bank would draw
+    the same realisation for different rows (and none would match the
+    single-device draw) — run Monte-Carlo studies through :func:`search`.
+    """
+
+    def backend(queries, codes, bits, distance):
+        from repro.core import cam_array
+        noise1 = noise2 = None
+        if variation_key is not None:
+            k1, k2 = jax.random.split(variation_key)
+            noise1 = fefet.sample_vth_variation(k1, codes.shape, params)
+            noise2 = fefet.sample_vth_variation(k2, codes.shape, params)
+        mismatch, i_ml = cam_array.analog_search_batch(
+            codes, queries, bits, noise1, noise2, params)
+        if distance == "hamming":
+            return mismatch
+        return i_ml / mibo.lsb_mismatch_current(bits, params)
+
+    return backend
+
+
+register_backend("ref", _ref_backend)
+register_backend("pallas", _pallas_backend)
+register_backend("analog", make_analog_backend())
+
+
+# ---------------------------------------------------------------------------
+# Search
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class AMSearchResult:
+    """Top-k outcome of one batched associative search (a registered pytree).
+
+    All fields are (Q, k) — or (k,) when a single 1-D query was given —
+    ordered best-first (ascending distance, ties broken by lowest row index).
+    """
+
+    indices: jnp.ndarray     # int32 row indices of the k nearest rows
+    distances: jnp.ndarray   # float32 distances (unit: binary cell mismatches)
+    exact: jnp.ndarray       # bool — distance below EXACT_MATCH_EPS
+    matched: jnp.ndarray     # bool — within `threshold` (== exact if None)
+
+    def tree_flatten(self):
+        return (self.indices, self.distances, self.exact, self.matched), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    @property
+    def best_row(self) -> jnp.ndarray:
+        """(Q,) index of the single nearest row (the legacy readout)."""
+        return self.indices[..., 0]
+
+    @property
+    def best_distance(self) -> jnp.ndarray:
+        return self.distances[..., 0]
+
+
+def _finalize(indices, distances, threshold, squeeze) -> AMSearchResult:
+    exact = distances < EXACT_MATCH_EPS
+    matched = exact if threshold is None else distances <= threshold
+    if squeeze:
+        indices, distances = indices[0], distances[0]
+        exact, matched = exact[0], matched[0]
+    return AMSearchResult(indices=indices, distances=distances, exact=exact,
+                          matched=matched)
+
+
+def _prep_queries(table: AMTable, queries) -> tuple[jnp.ndarray, bool]:
+    if table.n_rows == 0:
+        raise ValueError(
+            "cannot search an empty AMTable (0 rows) — append codes first")
+    queries = jnp.asarray(queries, jnp.int32)
+    squeeze = queries.ndim == 1
+    if squeeze:
+        queries = queries[None]
+    if queries.shape[-1] != table.width:
+        raise ValueError(
+            f"query width {queries.shape[-1]} != stored width {table.width}")
+    return queries, squeeze
+
+
+def distances(table: AMTable, queries, *,
+              backend: str | BackendFn | None = None) -> jnp.ndarray:
+    """Full (Q, N) distance matrix (backend-native dtype, contract units)."""
+    queries, squeeze = _prep_queries(table, queries)
+    d = _resolve_backend(backend)(queries, table.codes, table.bits,
+                                  table.distance)
+    return d[0] if squeeze else d
+
+
+def search(table: AMTable, queries, *, k: int = 1,
+           threshold: float | jnp.ndarray | None = None,
+           backend: str | BackendFn | None = None) -> AMSearchResult:
+    """Batched top-k / threshold associative search.
+
+    Args:
+      table: the code store; passed as a pytree, so this function is jittable
+        as a whole (``jax.jit(lambda t, q: am.search(t, q, k=4))``), vmaps
+        over query batches, and runs inside ``shard_map`` bodies.
+      queries: (Q, D) — or a single (D,) — integer symbol words.
+      k: how many nearest rows to return (static; clamped to the table size).
+      threshold: optional match radius in contract units (may be traced);
+        ``result.matched`` flags candidates with ``distance <= threshold``.
+        ``None`` means exact-match-only flags.
+      backend: registered backend name, a raw backend callable, or ``None``
+        for the module default (``"ref"``).
+
+    Returns:
+      :class:`AMSearchResult` with rows ordered best-first; ties broken by
+      lowest row index (``jax.lax.top_k`` stability), which the sharded path
+      reproduces bitwise.
+    """
+    queries, squeeze = _prep_queries(table, queries)
+    fn = _resolve_backend(backend)
+    d = fn(queries, table.codes, table.bits, table.distance)
+    d = d.astype(jnp.float32)
+    k = min(k, table.n_rows)
+    neg, idx = jax.lax.top_k(-d, k)
+    return _finalize(idx.astype(jnp.int32), -neg, threshold, squeeze)
+
+
+# ---------------------------------------------------------------------------
+# Sharded multi-bank search
+# ---------------------------------------------------------------------------
+
+def search_sharded(table: AMTable, queries, *, mesh, rules=None, k: int = 1,
+                   threshold: float | jnp.ndarray | None = None,
+                   backend: str | BackendFn | None = None) -> AMSearchResult:
+    """Row-partitioned search over the ``model`` mesh axis (multi-bank merge).
+
+    The table is split into ``mesh.shape[rules.tp]`` banks
+    (:meth:`repro.dist.specs.Rules.am_table`); each bank runs the backend on
+    its rows and keeps a local top-k with *global* row indices, then the
+    candidates are all-gathered along the axis and reduced with a second
+    top-k — the paper's multi-bank match-merge.  Queries are replicated to
+    every bank (:meth:`Rules.am_queries`).
+
+    Bitwise-identical to :func:`search` on one device: per-bank candidate
+    lists are each sorted by (distance, row index) and concatenate in
+    bank-major order, so the merge resolves ties to the lowest global row
+    index exactly like the single-device ``top_k``.  This holds for any
+    backend that is a pure row-wise function of its ``codes`` argument —
+    backends whose output depends on the table's shape or global row
+    position (e.g. :func:`make_analog_backend` with a ``variation_key``,
+    which samples noise from ``codes.shape``) are not supported here.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist import specs as dist_specs
+
+    rules = rules or dist_specs.make_rules(mesh, "tp")
+    axis = rules.tp
+    n_banks = mesh.shape[axis]
+    queries, squeeze = _prep_queries(table, queries)
+    fn = _resolve_backend(backend)
+    bits, distance_mode = table.bits, table.distance
+
+    n = table.n_rows
+    k_eff = min(k, n)
+    pad = (-n) % n_banks
+    codes = jnp.pad(table.codes, ((0, pad), (0, 0)))
+    local_n = (n + pad) // n_banks
+    k_local = min(k_eff, local_n)
+
+    def bank_body(codes_local, q):
+        d = fn(q, codes_local, bits, distance_mode).astype(jnp.float32)
+        base = jax.lax.axis_index(axis) * local_n
+        row = base + jnp.arange(local_n)
+        d = jnp.where(row[None, :] < n, d, jnp.inf)      # mask padded rows
+        neg, il = jax.lax.top_k(-d, k_local)
+        gi = (il + base).astype(jnp.int32)
+        negs = jax.lax.all_gather(neg, axis, axis=1, tiled=True)
+        gis = jax.lax.all_gather(gi, axis, axis=1, tiled=True)
+        neg2, pos = jax.lax.top_k(negs, k_eff)
+        return jnp.take_along_axis(gis, pos, axis=1), -neg2
+
+    # Outputs are replicated by construction (both come out of the all-gather
+    # merge), but 0.4.x's replication checker can't see through the
+    # gather -> top_k -> take_along_axis chain, so the check is disabled.
+    idx, dist = jax.shard_map(
+        bank_body, mesh=mesh,
+        in_specs=(rules.am_table(), rules.am_queries()),
+        out_specs=(P(None, None), P(None, None)),
+        check_vma=False)(codes, queries)
+    return _finalize(idx, dist, threshold, squeeze)
+
+
+# ---------------------------------------------------------------------------
+# Deprecated stateful shim (one release)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LegacySearchResult:
+    """Full-matrix result of the deprecated :class:`AssociativeMemory`."""
+
+    mismatch_counts: jnp.ndarray   # (Q, N) distance matrix (contract units)
+    exact_match: jnp.ndarray       # (Q, N) bool
+    best_row: jnp.ndarray          # (Q,) int32 argmin distance
+
+
+class AssociativeMemory:
+    """Deprecated stateful wrapper over :func:`make_table` / :func:`search`.
+
+    Kept for one release so downstream code migrates gradually; it rebuilds
+    nothing and hides nothing — ``write`` stores an :class:`AMTable`,
+    ``search`` returns the full distance matrix like the old class did.
+    Prefer the functional API: it jits/vmaps/shards as a unit and returns
+    top-k results instead of the O(Q*N) matrix.
+    """
+
+    def __init__(self, bits: int = 3, backend: str = "ref",
+                 distance: str = "hamming",
+                 variation_key: jax.Array | None = None):
+        warnings.warn(
+            "AssociativeMemory is deprecated; use am.make_table + am.search "
+            "(functional, jittable, top-k). It will be removed next release.",
+            DeprecationWarning, stacklevel=2)
+        if backend != "analog" and backend not in _BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}")
+        if distance not in DISTANCES:
+            raise ValueError(f"unknown distance {distance!r}")
+        self.bits = bits
+        self.backend = backend
+        self.distance = distance
+        self.variation_key = variation_key
+        self._backend_fn: BackendFn = (
+            make_analog_backend(variation_key) if backend == "analog"
+            else get_backend(backend))
+        self._table: AMTable | None = None
+
+    def write(self, codes) -> None:
+        """Store (N, D) int codes, each symbol in [0, 2**bits)."""
+        self._table = make_table(codes, bits=self.bits, distance=self.distance)
+
+    @property
+    def codes(self) -> jnp.ndarray:
+        if self._table is None:
+            raise RuntimeError("AssociativeMemory is empty — call write() first")
+        return self._table.codes
+
+    def search(self, queries) -> LegacySearchResult:
+        """Batched associative search of (Q, D) int queries."""
+        if self._table is None:
+            raise RuntimeError("AssociativeMemory is empty — call write() first")
+        queries = jnp.asarray(queries, jnp.int32)
+        if queries.ndim == 1:
+            queries = queries[None]
+        mm = distances(self._table, queries, backend=self._backend_fn)
+        exact = (mm == 0 if jnp.issubdtype(mm.dtype, jnp.integer)
+                 else mm < EXACT_MATCH_EPS)
+        return LegacySearchResult(
+            mismatch_counts=mm,
+            exact_match=exact,
+            best_row=jnp.argmin(mm, axis=-1).astype(jnp.int32),
+        )

@@ -20,7 +20,6 @@ All energies in femtojoules, latencies in picoseconds, areas in um^2.
 from __future__ import annotations
 
 import dataclasses
-import math
 
 # ---------------------------------------------------------------------------
 # Calibrated circuit constants (40 nm CMOS / 45 nm FeFET, DESTINY parasitics)

@@ -127,6 +127,17 @@ def predict_cosine_quantized(class_hvs: jnp.ndarray, hvs: jnp.ndarray,
     return jnp.argmax(_cosine(hq, cq), axis=-1)
 
 
+def class_table(model: HDCModel, *, distance: str = "l1"):
+    """The quantized class hypervectors as an :class:`repro.core.am.AMTable`.
+
+    This is literally "the model stored in the SEE-MCAM array": an immutable
+    code table over which inference is an associative search.
+    """
+    from repro.core import am  # local import, avoids cycle
+    return am.make_table(model.quantized_class_codes(),
+                         bits=model.config.bits, distance=distance)
+
+
 def predict_cam(model: HDCModel, hvs: jnp.ndarray, *, backend: str = "ref",
                 distance: str = "l1") -> jnp.ndarray:
     """SEE-MCAM associative-search prediction.
@@ -134,15 +145,25 @@ def predict_cam(model: HDCModel, hvs: jnp.ndarray, *, backend: str = "ref",
     The class codes live in the MCAM rows; each quantized query is searched
     in parallel and the best-matching row wins.  ``distance="l1"`` is the
     analog ML-discharge ranking (mismatch current grows with level distance,
-    see AssociativeMemory) — the scheme the paper's HDC benchmarking uses;
+    see :mod:`repro.core.am`) — the scheme the paper's HDC benchmarking uses;
     ``distance="hamming"`` is strict digital symbol-mismatch counting.
-    ``backend``: "ref" (pure jnp) or "pallas" (MXU one-hot Gram kernel).
+    ``backend``: any name registered with ``am.register_backend`` ("ref",
+    "pallas", "analog") or a raw backend callable.
     """
-    from repro.core.am import AssociativeMemory  # local import, avoids cycle
-    am = AssociativeMemory(bits=model.config.bits, backend=backend,
-                           distance=distance)
-    am.write(model.quantized_class_codes())
-    return am.search(model.quantize_queries(hvs)).best_row
+    from repro.core import am  # local import, avoids cycle
+    table = class_table(model, distance=distance)
+    return am.search(table, model.quantize_queries(hvs),
+                     backend=backend).best_row
+
+
+def predict_cam_topk(model: HDCModel, hvs: jnp.ndarray, k: int, *,
+                     backend: str = "ref", distance: str = "l1"):
+    """Top-k class candidates per query (an :class:`am.AMSearchResult`) —
+    the retrieval view of HDC inference (nearest-neighbor search over class
+    codes) the multi-bank scaling path serves."""
+    from repro.core import am  # local import, avoids cycle
+    table = class_table(model, distance=distance)
+    return am.search(table, model.quantize_queries(hvs), k=k, backend=backend)
 
 
 def accuracy(pred: jnp.ndarray, labels: jnp.ndarray) -> float:

@@ -100,3 +100,20 @@ def mibo_d_voltage(values: jnp.ndarray, queries: jnp.ndarray, bits: int,
 def mibo_xor(values: jnp.ndarray, queries: jnp.ndarray, bits: int) -> jnp.ndarray:
     """Boolean MIBO XOR output: True = MISMATCH (D high), False = MATCH (D low)."""
     return mibo_current(values, queries, bits) > I_D_THRESHOLD
+
+
+def lsb_mismatch_current(bits: int, params: FeFETParams = DEFAULT) -> jnp.ndarray:
+    """Pull-up current (A) of a single cell mismatching by exactly ONE level.
+
+    This is the natural current unit of the analog associative ranking: the
+    conducting FeFET of a distance-1 mismatch sees a gate overdrive of half a
+    V_TH rung, so its current is ``i_on * (1 + overdrive_slope * step / 2)`` —
+    derived here *through the device model* rather than hard-coded, so any
+    :class:`~repro.core.fefet.FeFETParams` override (``overdrive_slope``,
+    ladder range, ...) propagates.  Dividing a matchline discharge current by
+    this unit expresses it in "LSB mismatches": an exact match lands at
+    ``~C * i_off / i_lsb << 0.5`` while the smallest physical mismatch lands
+    at ``~1.0``, which is what makes ``distance < 0.5`` a principled analog
+    exact-match threshold.
+    """
+    return mibo_current(jnp.int32(0), jnp.int32(1), bits, params=params)

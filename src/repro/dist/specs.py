@@ -24,6 +24,8 @@ Specs factories (shapes they describe):
   ``w2_row``         (d_in, d_out) row-parallel 2-D weight
   ``embed``          (V, D)        embedding table (vocab on tp, D on fsdp)
   ``logits``         (B, S, V)     output logits
+  ``am_table``       (N, D)        associative-memory code rows banked on tp
+  ``am_queries``     (Q, D)        associative-search queries (replicated)
 
 ``make_rules`` binds a mesh: it picks the batch (data-parallel) axes from
 whatever subset of ``("pod", "data")`` the mesh has AND divides the global
@@ -108,6 +110,21 @@ class Rules:
         """(V, D) embedding table; V is 256-padded so it divides the TP width
         (and its transpose serves as the tied LM head)."""
         return P(self.tp, self.fsdp)
+
+    # -- associative memory (repro.core.am) ----------------------------------
+
+    def am_table(self) -> P:
+        """(N, D) associative-memory code table: rows banked over tp.
+
+        The SEE-MCAM multi-bank organisation — each tp shard holds a bank of
+        rows and searches it locally; :func:`repro.core.am.search_sharded`
+        merges per-bank top-k candidates with an all-gather along this axis.
+        """
+        return P(self.tp, None)
+
+    def am_queries(self) -> P:
+        """(Q, D) search queries: replicated to every bank."""
+        return P(None, None)
 
     # -- outputs -------------------------------------------------------------
 

@@ -2,7 +2,19 @@
 
 Handles padding to TPU-aligned block multiples, dtype normalisation, backend
 selection (interpret on CPU / compiled on TPU), and derived outputs
-(exact-match flags, best-row readout).
+(exact-match flags, top-k / best-row readout).
+
+Distance-unit contract
+----------------------
+This module backs the ``"pallas"`` backend of :mod:`repro.core.am` and must
+honour its unit contract: :func:`mismatch_counts` returns the **exact integer
+number of differing symbol positions** between each (query, stored) word pair
+— zero iff the words are equal, at most D.  The one-hot Gram formulation
+guarantees this bit-precisely (match counts are sums of 0/1 products
+accumulated in f32, exact for any D < 2**24), so the ``am`` layer's
+``threshold`` and ``EXACT_MATCH_EPS`` semantics hold without slack.  L1
+(level-distance) search is realised *above* this wrapper by thermometer
+expansion; the kernel itself only ever counts symbol mismatches.
 """
 
 from __future__ import annotations
@@ -70,3 +82,18 @@ def best_row(queries: jnp.ndarray, table: jnp.ndarray, bits: int = 3,
     """(Q,) int32 nearest-row readout (analog ML-discharge ranking)."""
     return jnp.argmin(mismatch_counts(queries, table, bits, interpret),
                       axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bits", "interpret"))
+def topk(queries: jnp.ndarray, table: jnp.ndarray, k: int = 1, bits: int = 3,
+         interpret: bool | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """k nearest rows per query: ((Q, k) int32 indices, (Q, k) int32 counts).
+
+    ``jax.lax.top_k`` over the negated mismatch matrix — rows ordered by
+    ascending mismatch count, ties broken by lowest row index (the same
+    ordering the sharded multi-bank merge in :mod:`repro.core.am`
+    reproduces).  ``k`` is clamped to the table size.
+    """
+    mm = mismatch_counts(queries, table, bits, interpret)
+    neg, idx = jax.lax.top_k(-mm, min(k, table.shape[0]))
+    return idx.astype(jnp.int32), -neg

@@ -8,12 +8,10 @@ tree structure, consumed by the launcher's in_shardings.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.dist.specs import Rules
 

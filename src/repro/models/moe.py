@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelCfg
-from repro.dist.specs import Rules, constrain
+from repro.dist.specs import Rules
 from repro.models import layers
 
 

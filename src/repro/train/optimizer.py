@@ -12,7 +12,6 @@ hierarchical compressed cross-pod all-reduce in train_step.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax

@@ -1,0 +1,322 @@
+"""Functional `repro.core.am` API: AMTable pytree, top-k/threshold search,
+backend registry, jit/vmap transparency, and the deprecated shim.
+
+The sharded multi-bank path has its own 8-fake-device subprocess test in
+``tests/test_am_sharded.py``.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import am, fefet, mibo
+from repro.kernels.cam_search import ops as cam_ops
+
+
+def _case(seed, n, q, d, levels=8):
+    kt, kq = jax.random.split(jax.random.PRNGKey(seed))
+    codes = jax.random.randint(kt, (n, d), 0, levels)
+    queries = jax.random.randint(kq, (q, d), 0, levels)
+    return codes, queries
+
+
+def _np_topk(dist, k):
+    """Reference top-k: ascending distance, ties to the lowest row index."""
+    idx = np.argsort(dist, axis=-1, kind="stable")[:, :k]
+    return idx, np.take_along_axis(dist, idx, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# AMTable: immutability + functional updates + pytree registration
+# ---------------------------------------------------------------------------
+
+def test_table_functional_updates():
+    codes, _ = _case(0, 10, 1, 6)
+    t = am.make_table(codes, bits=3)
+    t2 = am.append(t, codes[:4])
+    t3 = am.delete(t2, [0, 1])
+    t4 = am.write(t3, codes)
+    assert (t.n_rows, t2.n_rows, t3.n_rows, t4.n_rows) == (10, 14, 12, 10)
+    # originals untouched (pure updates)
+    np.testing.assert_array_equal(np.asarray(t.codes), np.asarray(codes))
+    np.testing.assert_array_equal(np.asarray(t3.codes),
+                                  np.asarray(jnp.concatenate(
+                                      [codes[2:], codes[:4]])))
+    with pytest.raises(Exception):
+        t.codes = codes  # frozen dataclass
+
+
+def test_table_meta_rides_along():
+    codes, _ = _case(1, 5, 1, 4)
+    t = am.make_table(codes, bits=2, meta=jnp.arange(5))
+    t = am.append(t, codes[:2], meta=jnp.array([50, 60]))
+    t = am.delete(t, [1])
+    np.testing.assert_array_equal(np.asarray(t.meta), [0, 2, 3, 4, 50, 60])
+    with pytest.raises(ValueError):
+        am.append(t, codes[:1])          # meta presence must match
+    with pytest.raises(ValueError):
+        am.append(t, codes[:2], meta=jnp.arange(5))   # meta length must match
+    with pytest.raises(ValueError):
+        am.make_table(codes, meta=jnp.arange(4))
+
+
+def test_search_empty_table_rejected():
+    empty = am.make_table(jnp.zeros((0, 8), jnp.int32), bits=3)
+    with pytest.raises(ValueError, match="empty"):
+        am.search(empty, jnp.zeros((2, 8), jnp.int32))
+
+
+def test_table_is_pytree_with_static_aux():
+    codes, _ = _case(2, 6, 1, 5)
+    t = am.make_table(codes, bits=2, distance="l1")
+    leaves, treedef = jax.tree_util.tree_flatten(t)
+    t2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert t2.bits == 2 and t2.distance == "l1"
+    np.testing.assert_array_equal(np.asarray(t2.codes), np.asarray(t.codes))
+    # aux (bits, distance) is static: jit specialises on it through the table
+    doubled = jax.jit(lambda tt: jax.tree_util.tree_map(lambda x: x + 1, tt))(t)
+    assert doubled.distance == "l1"
+
+
+def test_make_table_validation():
+    with pytest.raises(ValueError):
+        am.make_table(jnp.zeros((4,), jnp.int32))
+    with pytest.raises(ValueError):
+        am.make_table(jnp.zeros((4, 2), jnp.int32), distance="cosine")
+
+
+# ---------------------------------------------------------------------------
+# search: top-k / threshold semantics vs a numpy oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 30), q=st.integers(1, 8), d=st.integers(1, 40),
+       k=st.integers(1, 6), seed=st.integers(0, 2**31 - 1))
+def test_search_topk_matches_numpy(n, q, d, k, seed):
+    codes, queries = _case(seed, n, q, d)
+    t = am.make_table(codes, bits=3)
+    r = am.search(t, queries, k=k)
+    dist = np.sum(np.asarray(queries)[:, None] != np.asarray(codes)[None], -1)
+    want_idx, want_d = _np_topk(dist, min(k, n))
+    np.testing.assert_array_equal(np.asarray(r.indices), want_idx)
+    np.testing.assert_array_equal(np.asarray(r.distances), want_d)
+    np.testing.assert_array_equal(np.asarray(r.exact), want_d == 0)
+    np.testing.assert_array_equal(np.asarray(r.matched), want_d == 0)
+    np.testing.assert_array_equal(np.asarray(r.best_row), want_idx[:, 0])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), thr=st.integers(0, 12))
+def test_search_threshold_semantics(seed, thr):
+    codes, queries = _case(seed, 25, 6, 16)
+    t = am.make_table(codes, bits=3)
+    r = am.search(t, queries, k=4, threshold=thr)
+    np.testing.assert_array_equal(np.asarray(r.matched),
+                                  np.asarray(r.distances) <= thr)
+    # threshold only changes flags, never the ranking
+    r0 = am.search(t, queries, k=4)
+    np.testing.assert_array_equal(np.asarray(r.indices), np.asarray(r0.indices))
+
+
+def test_search_single_query_squeezes():
+    codes, queries = _case(3, 12, 1, 8)
+    r = am.search(am.make_table(codes, bits=3), queries[0], k=3)
+    assert r.indices.shape == (3,) and r.distances.shape == (3,)
+    assert r.best_row.ndim == 0
+
+
+def test_search_k_clamped_to_rows():
+    codes, queries = _case(4, 5, 2, 8)
+    r = am.search(am.make_table(codes, bits=3), queries, k=99)
+    assert r.indices.shape == (2, 5)
+
+
+# ---------------------------------------------------------------------------
+# backend agreement (the satellite checklist: exact-match and k=1 across
+# ref / pallas / analog; full-distance agreement where the contract is exact)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.integers(1, 3))
+def test_backends_agree_hamming(seed, bits):
+    codes, queries = _case(seed, 18, 5, 12, levels=1 << bits)
+    t = am.make_table(codes, bits=bits)
+    base = am.search(t, queries, k=1)
+    for backend in ("pallas", "analog"):
+        r = am.search(t, queries, k=1, backend=backend)
+        np.testing.assert_array_equal(np.asarray(r.best_row),
+                                      np.asarray(base.best_row))
+        np.testing.assert_array_equal(np.asarray(r.distances),
+                                      np.asarray(base.distances))
+        np.testing.assert_array_equal(np.asarray(r.exact),
+                                      np.asarray(base.exact))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_backends_agree_l1_digital(seed):
+    codes, queries = _case(seed, 15, 4, 10)
+    t = am.make_table(codes, bits=3, distance="l1")
+    r_ref = am.search(t, queries, k=3)
+    r_pal = am.search(t, queries, k=3, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(r_ref.indices),
+                                  np.asarray(r_pal.indices))
+    np.testing.assert_array_equal(np.asarray(r_ref.distances),
+                                  np.asarray(r_pal.distances))
+
+
+def test_analog_l1_exact_match_and_lsb_unit():
+    """The analog exact threshold is principled: stored words land far below
+    EXACT_MATCH_EPS and a single one-level mismatch lands at ~1.0 LSB."""
+    codes, _ = _case(5, 10, 1, 16)
+    t = am.make_table(codes, bits=3, distance="l1")
+    r = am.search(t, codes, k=1, backend="analog")
+    assert bool(r.exact.all())
+    assert float(jnp.max(r.distances)) < 0.1 * am.EXACT_MATCH_EPS
+    one_off = codes[0].at[3].set((codes[0][3] + 1) % 8)
+    r1 = am.search(t, one_off, k=1, backend="analog")
+    assert not bool(r1.exact[0])
+    assert 0.8 < float(r1.distances[0]) < 1.2
+    # the unit really is the model's LSB-mismatch current, not a magic scale:
+    # i_on * (1 + overdrive_slope * half_rung), modulo the logistic turn-on
+    # still being a few percent short of full-on at half-rung overdrive
+    lsb = float(mibo.lsb_mismatch_current(3))
+    want = float(fefet.I_ON) * (1 + fefet.OVERDRIVE_SLOPE
+                                * (fefet.VTH_MAX - fefet.VTH_MIN) / 7 / 2)
+    assert abs(lsb - want) / want < 0.10
+
+
+def test_analog_backend_batches_queries():
+    """The analog path is one vectorised call — a (Q, R, C) current tensor —
+    and agrees with the digital oracle for every query in the batch."""
+    codes, queries = _case(6, 12, 9, 14)
+    t = am.make_table(codes, bits=3)
+    d_analog = np.asarray(am.distances(t, queries, backend="analog"))
+    d_ref = np.asarray(am.distances(t, queries, backend="ref"))
+    np.testing.assert_array_equal(d_analog, d_ref)
+
+
+def test_analog_variation_backend_still_finds_exact_rows():
+    codes, _ = _case(7, 8, 1, 12)
+    t = am.make_table(codes, bits=3)
+    noisy = am.make_analog_backend(variation_key=jax.random.PRNGKey(11))
+    r = am.search(t, codes, k=1, backend=noisy)
+    np.testing.assert_array_equal(np.asarray(r.best_row), np.arange(8))
+
+
+# ---------------------------------------------------------------------------
+# backend registry
+# ---------------------------------------------------------------------------
+
+def test_registry_dispatch_and_errors():
+    assert set(am.backend_names()) >= {"ref", "pallas", "analog"}
+    calls = []
+
+    def fake(queries, codes, bits, distance):
+        calls.append((bits, distance))
+        return jnp.zeros((queries.shape[0], codes.shape[0]), jnp.int32)
+
+    am.register_backend("fake", fake)
+    try:
+        codes, queries = _case(8, 4, 2, 6)
+        r = am.search(am.make_table(codes, bits=2, distance="l1"), queries,
+                      backend="fake")
+        assert calls == [(2, "l1")]
+        assert bool(r.exact.all())
+    finally:
+        am._BACKENDS.pop("fake")
+    with pytest.raises(ValueError):
+        am.get_backend("no_such_backend")
+    # a raw callable is accepted directly, bypassing the registry
+    r = am.search(am.make_table(codes, bits=2), queries, backend=fake)
+    assert bool(r.exact.all())
+
+
+# ---------------------------------------------------------------------------
+# jit / vmap transparency (the tentpole acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_search_jits_whole_with_table_argument():
+    codes, queries = _case(9, 20, 6, 10)
+    t = am.make_table(codes, bits=3)
+    f = jax.jit(lambda tt, qq, thr: am.search(tt, qq, k=3, threshold=thr))
+    r = f(t, queries, 2.0)
+    r0 = am.search(t, queries, k=3, threshold=2.0)
+    for a, b in zip(jax.tree_util.tree_leaves(r), jax.tree_util.tree_leaves(r0)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # a table with different static aux retraces, different rows just reshapes
+    t_l1 = am.make_table(codes, bits=3, distance="l1")
+    r_l1 = f(t_l1, queries, 2.0)
+    assert not np.array_equal(np.asarray(r_l1.distances), np.asarray(r.distances))
+
+
+def test_search_vmaps_over_query_batches():
+    codes, queries = _case(10, 16, 6, 8)
+    t = am.make_table(codes, bits=3)
+    batched = queries.reshape(3, 2, 8)
+    rv = jax.vmap(lambda q: am.search(t, q, k=2))(batched)
+    r = am.search(t, queries, k=2)
+    np.testing.assert_array_equal(np.asarray(rv.indices).reshape(6, 2),
+                                  np.asarray(r.indices))
+
+
+def test_result_is_pytree():
+    codes, queries = _case(11, 8, 3, 6)
+    r = am.search(am.make_table(codes, bits=3), queries, k=2)
+    leaves, treedef = jax.tree_util.tree_flatten(r)
+    assert len(leaves) == 4
+    r2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    np.testing.assert_array_equal(np.asarray(r2.indices), np.asarray(r.indices))
+
+
+# ---------------------------------------------------------------------------
+# kernel wrapper top-k
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 40), q=st.integers(1, 8), d=st.integers(1, 80),
+       k=st.integers(1, 5), seed=st.integers(0, 2**31 - 1))
+def test_ops_topk_matches_numpy(n, q, d, k, seed):
+    codes, queries = _case(seed, n, q, d)
+    idx, cnt = cam_ops.topk(queries, codes, k=k, bits=3)
+    dist = np.sum(np.asarray(queries)[:, None] != np.asarray(codes)[None], -1)
+    want_idx, want_d = _np_topk(dist, min(k, n))
+    np.testing.assert_array_equal(np.asarray(idx), want_idx)
+    np.testing.assert_array_equal(np.asarray(cnt), want_d)
+
+
+# ---------------------------------------------------------------------------
+# deprecated shim: one release of source compatibility
+# ---------------------------------------------------------------------------
+
+def test_shim_warns_and_matches_functional_api():
+    codes, queries = _case(12, 14, 4, 9)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        mem = am.AssociativeMemory(bits=3, backend="pallas")
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    mem.write(codes)
+    legacy = mem.search(queries)
+    t = am.make_table(codes, bits=3)
+    np.testing.assert_array_equal(
+        np.asarray(legacy.mismatch_counts),
+        np.asarray(am.distances(t, queries, backend="pallas")))
+    np.testing.assert_array_equal(
+        np.asarray(legacy.best_row),
+        np.asarray(am.search(t, queries, backend="pallas").best_row))
+
+
+def test_shim_rejects_unknown_backend_and_empty_reads():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with pytest.raises(ValueError):
+            am.AssociativeMemory(backend="cuda")
+        mem = am.AssociativeMemory()
+    with pytest.raises(RuntimeError):
+        _ = mem.codes
+    with pytest.raises(RuntimeError):
+        mem.search(jnp.zeros((1, 4), jnp.int32))

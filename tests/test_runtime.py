@@ -8,8 +8,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.checkpoint.fault_tolerance import (FaultTolerantLoop,
-                                              StragglerMonitor)
+from repro.checkpoint.fault_tolerance import StragglerMonitor
 from repro.configs.registry import get_config
 from repro.data import lm_synth
 from repro.dist.specs import make_rules
@@ -17,7 +16,6 @@ from repro.launch.mesh import make_test_mesh
 from repro.launch.train import train
 from repro.models import transformer
 from repro.train import optimizer as opt
-from repro.train import train_step as ts
 
 
 def test_optimizer_reduces_quadratic():
@@ -146,7 +144,6 @@ def test_straggler_monitor_flags_outliers():
 def test_elastic_restore_between_mesh_shapes(tmp_path):
     """Save under one sharding, restore under another mesh layout."""
     from repro.checkpoint.elastic import reshard_restore
-    from jax.sharding import PartitionSpec as P
 
     mesh1 = make_test_mesh((1, 1), ("data", "model"))
     cfg = get_config("yi_6b", smoke=True)

@@ -5,7 +5,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config
-from repro.dist.specs import make_rules
 from repro.launch.mesh import make_test_mesh
 from repro.models import transformer
 from repro.serve.engine import Engine

@@ -7,9 +7,7 @@ AssociativeMemory backends, plus the paper's headline claims as assertions.
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import energy, hdc
 from repro.data import hdc_data
