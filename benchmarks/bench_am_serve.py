@@ -1,0 +1,99 @@
+"""AMService under a Zipfian lookup workload: hit-rate + latency vs capacity.
+
+The serving claim behind the paper's headline numbers is that an associative
+cache in front of a model absorbs skewed traffic.  This benchmark streams a
+Zipf(s)-distributed key workload through a capacity-bounded LRU table
+(misses are appended, like a response cache) and reports, per capacity:
+
+  * hit-rate once the cache is warm;
+  * p50 / p99 single-lookup latency (submit + flush + readback, the full
+    service path — NOT a bare ``am.search`` call);
+  * micro-batched throughput (``--batch`` lookups coalesced per flush).
+
+  PYTHONPATH=src:. python benchmarks/bench_am_serve.py
+  PYTHONPATH=src:. python benchmarks/bench_am_serve.py --smoke    # CI guard
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.serve.am_service import AMService
+
+
+def zipf_probs(population: int, s: float) -> np.ndarray:
+    ranks = np.arange(1, population + 1, dtype=np.float64)
+    p = ranks ** -s
+    return p / p.sum()
+
+
+def run(smoke: bool = False, *, capacities=None, population: int = 2048,
+        requests: int = 20_000, dim: int = 64, zipf_s: float = 1.1,
+        batch: int = 64, backend: str = "ref", policy: str = "lru",
+        ttl: float | None = None) -> None:
+    if smoke:
+        capacities = capacities or (16, 32)
+        population, requests, batch = 128, 400, 16
+    else:
+        capacities = capacities or (64, 256, 1024)
+    rng = np.random.default_rng(0)
+    codes = rng.integers(0, 8, (population, dim)).astype(np.int32)
+    probs = zipf_probs(population, zipf_s)
+    workload = rng.choice(population, size=requests, p=probs)
+
+    for capacity in capacities:
+        svc = AMService(max_batch=batch)
+        svc.create_table("kv", width=dim, bits=3, capacity=capacity,
+                         policy=policy, ttl=ttl, backend=backend)
+        warm = requests // 4           # hit-rate measured after warmup only
+        hits = 0
+        lat_us: list[float] = []
+        for step, pid in enumerate(workload):
+            t0 = time.perf_counter()
+            resp = svc.lookup("kv", codes[pid])
+            lat_us.append(1e6 * (time.perf_counter() - t0))
+            if resp.hit:
+                hits += step >= warm
+            else:
+                svc.append("kv", codes[pid], values=[int(pid)])
+        hit_rate = hits / max(1, requests - warm)
+
+        # micro-batched regime: `batch` coalesced lookups per flush
+        n_flushes = 20 if not smoke else 4
+        for pid in workload[:batch]:   # warm the batch-bucket compile
+            svc.submit("kv", codes[pid])
+        svc.flush()
+        t0 = time.perf_counter()
+        for i in range(n_flushes):
+            futs = [svc.submit("kv", codes[pid])
+                    for pid in workload[i * batch:(i + 1) * batch]]
+            svc.flush()
+            for fut in futs:
+                fut.result()
+        batched_us = 1e6 * (time.perf_counter() - t0) / (n_flushes * batch)
+
+        stats = svc.stats()
+        tstats = stats["tables"]["kv"]
+        assert tstats["rows"] <= capacity, "capacity bound violated"
+        p50, p99 = np.percentile(lat_us, [50, 99])
+        emit(f"am_serve_cap{capacity}", p50,
+             f"hit_rate={hit_rate:.3f};p99_us={p99:.0f};"
+             f"batched_us_per_lookup={batched_us:.1f};"
+             f"evicted={tstats['evicted']};"
+             f"compilations={stats['compilations']};"
+             f"readbacks={stats['readbacks']}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload + capacities (CI guard)")
+    ap.add_argument("--backend", default="ref")
+    ap.add_argument("--batch", type=int, default=64)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, backend=args.backend, batch=args.batch)

@@ -1,9 +1,13 @@
-"""Serving with a SEE-MCAM associative response cache.
+"""Serving with a SEE-MCAM associative response cache (an AMService client).
 
 The paper's CAM is an *associative memory for ML inference*; here it fronts
 an LM serving engine as an exact-match semantic cache: prompts are HDC-encoded
 and Z-score-quantized into 3-bit codes (the paper's quantized-HDC scheme); a
 CAM exact-match hit returns the cached generation and skips the model.
+
+The cache itself is ~15 lines: all table lifecycle, batching, eviction and
+the single-readback response path live in :class:`repro.serve.AMService` —
+this file only encodes prompts and wires hit/miss.
 
   PYTHONPATH=src python examples/serve_am_cache.py
 """
@@ -15,44 +19,43 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config
-from repro.core import am, quantize
+from repro.core import hdc
 from repro.launch.mesh import make_test_mesh
 from repro.models import transformer
+from repro.serve import AMService
 from repro.serve.engine import Engine
 
 DIM = 256          # hypervector width of the cache key
 BITS = 3
+CAPACITY = 64      # LRU-bounded: old generations age out under load
 
 
 class AMCache:
-    """Exact-match associative cache keyed by quantized HDC codes.
+    """Exact-match response cache: a thin client of :class:`AMService`.
 
-    Holds ONE immutable :class:`am.AMTable` and appends a row per insert —
-    no key-table rebuild on lookup; the search itself is the pure, jittable
-    ``am.search`` with exact-match (distance-0) semantics.
+    One named LRU table keyed by quantized HDC codes; generations ride along
+    as row payloads and come back on exact hits in the service's single
+    per-batch readback (no per-query host syncs).
     """
 
     def __init__(self, vocab: int):
-        self.proj = jax.random.normal(jax.random.PRNGKey(9), (vocab, DIM))
-        self.table = am.make_table(jnp.zeros((0, DIM), jnp.int32), bits=BITS)
-        self.values: list[np.ndarray] = []
+        self.proj = hdc.token_key_projection(vocab, DIM)
+        self.svc = AMService()
+        self.svc.create_table("responses", width=DIM, bits=BITS,
+                              capacity=CAPACITY, policy="lru",
+                              backend="pallas")
 
-    def _encode(self, prompt: jnp.ndarray) -> jnp.ndarray:
+    def _encode(self, prompt: jnp.ndarray) -> np.ndarray:
         # bag-of-tokens HDC encoding of the prompt, Z-score quantized
-        hv = jnp.sum(self.proj[prompt], axis=0)
-        return quantize.quantize(hv, BITS)
+        return np.asarray(hdc.prompt_key(self.proj, prompt, BITS))
 
     def lookup(self, prompt: jnp.ndarray):
-        if self.table.n_rows == 0:
-            return None
-        res = am.search(self.table, self._encode(prompt), backend="pallas")
-        if bool(res.exact[0]):
-            return self.values[int(res.best_row)]
-        return None
+        resp = self.svc.lookup("responses", self._encode(prompt))
+        return resp.value if resp.hit else None
 
     def insert(self, prompt: jnp.ndarray, generation: np.ndarray):
-        self.table = am.append(self.table, self._encode(prompt))
-        self.values.append(generation)
+        self.svc.append("responses", self._encode(prompt),
+                        values=[generation])
 
 
 def main():
@@ -81,8 +84,12 @@ def main():
         print(f"req{i}: MISS     {1e3 * (time.time() - t0):7.1f} ms "
               f"-> {gen[:8]}")
 
-    print(f"\n{hits}/{len(workload)} requests served from the SEE-MCAM cache")
+    stats = cache.svc.stats("responses")
+    print(f"\n{hits}/{len(workload)} requests served from the SEE-MCAM cache "
+          f"({stats['rows']}/{stats['capacity']} rows, "
+          f"{stats['evicted']} evicted)")
     assert hits == 3
+    assert stats["hits"] == 3 and stats["lookups"] == len(workload)
 
 
 if __name__ == "__main__":

@@ -48,11 +48,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import fefet, mibo
 
@@ -147,17 +147,68 @@ def append(table: AMTable, codes, meta=None) -> AMTable:
 
 
 def delete(table: AMTable, rows) -> AMTable:
-    """Drop rows by (static) index, returning a new table.
+    """Drop rows by (static) index — or by boolean eviction mask —
+    returning a new table.
 
+    ``rows`` is either an integer index array or an (N,) boolean mask where
+    ``True`` marks rows to remove (the eviction-mask path: policies compute
+    a kill mask over ``meta`` timestamps and delete in one call).
     Shape-changing, so not jittable — intended for host-side table
     maintenance (cache eviction, tombstone compaction).
     """
-    rows = jnp.asarray(rows)
+    rows = np.asarray(rows)
+    if rows.dtype == np.bool_:
+        if rows.shape != (table.n_rows,):
+            raise ValueError(
+                f"boolean delete mask shape {rows.shape} != rows "
+                f"({table.n_rows},)")
+        rows = np.flatnonzero(rows)
     new_codes = jnp.delete(table.codes, rows, axis=0)
     new_meta = None if table.meta is None else jnp.delete(table.meta, rows,
                                                           axis=0)
     return AMTable(codes=new_codes, meta=new_meta, bits=table.bits,
                    distance=table.distance)
+
+
+# ---------------------------------------------------------------------------
+# Serving meta: per-row timestamps for eviction policies
+# ---------------------------------------------------------------------------
+#
+# ``repro.serve.am_service`` stores tables whose ``meta`` is an (N, 2) float32
+# array of timestamps — column META_INSERT is the insert time, column
+# META_LAST_HIT the last exact-hit time.  LRU eviction orders rows by
+# META_LAST_HIT, TTL expiry by ``now - META_INSERT``.  The helpers below are
+# the only code that knows the column layout.
+
+#: ``meta[:, META_INSERT]`` — when the row was appended.
+META_INSERT = 0
+#: ``meta[:, META_LAST_HIT]`` — when the row last matched exactly.
+META_LAST_HIT = 1
+
+
+def serving_meta(n: int, now) -> jnp.ndarray:
+    """(n, 2) float32 timestamp meta for freshly inserted rows.
+
+    Both columns start at ``now``: a row that has never been hit is exactly
+    as recently-used as its insertion time.
+    """
+    return jnp.full((n, 2), now, jnp.float32)
+
+
+def touch(table: AMTable, rows, now) -> AMTable:
+    """Set the last-hit timestamp of ``rows`` to ``now`` (pure, jittable).
+
+    ``rows`` may be traced; out-of-range indices are dropped, so callers can
+    pass ``table.n_rows`` as a "no row" sentinel for queries that missed —
+    the scatter then updates exactly the rows that hit, inside the same
+    compiled search dispatch (no host round-trip to maintain LRU order).
+    """
+    if table.meta is None:
+        raise ValueError("touch() needs a table with (N, 2) timestamp meta — "
+                         "build it with meta=serving_meta(n, now)")
+    meta = table.meta.at[rows, META_LAST_HIT].set(
+        jnp.asarray(now, jnp.float32), mode="drop")
+    return dataclasses.replace(table, meta=meta)
 
 
 # ---------------------------------------------------------------------------
@@ -344,7 +395,8 @@ def distances(table: AMTable, queries, *,
 
 def search(table: AMTable, queries, *, k: int = 1,
            threshold: float | jnp.ndarray | None = None,
-           backend: str | BackendFn | None = None) -> AMSearchResult:
+           backend: str | BackendFn | None = None,
+           valid_rows: int | jnp.ndarray | None = None) -> AMSearchResult:
     """Batched top-k / threshold associative search.
 
     Args:
@@ -358,6 +410,12 @@ def search(table: AMTable, queries, *, k: int = 1,
         ``None`` means exact-match-only flags.
       backend: registered backend name, a raw backend callable, or ``None``
         for the module default (``"ref"``).
+      valid_rows: optional (possibly traced) count of live rows — rows at
+        index >= ``valid_rows`` get distance ``+inf`` and can never rank.
+        Lets a fixed-capacity table slab (``repro.serve.am_service``) vary
+        its fill level without changing compiled shapes; when fewer than
+        ``k`` rows are live, the surplus entries come back with ``+inf``
+        distance and ``exact``/``matched`` False.
 
     Returns:
       :class:`AMSearchResult` with rows ordered best-first; ties broken by
@@ -368,6 +426,9 @@ def search(table: AMTable, queries, *, k: int = 1,
     fn = _resolve_backend(backend)
     d = fn(queries, table.codes, table.bits, table.distance)
     d = d.astype(jnp.float32)
+    if valid_rows is not None:
+        rows = jnp.arange(table.n_rows)
+        d = jnp.where(rows[None, :] < valid_rows, d, jnp.inf)
     k = min(k, table.n_rows)
     neg, idx = jax.lax.top_k(-d, k)
     return _finalize(idx.astype(jnp.int32), -neg, threshold, squeeze)
@@ -379,7 +440,9 @@ def search(table: AMTable, queries, *, k: int = 1,
 
 def search_sharded(table: AMTable, queries, *, mesh, rules=None, k: int = 1,
                    threshold: float | jnp.ndarray | None = None,
-                   backend: str | BackendFn | None = None) -> AMSearchResult:
+                   backend: str | BackendFn | None = None,
+                   valid_rows: int | jnp.ndarray | None = None
+                   ) -> AMSearchResult:
     """Row-partitioned search over the ``model`` mesh axis (multi-bank merge).
 
     The table is split into ``mesh.shape[rules.tp]`` banks
@@ -397,6 +460,10 @@ def search_sharded(table: AMTable, queries, *, mesh, rules=None, k: int = 1,
     backends whose output depends on the table's shape or global row
     position (e.g. :func:`make_analog_backend` with a ``variation_key``,
     which samples noise from ``codes.shape``) are not supported here.
+
+    ``valid_rows`` has :func:`search` semantics: rows at index >=
+    ``valid_rows`` are masked to ``+inf`` in every bank (the capacity-slab
+    serving path routes here unchanged when the service holds a mesh).
     """
     from jax.sharding import PartitionSpec as P
 
@@ -415,12 +482,13 @@ def search_sharded(table: AMTable, queries, *, mesh, rules=None, k: int = 1,
     codes = jnp.pad(table.codes, ((0, pad), (0, 0)))
     local_n = (n + pad) // n_banks
     k_local = min(k_eff, local_n)
+    vr = jnp.asarray(n if valid_rows is None else valid_rows, jnp.int32)
 
-    def bank_body(codes_local, q):
+    def bank_body(codes_local, q, vr):
         d = fn(q, codes_local, bits, distance_mode).astype(jnp.float32)
         base = jax.lax.axis_index(axis) * local_n
         row = base + jnp.arange(local_n)
-        d = jnp.where(row[None, :] < n, d, jnp.inf)      # mask padded rows
+        d = jnp.where(row[None, :] < vr, d, jnp.inf)     # mask dead/pad rows
         neg, il = jax.lax.top_k(-d, k_local)
         gi = (il + base).astype(jnp.int32)
         negs = jax.lax.all_gather(neg, axis, axis=1, tiled=True)
@@ -433,77 +501,7 @@ def search_sharded(table: AMTable, queries, *, mesh, rules=None, k: int = 1,
     # gather -> top_k -> take_along_axis chain, so the check is disabled.
     idx, dist = jax.shard_map(
         bank_body, mesh=mesh,
-        in_specs=(rules.am_table(), rules.am_queries()),
+        in_specs=(rules.am_table(), rules.am_queries(), P()),
         out_specs=(P(None, None), P(None, None)),
-        check_vma=False)(codes, queries)
+        check_vma=False)(codes, queries, vr)
     return _finalize(idx, dist, threshold, squeeze)
-
-
-# ---------------------------------------------------------------------------
-# Deprecated stateful shim (one release)
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class LegacySearchResult:
-    """Full-matrix result of the deprecated :class:`AssociativeMemory`."""
-
-    mismatch_counts: jnp.ndarray   # (Q, N) distance matrix (contract units)
-    exact_match: jnp.ndarray       # (Q, N) bool
-    best_row: jnp.ndarray          # (Q,) int32 argmin distance
-
-
-class AssociativeMemory:
-    """Deprecated stateful wrapper over :func:`make_table` / :func:`search`.
-
-    Kept for one release so downstream code migrates gradually; it rebuilds
-    nothing and hides nothing — ``write`` stores an :class:`AMTable`,
-    ``search`` returns the full distance matrix like the old class did.
-    Prefer the functional API: it jits/vmaps/shards as a unit and returns
-    top-k results instead of the O(Q*N) matrix.
-    """
-
-    def __init__(self, bits: int = 3, backend: str = "ref",
-                 distance: str = "hamming",
-                 variation_key: jax.Array | None = None):
-        warnings.warn(
-            "AssociativeMemory is deprecated; use am.make_table + am.search "
-            "(functional, jittable, top-k). It will be removed next release.",
-            DeprecationWarning, stacklevel=2)
-        if backend != "analog" and backend not in _BACKENDS:
-            raise ValueError(f"unknown backend {backend!r}")
-        if distance not in DISTANCES:
-            raise ValueError(f"unknown distance {distance!r}")
-        self.bits = bits
-        self.backend = backend
-        self.distance = distance
-        self.variation_key = variation_key
-        self._backend_fn: BackendFn = (
-            make_analog_backend(variation_key) if backend == "analog"
-            else get_backend(backend))
-        self._table: AMTable | None = None
-
-    def write(self, codes) -> None:
-        """Store (N, D) int codes, each symbol in [0, 2**bits)."""
-        self._table = make_table(codes, bits=self.bits, distance=self.distance)
-
-    @property
-    def codes(self) -> jnp.ndarray:
-        if self._table is None:
-            raise RuntimeError("AssociativeMemory is empty — call write() first")
-        return self._table.codes
-
-    def search(self, queries) -> LegacySearchResult:
-        """Batched associative search of (Q, D) int queries."""
-        if self._table is None:
-            raise RuntimeError("AssociativeMemory is empty — call write() first")
-        queries = jnp.asarray(queries, jnp.int32)
-        if queries.ndim == 1:
-            queries = queries[None]
-        mm = distances(self._table, queries, backend=self._backend_fn)
-        exact = (mm == 0 if jnp.issubdtype(mm.dtype, jnp.integer)
-                 else mm < EXACT_MATCH_EPS)
-        return LegacySearchResult(
-            mismatch_counts=mm,
-            exact_match=exact,
-            best_row=jnp.argmin(mm, axis=-1).astype(jnp.int32),
-        )

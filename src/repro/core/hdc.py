@@ -57,6 +57,24 @@ def make_model(cfg: HDCConfig) -> HDCModel:
     return HDCModel(cfg, proj, jnp.zeros((cfg.n_classes, cfg.dim), jnp.float32))
 
 
+# -- prompt cache keys (serving) --------------------------------------------
+#
+# The CAM-fronted response cache keys prompts by a bag-of-tokens HDC code:
+# token ids index a fixed Gaussian projection, the hypervectors sum, and the
+# result Z-quantizes to CAM levels.  One definition here so the example
+# client and the serving driver can never drift apart.
+
+def token_key_projection(vocab: int, dim: int, seed: int = 9) -> jnp.ndarray:
+    """(vocab, dim) i.i.d. N(0, 1) projection for prompt cache keys."""
+    return jax.random.normal(jax.random.PRNGKey(seed), (vocab, dim))
+
+
+def prompt_key(projection: jnp.ndarray, tokens, bits: int = 3) -> jnp.ndarray:
+    """Bag-of-tokens HDC cache key of a token-id sequence, as level codes."""
+    hv = jnp.sum(projection[jnp.asarray(tokens)], axis=0)
+    return q.quantize(hv, bits)
+
+
 @jax.jit
 def encode(projection: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
     """Random-projection encoding F -> H (batch, D)."""

@@ -26,6 +26,7 @@ Specs factories (shapes they describe):
   ``logits``         (B, S, V)     output logits
   ``am_table``       (N, D)        associative-memory code rows banked on tp
   ``am_queries``     (Q, D)        associative-search queries (replicated)
+  ``am_meta``        (N, M)        per-row serving meta/timestamps (replicated)
 
 ``make_rules`` binds a mesh: it picks the batch (data-parallel) axes from
 whatever subset of ``("pod", "data")`` the mesh has AND divides the global
@@ -124,6 +125,15 @@ class Rules:
 
     def am_queries(self) -> P:
         """(Q, D) search queries: replicated to every bank."""
+        return P(None, None)
+
+    def am_meta(self) -> P:
+        """(N, M) per-row serving meta (timestamps, value ids): replicated.
+
+        Meta is written by the serving scheduler's LRU touch path and read
+        host-side by eviction policies, so every bank keeps the full copy —
+        banked rows only pay for their codes, which dominate.
+        """
         return P(None, None)
 
     # -- outputs -------------------------------------------------------------

@@ -1,6 +1,14 @@
-"""Serving driver: continuous-batching engine over a selected architecture.
+"""Serving driver: continuous-batching engine fronted by the AM cache service.
+
+Requests are drawn from a small prompt pool (so the workload repeats itself,
+like real traffic); every prompt is first batch-looked-up in an
+:class:`repro.serve.AMService` response table (one micro-batched dispatch for
+the whole wave), only the unique misses run through the
+:class:`ContinuousBatcher`, and their generations are appended back so later
+repeats hit.
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --requests 6
+  PYTHONPATH=src python -m repro.launch.serve --smoke          # CI smoke
 """
 
 from __future__ import annotations
@@ -12,10 +20,15 @@ import jax
 import numpy as np
 
 from repro.configs.registry import ALIASES, get_config
+from repro.core import hdc
 from repro.launch.mesh import make_test_mesh
 from repro.models import transformer
+from repro.serve import AMService
 from repro.serve.engine import Engine
 from repro.serve.scheduler import ContinuousBatcher, Request
+
+CACHE_DIM = 128        # hypervector width of the response-cache key
+CACHE_BITS = 3
 
 
 def main():
@@ -27,6 +40,8 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--am-cache", type=int, default=8, metavar="CAPACITY",
+                    help="AM response-cache capacity (0 disables the cache)")
     args = ap.parse_args()
 
     cfg = get_config(ALIASES.get(args.arch, args.arch), smoke=args.smoke)
@@ -37,22 +52,83 @@ def main():
     batcher = ContinuousBatcher(engine)
 
     rng = np.random.default_rng(0)
-    for rid in range(args.requests):
-        prompt = rng.integers(2, cfg.vocab_size,
-                              size=rng.integers(3, 9)).astype(np.int32)
-        batcher.submit(Request(rid=rid, prompt=prompt,
-                               max_new_tokens=args.max_new))
+    pool = [rng.integers(2, cfg.vocab_size,
+                         size=rng.integers(3, 9)).astype(np.int32)
+            for _ in range(max(2, args.requests // 2))]
+    workload = [pool[rng.integers(len(pool))] for _ in range(args.requests)]
+
+    svc = None
+    if args.am_cache:
+        svc = AMService(max_batch=max(64, args.requests))
+        svc.create_table("responses", width=CACHE_DIM, bits=CACHE_BITS,
+                         capacity=args.am_cache, policy="lru",
+                         backend="pallas")
+        proj = hdc.token_key_projection(cfg.vocab_size, CACHE_DIM)
+        keys = [np.asarray(hdc.prompt_key(proj, p, CACHE_BITS))
+                for p in workload]
 
     t0 = time.time()
+    results: dict[int, np.ndarray] = {}
+    rep_of: dict[int, int] = {}
+
+    if svc is not None:
+        # wave 1: one micro-batched CAM lookup for the whole workload
+        futs = [svc.submit("responses", key) for key in keys]
+        svc.flush()
+        miss_ids = [i for i, f in enumerate(futs) if not f.result().hit]
+        for i, f in enumerate(futs):
+            if f.result().hit:
+                results[i] = f.result().value
+        # only unique missed prompts reach the LM batcher
+        unique: dict[bytes, list[int]] = {}
+        for i in miss_ids:
+            unique.setdefault(keys[i].tobytes(), []).append(i)
+        for ids in unique.values():
+            for i in ids:
+                rep_of[i] = ids[0]
+        reps = [ids[0] for ids in unique.values()]
+    else:
+        reps = list(range(len(workload)))
+
+    for rid in reps:
+        batcher.submit(Request(rid=rid, prompt=workload[rid],
+                               max_new_tokens=args.max_new))
     done = batcher.run()
+    for r in done:
+        gen = np.asarray(r.generated, np.int32)
+        results[r.rid] = gen
+        if svc is not None:
+            svc.append("responses", keys[r.rid], values=[gen])
+
+    if svc is not None:
+        # wave 2: repeats of missed prompts — again one batch.  A repeat can
+        # still miss when the LRU table is smaller than the number of unique
+        # prompts generated above; it then falls back to its representative's
+        # generation (same prompt, so the same greedy output).
+        wave2 = {i: svc.submit("responses", keys[i])
+                 for i in range(len(workload)) if i not in results}
+        svc.flush()
+        for i, fut in wave2.items():
+            resp = fut.result()
+            results[i] = resp.value if resp.hit else results[rep_of[i]]
     wall = time.time() - t0
-    for r in sorted(done, key=lambda r: r.rid):
-        print(f"req{r.rid}: prompt[{len(r.prompt)}] -> {r.generated}")
-    total_tokens = sum(len(r.generated) for r in done)
-    print(f"\n{len(done)}/{args.requests} requests, {total_tokens} tokens, "
-          f"{batcher.ticks} engine ticks ({args.slots} slots), "
-          f"{wall:.1f}s wall")
-    assert len(done) == args.requests
+
+    for i, gen in sorted(results.items()):
+        src = "GEN" if any(r.rid == i for r in done) else "CAM"
+        print(f"req{i}: prompt[{len(workload[i])}] {src} -> "
+              f"{[int(x) for x in gen]}")
+    print(f"\n{len(results)}/{args.requests} requests, "
+          f"{len(done)} generated, {batcher.ticks} engine ticks "
+          f"({args.slots} slots), {wall:.1f}s wall")
+    if svc is not None:
+        s = svc.stats()
+        ts = s["tables"]["responses"]
+        print(f"AM cache: {ts['hits']}/{ts['lookups']} hits, "
+              f"{ts['rows']}/{ts['capacity']} rows, "
+              f"{s['readbacks']} readbacks, "
+              f"{s['compilations']} compilations")
+        assert ts["rows"] <= ts["capacity"]
+    assert len(results) == args.requests
 
 
 if __name__ == "__main__":

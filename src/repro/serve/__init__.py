@@ -1,0 +1,14 @@
+"""Serving layer: the LM engine/batcher and the associative-search service.
+
+* :mod:`repro.serve.engine` / :mod:`repro.serve.scheduler` — one compiled
+  decode step driven by a continuous batcher (vLLM-style slots).
+* :mod:`repro.serve.am_service` — :class:`AMService`, the sanctioned way to
+  run ``repro.core.am`` searches under traffic: named capacity-bounded
+  tables, LRU/TTL eviction, and a micro-batching lookup scheduler.
+"""
+
+from repro.serve.am_service import (AMService, PendingSearch, SearchRequest,
+                                    SearchResponse, TableFullError)
+
+__all__ = ["AMService", "PendingSearch", "SearchRequest", "SearchResponse",
+           "TableFullError"]

@@ -1,0 +1,534 @@
+"""Production serving API for associative search — the CAM as a service.
+
+The paper positions SEE-MCAM as an associative-search engine fronting ML
+inference; this module is that engine's serving surface.  An
+:class:`AMService` sits beside the LM :class:`repro.serve.engine.Engine` /
+:class:`repro.serve.scheduler.ContinuousBatcher` and is the one sanctioned
+way to run ``am.search`` under traffic:
+
+  >>> svc = AMService()
+  >>> svc.create_table("responses", width=256, bits=3, capacity=4096,
+  ...                  policy="lru", backend="pallas")
+  >>> svc.append("responses", codes, values=payloads)
+  >>> fut = svc.submit("responses", query, k=4)        # queues, non-blocking
+  >>> resp = fut.result()                              # flushes the batch
+  >>> resp.hit, resp.value, resp.indices, resp.distances
+
+Design — why this never compiles or syncs per request:
+
+* **Fixed-capacity slabs.**  Each named table is an :class:`am.AMTable`
+  whose ``codes`` array is allocated at ``capacity`` rows once; the live
+  row count ``n`` is passed to ``am.search(..., valid_rows=n)`` as a traced
+  scalar, so appends and evictions never change compiled shapes.
+* **Micro-batched dispatch.**  ``submit`` queues; ``flush`` coalesces queued
+  lookups by (table, k, backend, thresholded?) signature, pads each group's
+  query count to the next power of two, and issues ONE jitted search per
+  group.  Compilation count is exactly one per padding-bucket signature
+  (exposed as ``stats()["compilations"]``); results come back in ONE
+  ``jax.device_get`` per group — no per-request ``bool()``/``int()`` syncs.
+* **Eviction is part of the API.**  ``AMTable.meta`` carries (insert,
+  last-hit) timestamps (:data:`am.META_INSERT` / :data:`am.META_LAST_HIT`).
+  Exact hits update last-hit *inside* the compiled dispatch via
+  :func:`am.touch`; ``"lru"`` tables evict the least-recently-hit rows on
+  overflow, ``"ttl"`` tables expire rows older than ``ttl`` (falling back
+  to FIFO on overflow), ``"reject"`` tables raise :class:`TableFullError`.
+  A table can therefore never exceed its configured capacity.
+* **Pluggable placement.**  Constructed with a ``mesh`` (and optionally
+  :class:`repro.dist.specs.Rules`), the same dispatch routes through
+  ``am.search_sharded`` — rows banked over the ``model`` axis via
+  ``Rules.am_table()`` / ``Rules.am_queries()``, meta kept replicated per
+  ``Rules.am_meta()`` — with identical results.
+
+Latency control: ``max_batch`` caps how many lookups queue before an
+automatic flush, and ``flush_after`` is a deadline (in clock units) on the
+oldest queued request, checked at every submit.  Time is a logical
+per-service tick by default (deterministic: one tick per submit / append /
+flush), or wall-clock when constructed with ``time_fn=time.monotonic`` —
+``ttl`` / ``flush_after`` are in whichever units the clock produces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import am
+from repro.dist import specs as dist_specs
+
+#: Eviction policies a table may be created with.
+POLICIES = ("lru", "ttl", "reject")
+
+#: Meta timestamps are float32, which is integer-exact only to 2**24; the
+#: logical clock rebases every live timestamp down once it reaches this, so
+#: LRU/TTL ordering stays exact for arbitrarily long-running services.
+_REBASE_TICKS = float(1 << 23)
+
+
+class TableFullError(RuntimeError):
+    """An append would exceed capacity and the policy forbids eviction."""
+
+
+# ---------------------------------------------------------------------------
+# Request / response dataclasses
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SearchRequest:
+    """One associative lookup against a named table."""
+
+    rid: int
+    table: str
+    query: np.ndarray              # (D,) int32 symbol word
+    k: int = 1
+    threshold: float | None = None
+    backend: str | None = None     # None -> the table's default backend
+    submitted_at: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchResponse:
+    """Top-k outcome of one request, resolved to its host payload.
+
+    All arrays are host numpy, produced by the single per-batch readback.
+    Entries beyond the table's live row count carry index ``-1``, distance
+    ``+inf`` and False flags.
+    """
+
+    rid: int
+    table: str
+    indices: np.ndarray            # (k,) int32 rows, best first; -1 invalid
+    distances: np.ndarray          # (k,) float32 contract units
+    exact: np.ndarray              # (k,) bool — exact word match
+    matched: np.ndarray            # (k,) bool — within the request threshold
+    value: Any = None              # payload of the best row on an exact hit
+
+    @property
+    def hit(self) -> bool:
+        """Did the best candidate match exactly?"""
+        return bool(self.exact[0])
+
+    @property
+    def best_row(self) -> int:
+        return int(self.indices[0])
+
+
+class PendingSearch:
+    """Future-like handle returned by :meth:`AMService.submit`.
+
+    ``result()`` flushes the service's queue if the response has not been
+    produced yet, so a single-request caller can stay synchronous while
+    concurrent callers get coalesced into one dispatch.
+    """
+
+    __slots__ = ("request", "_service", "_response")
+
+    def __init__(self, service: "AMService", request: SearchRequest):
+        self.request = request
+        self._service = service
+        self._response: SearchResponse | None = None
+
+    @property
+    def done(self) -> bool:
+        return self._response is not None
+
+    def result(self) -> SearchResponse:
+        if self._response is None:
+            self._service.flush()
+        assert self._response is not None, "flush did not resolve this request"
+        return self._response
+
+
+# ---------------------------------------------------------------------------
+# Table state
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _TableState:
+    """One named table: capacity slab + host-side bookkeeping."""
+
+    name: str
+    table: am.AMTable              # (capacity, D) codes + (capacity, 2) meta
+    n: int                         # live rows (<= capacity)
+    capacity: int
+    policy: str
+    ttl: float | None
+    backend: str
+    values: list                   # host payloads, aligned with live rows
+    version: int = 0               # bumped on every append/delete/evict
+    appends: int = 0
+    evicted: int = 0
+    hits: int = 0
+    misses: int = 0
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, n - 1).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# The service
+# ---------------------------------------------------------------------------
+
+class AMService:
+    """Named associative-search tables + a micro-batching lookup scheduler.
+
+    Args:
+      mesh: optional device mesh — when given, every dispatch routes through
+        :func:`am.search_sharded` (rows banked over ``rules.tp``).
+      rules: optional :class:`repro.dist.specs.Rules`; defaults to
+        ``make_rules(mesh, "tp")`` when a mesh is given.
+      max_batch: queued lookups that trigger an automatic flush.
+      flush_after: deadline in clock units — a submit flushes the queue when
+        the oldest queued request has waited at least this long.
+      time_fn: clock source; ``None`` uses a deterministic logical tick
+        (+1.0 per submit/append/flush).
+    """
+
+    def __init__(self, *, mesh=None, rules=None, max_batch: int = 64,
+                 flush_after: float | None = None,
+                 time_fn: Callable[[], float] | None = None):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self._mesh = mesh
+        self._rules = (rules or dist_specs.make_rules(mesh, "tp")) \
+            if mesh is not None else rules
+        self.max_batch = max_batch
+        self.flush_after = flush_after
+        self._time_fn = time_fn
+        self._clock = 0.0
+        self._epoch: float | None = None
+        self._tables: dict[str, _TableState] = {}
+        self._pending: list[PendingSearch] = []
+        self._next_rid = 0
+        self.flushes = 0
+        self.readbacks = 0
+        self._dispatch = self._build_dispatch()
+
+    # -- clock ---------------------------------------------------------------
+
+    def _tick(self) -> float:
+        # Timestamps land in float32 meta, so they must stay small: wall
+        # clocks are re-based to the service's first reading, and the
+        # logical clock shifts every live timestamp down before it leaves
+        # float32's integer-exact range (old rows go negative, which
+        # preserves both LRU order and TTL ages).
+        if self._time_fn is not None:
+            t = float(self._time_fn())
+            if self._epoch is None:
+                self._epoch = t
+            return t - self._epoch
+        self._clock += 1.0
+        if self._clock >= _REBASE_TICKS and not self._pending:
+            shift = self._clock
+            self._clock = 0.0
+            for t in self._tables.values():
+                t.table = dataclasses.replace(t.table,
+                                              meta=t.table.meta - shift)
+        return self._clock
+
+    # -- table lifecycle -----------------------------------------------------
+
+    def create_table(self, name: str, *, width: int, bits: int = 3,
+                     distance: str = "hamming", capacity: int = 1024,
+                     policy: str = "lru", ttl: float | None = None,
+                     backend: str = "ref") -> None:
+        """Allocate an empty capacity-bounded table under ``name``."""
+        if name in self._tables:
+            raise ValueError(f"table {name!r} already exists")
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; expected {POLICIES}")
+        if (ttl is None) == (policy == "ttl"):
+            raise ValueError("ttl must be set iff policy == 'ttl'")
+        am.get_backend(backend)          # fail fast on unknown backends
+        table = am.make_table(jnp.zeros((capacity, width), jnp.int32),
+                              bits=bits, distance=distance,
+                              meta=am.serving_meta(capacity, 0.0))
+        self._tables[name] = _TableState(
+            name=name, table=table, n=0, capacity=capacity, policy=policy,
+            ttl=ttl, backend=backend, values=[])
+
+    def drop_table(self, name: str) -> None:
+        if any(p.request.table == name for p in self._pending):
+            self.flush()
+        del self._tables[name]
+
+    def _state(self, name: str) -> _TableState:
+        try:
+            return self._tables[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown table {name!r}; existing: {tuple(self._tables)}"
+            ) from None
+
+    def append(self, name: str, codes, values=None, *,
+               now: float | None = None) -> None:
+        """Insert rows (evicting per policy first if capacity requires).
+
+        ``values`` carries one host payload per appended row (any object);
+        payloads follow their rows through eviction and come back on exact
+        hits as ``SearchResponse.value``.
+        """
+        t = self._state(name)
+        codes = np.asarray(codes, np.int32)
+        if codes.ndim == 1:
+            codes = codes[None]
+        if codes.ndim != 2 or codes.shape[1] != t.table.width:
+            raise ValueError(f"append codes shape {codes.shape} != "
+                             f"(m, {t.table.width})")
+        m = codes.shape[0]
+        if m > t.capacity:
+            raise TableFullError(
+                f"appending {m} rows exceeds table capacity {t.capacity}")
+        if values is None:
+            values = [None] * m
+        elif not isinstance(values, (list, tuple)):
+            values = [values]
+        if len(values) != m:
+            raise ValueError(f"{len(values)} values for {m} rows")
+        now = self._tick() if now is None else float(now)
+        self._make_room(t, m, now)
+        t.table = dataclasses.replace(
+            t.table,
+            codes=jax.lax.dynamic_update_slice(
+                t.table.codes, jnp.asarray(codes), (t.n, 0)),
+            meta=jax.lax.dynamic_update_slice(
+                t.table.meta, am.serving_meta(m, now), (t.n, 0)))
+        t.values.extend(values)
+        t.n += m
+        t.appends += m
+        t.version += 1
+
+    def delete(self, name: str, rows) -> int:
+        """Drop live rows by index array or boolean mask; returns the count."""
+        t = self._state(name)
+        rows = np.asarray(rows)
+        kill = np.zeros((t.n,), bool)
+        if rows.dtype == np.bool_:
+            if rows.shape != (t.n,):
+                raise ValueError(f"mask shape {rows.shape} != ({t.n},)")
+            kill |= rows
+        else:
+            kill[rows] = True
+        killed = int(kill.sum())
+        if killed:
+            self._compact(t, kill)
+        return killed
+
+    def evict(self, name: str, *, now: float | None = None) -> int:
+        """Run the table's eviction policy now; returns rows evicted.
+
+        For ``"ttl"`` tables this expires rows older than ``ttl``; for
+        ``"lru"``/``"reject"`` it is a no-op unless the table somehow
+        exceeds capacity (it cannot through this API).
+        """
+        t = self._state(name)
+        now = self._tick() if now is None else float(now)
+        before = t.n
+        self._make_room(t, 0, now)
+        return before - t.n
+
+    def _make_room(self, t: _TableState, m: int, now: float) -> None:
+        """Evict per policy so ``m`` more rows fit under ``capacity``."""
+        if t.n == 0:
+            return
+        kill = np.zeros((t.n,), bool)
+        meta = np.asarray(t.table.meta[:t.n])
+        if t.policy == "ttl":
+            kill |= (now - meta[:, am.META_INSERT]) > t.ttl
+        overflow = (t.n - int(kill.sum())) + m - t.capacity
+        if overflow > 0:
+            if t.policy == "reject":
+                raise TableFullError(
+                    f"table {t.name!r} is full ({t.capacity} rows) and "
+                    f"policy 'reject' forbids eviction")
+            # lru: least-recently-hit first; ttl overflow: oldest insert first
+            col = am.META_LAST_HIT if t.policy == "lru" else am.META_INSERT
+            alive = np.flatnonzero(~kill)
+            order = alive[np.argsort(meta[alive, col], kind="stable")]
+            kill[order[:overflow]] = True
+        if kill.any():
+            t.evicted += int(kill.sum())
+            self._compact(t, kill)
+
+    def _compact(self, t: _TableState, kill: np.ndarray) -> None:
+        """Delete masked live rows and repack survivors at the slab front."""
+        live = am.AMTable(codes=t.table.codes[:t.n], meta=t.table.meta[:t.n],
+                          bits=t.table.bits, distance=t.table.distance)
+        live = am.delete(live, kill)               # the eviction-mask path
+        keep = np.flatnonzero(~kill)
+        t.table = dataclasses.replace(
+            t.table,
+            codes=jnp.zeros_like(t.table.codes).at[:live.n_rows]
+                     .set(live.codes),
+            meta=jnp.zeros_like(t.table.meta).at[:live.n_rows].set(live.meta))
+        t.values = [t.values[i] for i in keep]
+        t.n = live.n_rows
+        t.version += 1
+
+    # -- lookups -------------------------------------------------------------
+
+    def submit(self, name: str, query, *, k: int = 1,
+               threshold: float | None = None,
+               backend: str | None = None) -> PendingSearch:
+        """Queue one lookup; returns a handle whose ``result()`` blocks.
+
+        Lookups against an empty table resolve immediately as misses —
+        the cache-front pattern needs no special casing.
+        """
+        t = self._state(name)
+        query = np.asarray(query, np.int32)
+        if query.shape != (t.table.width,):
+            raise ValueError(
+                f"query shape {query.shape} != ({t.table.width},)")
+        if backend is not None:
+            am.get_backend(backend)      # fail here, not at dispatch time
+        now = self._tick()
+        req = SearchRequest(
+            rid=self._next_rid, table=name, query=query,
+            k=min(k, t.capacity),
+            threshold=None if threshold is None else float(threshold),
+            backend=backend or t.backend, submitted_at=now)
+        self._next_rid += 1
+        fut = PendingSearch(self, req)
+        if t.n == 0:
+            self._resolve_empty(t, fut)
+            return fut
+        self._pending.append(fut)
+        if len(self._pending) >= self.max_batch:
+            self.flush()
+        elif (self.flush_after is not None
+              and now - self._pending[0].request.submitted_at
+              >= self.flush_after):
+            self.flush()
+        return fut
+
+    def lookup(self, name: str, query, *, k: int = 1,
+               threshold: float | None = None,
+               backend: str | None = None) -> SearchResponse:
+        """Synchronous convenience: submit + flush in one call."""
+        return self.submit(name, query, k=k, threshold=threshold,
+                           backend=backend).result()
+
+    def _resolve_empty(self, t: _TableState, fut: PendingSearch) -> None:
+        k = fut.request.k
+        fut._response = SearchResponse(
+            rid=fut.request.rid, table=t.name,
+            indices=np.full((k,), -1, np.int32),
+            distances=np.full((k,), np.inf, np.float32),
+            exact=np.zeros((k,), bool), matched=np.zeros((k,), bool))
+        t.misses += 1
+
+    def flush(self, *, now: float | None = None) -> int:
+        """Dispatch every queued lookup; returns how many were served.
+
+        Requests are grouped by (table, k, backend, thresholded) signature;
+        each group becomes one compiled ``am.search`` over queries padded to
+        the next power of two, and one ``jax.device_get`` fans the batch
+        back out to the waiting futures.
+        """
+        pending, self._pending = self._pending, []
+        if not pending:
+            return 0
+        now = self._tick() if now is None else float(now)
+        groups: dict[tuple, list[PendingSearch]] = {}
+        for fut in pending:
+            r = fut.request
+            key = (r.table, r.k, r.backend, r.threshold is not None)
+            groups.setdefault(key, []).append(fut)
+        for (name, k, backend, has_thr), futs in groups.items():
+            self._dispatch_group(self._state(name), futs, k, backend,
+                                 has_thr, now)
+        self.flushes += 1
+        return len(pending)
+
+    def _dispatch_group(self, t: _TableState, futs: list[PendingSearch],
+                        k: int, backend: str, has_thr: bool,
+                        now: float) -> None:
+        q = len(futs)
+        qb = _next_pow2(q)
+        queries = np.zeros((qb, t.table.width), np.int32)
+        for i, fut in enumerate(futs):
+            queries[i] = fut.request.query
+        thr = None
+        if has_thr:
+            tv = np.zeros((qb,), np.float32)
+            tv[:q] = [fut.request.threshold for fut in futs]
+            thr = jnp.asarray(tv)
+        idx, dist, exact, matched, new_meta = self._dispatch(
+            t.table, jnp.asarray(queries),
+            jnp.asarray(t.n, jnp.int32), jnp.asarray(q, jnp.int32), thr,
+            jnp.asarray(now, jnp.float32),
+            k=k, backend=backend, sharded=self._mesh is not None)
+        t.table = dataclasses.replace(t.table, meta=new_meta)
+        # the single host sync for the whole group
+        idx, dist, exact, matched = jax.device_get(
+            (idx, dist, exact, matched))
+        self.readbacks += 1
+        for i, fut in enumerate(futs):
+            hit = bool(exact[i, 0])
+            if hit:
+                t.hits += 1
+            else:
+                t.misses += 1
+            fut._response = SearchResponse(
+                rid=fut.request.rid, table=t.name, indices=idx[i],
+                distances=dist[i], exact=exact[i], matched=matched[i],
+                value=t.values[int(idx[i, 0])] if hit else None)
+
+    def _build_dispatch(self):
+        """One jitted search dispatch per service (its own compile cache)."""
+        mesh, rules = self._mesh, self._rules
+
+        @partial(jax.jit, static_argnames=("k", "backend", "sharded"))
+        def dispatch(table, queries, n_valid, q_valid, thresholds, now, *,
+                     k, backend, sharded):
+            thr = None if thresholds is None else thresholds[:, None]
+            if sharded:
+                res = am.search_sharded(
+                    table, queries, mesh=mesh, rules=rules, k=k,
+                    threshold=thr, backend=backend, valid_rows=n_valid)
+            else:
+                res = am.search(table, queries, k=k, threshold=thr,
+                                backend=backend, valid_rows=n_valid)
+            idx = jnp.where(jnp.isfinite(res.distances), res.indices, -1)
+            # LRU maintenance inside the compiled step: exact best-row hits
+            # of real (non-padding) queries get their last-hit stamped
+            q_live = jnp.arange(queries.shape[0]) < q_valid
+            hit_rows = jnp.where(q_live & res.exact[:, 0], res.best_row,
+                                 table.n_rows)       # n_rows == OOB sentinel
+            meta = am.touch(table, hit_rows, now).meta
+            if rules is not None:
+                meta = dist_specs.constrain(meta, rules.am_meta())
+            return idx, res.distances, res.exact, res.matched, meta
+
+        return dispatch
+
+    # -- stats ---------------------------------------------------------------
+
+    def stats(self, name: str | None = None) -> dict:
+        """Service-level (or one table's) observability counters."""
+        if name is not None:
+            t = self._state(name)
+            return {
+                "rows": t.n, "capacity": t.capacity, "policy": t.policy,
+                "ttl": t.ttl, "backend": t.backend, "version": t.version,
+                "appends": t.appends, "evicted": t.evicted,
+                "hits": t.hits, "misses": t.misses,
+                "lookups": t.hits + t.misses,
+            }
+        cache_size = getattr(self._dispatch, "_cache_size", None)
+        return {
+            "tables": {n: self.stats(n) for n in self._tables},
+            "pending": len(self._pending),
+            "flushes": self.flushes,
+            "readbacks": self.readbacks,
+            "compilations": int(cache_size()) if cache_size else -1,
+            "sharded": self._mesh is not None,
+        }

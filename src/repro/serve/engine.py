@@ -5,9 +5,10 @@ its own position and an active flag, so the :class:`ContinuousBatcher`
 (serve/scheduler.py) can admit/retire requests mid-flight without
 recompilation — inactive slots neither write KV nor advance.
 
-An optional :class:`repro.core.am.AssociativeMemory` response cache — the
-paper's CAM as a serving-side exact-match cache — is demonstrated in
-examples/serve_am_cache.py.
+The paper's CAM fronts this engine as a serving-side exact-match response
+cache through :class:`repro.serve.am_service.AMService` (micro-batched
+associative lookups, LRU/TTL eviction) — see examples/serve_am_cache.py and
+the ``--am-cache`` path in :mod:`repro.launch.serve`.
 """
 
 from __future__ import annotations

@@ -1,11 +1,11 @@
 """Functional `repro.core.am` API: AMTable pytree, top-k/threshold search,
-backend registry, jit/vmap transparency, and the deprecated shim.
+backend registry, jit/vmap transparency, and the serving helpers
+(valid-row masking, timestamp meta, eviction-mask delete).
 
 The sharded multi-bank path has its own 8-fake-device subprocess test in
-``tests/test_am_sharded.py``.
+``tests/test_am_sharded.py``; the serving layer built on these helpers is
+covered by ``tests/test_am_service.py``.
 """
-
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -290,33 +290,73 @@ def test_ops_topk_matches_numpy(n, q, d, k, seed):
 
 
 # ---------------------------------------------------------------------------
-# deprecated shim: one release of source compatibility
+# serving helpers: valid-row masking, timestamp meta, eviction-mask delete
 # ---------------------------------------------------------------------------
 
-def test_shim_warns_and_matches_functional_api():
-    codes, queries = _case(12, 14, 4, 9)
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        mem = am.AssociativeMemory(bits=3, backend="pallas")
-    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
-    mem.write(codes)
-    legacy = mem.search(queries)
-    t = am.make_table(codes, bits=3)
-    np.testing.assert_array_equal(
-        np.asarray(legacy.mismatch_counts),
-        np.asarray(am.distances(t, queries, backend="pallas")))
-    np.testing.assert_array_equal(
-        np.asarray(legacy.best_row),
-        np.asarray(am.search(t, queries, backend="pallas").best_row))
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 25))
+def test_valid_rows_masks_slab_tail(seed, n):
+    """A fixed-capacity slab searched with valid_rows=n must rank exactly
+    like a table holding only the first n rows."""
+    k = 4
+    codes, queries = _case(seed, 32, 5, 8)           # 32-row "slab"
+    slab = am.make_table(codes, bits=3)
+    live = am.make_table(codes[:n], bits=3)
+    got = am.search(slab, queries, k=k, valid_rows=n)
+    want = am.search(live, queries, k=min(k, n))
+    kn = min(k, n)
+    np.testing.assert_array_equal(np.asarray(got.indices)[:, :kn],
+                                  np.asarray(want.indices))
+    np.testing.assert_array_equal(np.asarray(got.distances)[:, :kn],
+                                  np.asarray(want.distances))
+    np.testing.assert_array_equal(np.asarray(got.exact)[:, :kn],
+                                  np.asarray(want.exact))
+    # surplus entries (if any) are +inf and unmatched
+    assert np.all(np.isinf(np.asarray(got.distances)[:, kn:]))
+    assert not np.asarray(got.exact)[:, kn:].any()
 
 
-def test_shim_rejects_unknown_backend_and_empty_reads():
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        with pytest.raises(ValueError):
-            am.AssociativeMemory(backend="cuda")
-        mem = am.AssociativeMemory()
-    with pytest.raises(RuntimeError):
-        _ = mem.codes
-    with pytest.raises(RuntimeError):
-        mem.search(jnp.zeros((1, 4), jnp.int32))
+def test_valid_rows_is_traced_not_static():
+    """Varying the live count must reuse one compiled executable."""
+    codes, queries = _case(13, 16, 3, 8)
+    slab = am.make_table(codes, bits=3)
+    f = jax.jit(lambda t, q, nv: am.search(t, q, k=2, valid_rows=nv))
+    for n in (4, 9, 16):
+        got = f(slab, queries, jnp.asarray(n, jnp.int32))
+        want = am.search(am.make_table(codes[:n], bits=3), queries, k=2)
+        np.testing.assert_array_equal(np.asarray(got.indices),
+                                      np.asarray(want.indices))
+    assert f._cache_size() == 1
+
+
+def test_serving_meta_and_touch():
+    codes, _ = _case(14, 6, 1, 5)
+    t = am.make_table(codes, bits=3, meta=am.serving_meta(6, 7.0))
+    np.testing.assert_array_equal(np.asarray(t.meta), np.full((6, 2), 7.0))
+    t2 = am.touch(t, jnp.array([1, 3]), 9.0)
+    got = np.asarray(t2.meta)
+    np.testing.assert_array_equal(got[:, am.META_INSERT], 7.0)
+    np.testing.assert_array_equal(got[[1, 3], am.META_LAST_HIT], 9.0)
+    np.testing.assert_array_equal(got[[0, 2, 4, 5], am.META_LAST_HIT], 7.0)
+    # out-of-range rows drop (the "no hit" sentinel used by the service)
+    t3 = am.touch(t, jnp.array([6, 99]), 9.0)
+    np.testing.assert_array_equal(np.asarray(t3.meta), np.asarray(t.meta))
+    # touch is jittable and pure
+    t4 = jax.jit(lambda tt: am.touch(tt, jnp.array([0]), 11.0))(t)
+    assert float(np.asarray(t4.meta)[0, am.META_LAST_HIT]) == 11.0
+    np.testing.assert_array_equal(np.asarray(t.meta), np.full((6, 2), 7.0))
+    with pytest.raises(ValueError):
+        am.touch(am.make_table(codes, bits=3), jnp.array([0]), 1.0)
+
+
+def test_delete_by_boolean_mask_matches_indices():
+    codes, _ = _case(15, 8, 1, 5)
+    t = am.make_table(codes, bits=3, meta=am.serving_meta(8, 0.0))
+    mask = np.zeros(8, bool)
+    mask[[2, 5, 7]] = True
+    a, b = am.delete(t, mask), am.delete(t, [2, 5, 7])
+    np.testing.assert_array_equal(np.asarray(a.codes), np.asarray(b.codes))
+    np.testing.assert_array_equal(np.asarray(a.meta), np.asarray(b.meta))
+    assert a.n_rows == 5
+    with pytest.raises(ValueError):
+        am.delete(t, np.zeros(7, bool))              # mask length mismatch

@@ -65,6 +65,15 @@ SCRIPT = textwrap.dedent("""
     want = am.search(table, queries, k=3)
     np.testing.assert_array_equal(np.asarray(got.indices),
                                   np.asarray(want.indices))
+
+    # valid_rows masks the slab tail identically to a truncated table
+    # (the capacity-slab serving path over banks)
+    got = am.search_sharded(table, queries, mesh=mesh, k=5, valid_rows=20)
+    want = am.search(am.make_table(codes[:20], bits=3), queries, k=5)
+    np.testing.assert_array_equal(np.asarray(got.indices),
+                                  np.asarray(want.indices))
+    np.testing.assert_array_equal(np.asarray(got.distances),
+                                  np.asarray(want.distances))
     print("AM_SHARDED_OK")
 """)
 

@@ -51,18 +51,14 @@ def test_drain_current_overdrive_grades_with_level_distance():
 
 def test_am_l1_distance_mode():
     codes = jnp.array([[0, 0], [7, 7], [3, 3]])
-    m = am.AssociativeMemory(bits=3, distance="l1")
-    m.write(codes)
-    r = m.search(jnp.array([[2, 2]]))
+    t = am.make_table(codes, bits=3, distance="l1")
+    r = am.search(t, jnp.array([[2, 2]]))
     assert int(r.best_row[0]) == 2          # L1 picks the nearest level
-    np.testing.assert_array_equal(np.asarray(r.mismatch_counts[0]),
-                                  [4, 10, 2])
+    d = am.distances(t, jnp.array([[2, 2]]))
+    np.testing.assert_array_equal(np.asarray(d[0]), [4, 10, 2])
     # pallas backend agrees through the thermometer trick
-    mp = am.AssociativeMemory(bits=3, distance="l1", backend="pallas")
-    mp.write(codes)
-    rp = mp.search(jnp.array([[2, 2]]))
-    np.testing.assert_array_equal(np.asarray(rp.mismatch_counts),
-                                  np.asarray(r.mismatch_counts))
+    dp = am.distances(t, jnp.array([[2, 2]]), backend="pallas")
+    np.testing.assert_array_equal(np.asarray(dp), np.asarray(d))
 
 
 # ---------------------------------------------------------------------------
@@ -239,7 +235,7 @@ def test_dequantize_representatives_ordered():
 
 
 # ---------------------------------------------------------------------------
-# HDC + AssociativeMemory
+# HDC + associative search
 # ---------------------------------------------------------------------------
 
 def _blobs(key, n, k, num, noise=0.7):
@@ -278,23 +274,19 @@ def test_am_backends_consistent_with_analog():
     key = jax.random.PRNGKey(5)
     codes = jax.random.randint(key, (20, 24), 0, 8)
     queries = jax.random.randint(jax.random.fold_in(key, 1), (7, 24), 0, 8)
-    outs = {}
-    for backend in ("ref", "pallas", "analog"):
-        m = am.AssociativeMemory(bits=3, backend=backend)
-        m.write(codes)
-        outs[backend] = np.asarray(m.search(queries).mismatch_counts)
+    t = am.make_table(codes, bits=3)
+    outs = {backend: np.asarray(am.distances(t, queries, backend=backend))
+            for backend in ("ref", "pallas", "analog")}
     np.testing.assert_array_equal(outs["ref"], outs["pallas"])
     np.testing.assert_array_equal(outs["ref"], outs["analog"])
 
 
 def test_am_exact_match_semantics():
-    codes = jnp.array([[1, 2, 3], [4, 5, 6]])
-    m = am.AssociativeMemory(bits=3)
-    m.write(codes)
-    r = m.search(jnp.array([[1, 2, 3], [1, 2, 4]]))
-    assert bool(r.exact_match[0, 0]) and not bool(r.exact_match[0, 1])
-    assert not bool(r.exact_match[1, 0])
+    t = am.make_table(jnp.array([[1, 2, 3], [4, 5, 6]]), bits=3)
+    r = am.search(t, jnp.array([[1, 2, 3], [1, 2, 4]]), k=2)
+    assert bool(r.exact[0, 0]) and not bool(r.exact[1, 0])
     assert int(r.best_row[0]) == 0
+    np.testing.assert_array_equal(np.asarray(r.distances[0]), [0.0, 3.0])
 
 
 # ---------------------------------------------------------------------------

@@ -2,7 +2,7 @@
 
 The full pipeline of Fig. 10: dataset -> HDC encode -> train -> quantize ->
 SEE-MCAM associative search -> accuracy, wired through the production
-AssociativeMemory backends, plus the paper's headline claims as assertions.
+``am.search`` backends, plus the paper's headline claims as assertions.
 """
 
 import dataclasses
