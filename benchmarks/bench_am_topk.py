@@ -1,4 +1,4 @@
-"""Dense vs fused top-k over (Q, N, k): wall-clock + bytes-moved accounting.
+"""Dense vs fused top-k over (Q, N, k), plus the merge-topology sweep.
 
 The fused tier's claim is architectural, not micro-architectural: the dense
 path writes the whole (Q, N) mismatch matrix to HBM before ``lax.top_k``
@@ -16,24 +16,48 @@ reports, per shape:
     plus the shared input bytes;
   * the output-traffic ratio dense/fused ~= N*4 / (k*8), linear in N/k.
 
-``--smoke`` (the CI benchmark job) shrinks the sweep and additionally
-asserts the two paths agree bitwise and that the fused path's output
-traffic is shape-independent of N while dense scales with it — the
-"never materialises (Q, N)" acceptance check.
+The merge-topology sweep (``--banks-sweep`` for just this part) covers the
+second architectural claim, ``search_sharded``'s cross-bank candidate
+reduction: per-device merge traffic is O(k*banks) for the flat all-gather
+but O(k*log banks) for the hierarchical tree merge
+(``docs/ARCHITECTURE.md`` contract 3).  Traffic comes from
+``am.merge_traffic_bytes`` — derived via ``jax.eval_shape`` over the same
+candidate-list helpers the shard_map body exchanges — and, where the host
+has enough (fake) devices, the sweep also wall-clocks both strategies on a
+real mesh and asserts them bitwise-identical to single-device ``am.search``.
+
+``--smoke`` (the CI benchmark job) shrinks both sweeps and asserts:
+
+  * dense == fused bitwise, and fused output traffic independent of N
+    (the "never materialises (Q, N)" check);
+  * tree == allgather == single-device bitwise on an 8-bank mesh;
+  * tree merge traffic grows with ceil(log2(banks)) while allgather grows
+    with (banks - 1) — the O(k*log banks) acceptance bound.
 
   PYTHONPATH=src:. python benchmarks/bench_am_topk.py
   PYTHONPATH=src:. python benchmarks/bench_am_topk.py --smoke
+  PYTHONPATH=src:. python benchmarks/bench_am_topk.py --banks-sweep
 """
 
 from __future__ import annotations
 
 import argparse
+import os
+
+# 8 fake CPU devices so the merge sweep can build real multi-bank meshes;
+# must land before the first jax import (benchmarks.common imports jax).
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS",
+                                                                ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_call
+from repro.core import am
 from repro.kernels.cam_search import ops as cam_ops
 
 BITS = 3
@@ -103,10 +127,72 @@ def run(smoke: bool = False, *, d: int = 64) -> None:
              f"out_traffic_ratio={ratio:.0f}x")
 
 
+def run_merge_sweep(smoke: bool = False, *, d: int = 24) -> None:
+    """Tree vs allgather: per-device merge traffic + (where possible) wall."""
+    q, k, n = (8, 4, 512) if smoke else (16, 8, 4096)
+    banks_sweep = (2, 4, 8, 16, 32, 64) if smoke else (2, 4, 8, 16, 32, 64,
+                                                       128, 256)
+    iters = 3 if smoke else 10
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(0, 8, (n, d)), jnp.int32)
+    queries = jnp.asarray(rng.integers(0, 8, (q, d)), jnp.int32)
+    table = am.make_table(codes, bits=BITS)
+    n_dev = len(jax.devices())
+
+    traffic = {}
+    for banks in banks_sweep:
+        tree_b = am.merge_traffic_bytes(banks, q, k, merge="tree", n_rows=n)
+        ag_b = am.merge_traffic_bytes(banks, q, k, merge="allgather",
+                                      n_rows=n)
+        traffic[banks] = (tree_b, ag_b)
+        derived = (f"tree_bytes={tree_b};allgather_bytes={ag_b};"
+                   f"tree_saving={ag_b / tree_b:.1f}x;"
+                   f"auto={am.resolve_merge('auto', banks)}")
+        wall = 0.0
+        if banks <= n_dev:
+            # a real mesh exists on this host: wall-clock both strategies
+            # (CPU collectives — the architectural signal is the traffic)
+            mesh = jax.sharding.Mesh(np.array(jax.devices()[:banks]),
+                                     ("model",))
+            f_tree = jax.jit(lambda t, qq: am.search_sharded(
+                t, qq, mesh=mesh, k=k, merge="tree").indices)
+            f_ag = jax.jit(lambda t, qq: am.search_sharded(
+                t, qq, mesh=mesh, k=k, merge="allgather").indices)
+            wall = time_call(f_tree, table, queries, iters=iters)
+            ag_us = time_call(f_ag, table, queries, iters=iters)
+            derived += f";tree_us={wall:.1f};allgather_us={ag_us:.1f}"
+            ti, ai = jax.device_get((f_tree(table, queries),
+                                     f_ag(table, queries)))
+            wi = jax.device_get(am.search(table, queries, k=k).indices)
+            np.testing.assert_array_equal(ti, wi)
+            np.testing.assert_array_equal(ai, wi)
+        emit(f"am_merge_banks{banks}_q{q}_k{k}", wall, derived)
+
+    if smoke:
+        # the acceptance bound: tree traffic is O(k * log banks) — it must
+        # grow with ceil(log2(banks)), not with (banks - 1) like allgather
+        per_round = q * k * 8                     # (Q, k) f32+i32 pair
+        for banks in banks_sweep:
+            tree_b, ag_b = traffic[banks]
+            rounds = (banks - 1).bit_length()
+            assert tree_b == rounds * per_round, (banks, tree_b, rounds)
+            assert ag_b == (banks - 1) * per_round, (banks, ag_b)
+        t_ratio = traffic[64][0] / traffic[4][0]
+        a_ratio = traffic[64][1] / traffic[4][1]
+        assert t_ratio == 3.0, t_ratio           # log2(64)/log2(4)
+        assert a_ratio == 21.0, a_ratio          # 63/3
+        assert traffic[64][0] < traffic[64][1]   # tree wins where it matters
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny sweep + bitwise/traffic assertions (CI)")
+                    help="tiny sweeps + bitwise/traffic assertions (CI)")
+    ap.add_argument("--banks-sweep", action="store_true",
+                    help="run only the merge-topology (tree vs allgather) "
+                         "sweep")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(smoke=args.smoke)
+    if not args.banks_sweep:
+        run(smoke=args.smoke)
+    run_merge_sweep(smoke=args.smoke)

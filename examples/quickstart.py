@@ -2,9 +2,17 @@
 
 Programs a 3-bit NOR SEE-MCAM array, runs associative searches through the
 behavioural FeFET device model, the exact-match oracle and the Pallas MXU
-kernel, and prints the calibrated energy/latency/area numbers (Table II).
+kernel, shards the same search over a multi-bank device mesh, and prints the
+calibrated energy/latency/area numbers (Table II).
 
   PYTHONPATH=src python examples/quickstart.py
+
+The sharded stanza banks rows over however many devices the host exposes
+(1 on a laptop CPU); to see a real multi-bank merge on any machine, fake a
+device mesh first:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python examples/quickstart.py
 """
 
 import jax
@@ -38,7 +46,20 @@ def main():
         print(f"backend={backend:7s} top3_rows={[int(i) for i in res.indices]} "
               f"distances={[float(d) for d in res.distances]}")
 
-    # 5. calibrated circuit model (Table II operating point)
+    # 5. the same search sharded over a multi-bank mesh: rows banked over
+    #    the `model` axis, per-bank top-k reduced by the merge topology of
+    #    docs/ARCHITECTURE.md (auto: all-gather on narrow meshes, tree on
+    #    wide) — bitwise-identical to the single-device am.search above
+    n_banks = len(jax.devices())
+    mesh = jax.make_mesh((n_banks,), ("model",))
+    res = am.search_sharded(table, noisy, mesh=mesh, k=3, backend="pallas",
+                            merge="auto")
+    print(f"sharded over {n_banks} bank(s) "
+          f"[merge={am.resolve_merge('auto', n_banks)}]: "
+          f"top3_rows={[int(i) for i in res.indices]} "
+          f"distances={[float(d) for d in res.distances]}")
+
+    # 6. calibrated circuit model (Table II operating point)
     s = energy.model_summary(n_cells=32, bits=3)
     print(f"\nNOR  2FeFET-1T : {s['nor']['energy_fj_per_bit']:.3f} fJ/bit, "
           f"{s['nor']['latency_ps']:.0f} ps, "

@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Check that markdown cross-references between the docs resolve.
+
+Walks the repo's documentation set (README.md, docs/*.md, ROADMAP.md), pulls
+every relative markdown link out of it, and verifies
+
+  * the target file exists (relative to the linking file), and
+  * when the link carries a ``#fragment``, the target file has a heading
+    whose GitHub anchor slug matches.
+
+Pure stdlib, no dependencies — this is the CI docs job's link gate, so the
+README <-> docs/ARCHITECTURE.md contract pointers cannot silently break.
+
+  python scripts/check_docs_links.py            # from the repo root
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = ["README.md", "ROADMAP.md", *sorted(
+    str(p.relative_to(REPO)) for p in (REPO / "docs").glob("*.md"))]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def strip_code_fences(text: str) -> str:
+    """Drop fenced code blocks so example snippets are not parsed as links."""
+    out, fenced = [], False
+    for line in text.splitlines():
+        if FENCE_RE.match(line.strip()):
+            fenced = not fenced
+            continue
+        if not fenced:
+            out.append(line)
+    return "\n".join(out)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, punctuation dropped, spaces to '-'."""
+    slug = heading.strip().lower()
+    slug = re.sub(r"[`*_]", "", slug)              # inline markup
+    slug = re.sub(r"[^\w\- ]", "", slug)           # punctuation
+    return slug.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set[str]:
+    """Every heading anchor a file exposes (with GitHub dup numbering)."""
+    anchors: set[str] = set()
+    counts: dict[str, int] = {}
+    for line in strip_code_fences(path.read_text()).splitlines():
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(2))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
+
+
+def check() -> list[str]:
+    """Return a list of human-readable failures (empty == all links resolve)."""
+    failures: list[str] = []
+    for rel in DOC_FILES:
+        src = REPO / rel
+        if not src.exists():
+            failures.append(f"{rel}: documentation file missing")
+            continue
+        for target in LINK_RE.findall(strip_code_fences(src.read_text())):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:, …
+                continue
+            path_part, _, fragment = target.partition("#")
+            dest = (src.parent / path_part).resolve() if path_part else src
+            if not dest.exists():
+                failures.append(f"{rel}: broken link -> {target}")
+                continue
+            if fragment and dest.suffix == ".md":
+                if fragment not in anchors_of(dest):
+                    failures.append(
+                        f"{rel}: missing anchor #{fragment} in "
+                        f"{dest.relative_to(REPO)}")
+    return failures
+
+
+def main() -> int:
+    failures = check()
+    for f in failures:
+        print(f"FAIL {f}")
+    checked = ", ".join(DOC_FILES)
+    if failures:
+        print(f"\n{len(failures)} broken cross-reference(s) in: {checked}")
+        return 1
+    print(f"OK all cross-references resolve in: {checked}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

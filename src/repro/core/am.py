@@ -13,12 +13,18 @@ top-k / threshold associative lookups over it.  Everything is data-in/data-out:
 jits as a whole (the table is a traced argument — no hidden host state), vmaps
 over query batches, and passes through ``shard_map``.  :func:`search_sharded`
 row-partitions the table over the ``model`` mesh axis (the paper's multi-bank
-organisation) and merges per-bank top-k candidates with an all-gather.
+organisation) and merges per-bank top-k candidates — with a flat all-gather on
+narrow meshes or a hierarchical tree merge on wide ones (see "Merge
+topologies" below).
 
 Backends are plugins registered through :func:`register_backend`; ``"ref"``
 (pure jnp oracle), ``"pallas"`` (MXU one-hot Gram kernel,
 :mod:`repro.kernels.cam_search`) and ``"analog"`` (behavioural FeFET circuit
 model, :mod:`repro.core.cam_array`) ship by default.
+
+The full stack contract — layer map, capability tiers, tie-break guarantee,
+merge-topology decision table — is documented in ``docs/ARCHITECTURE.md``
+(machine-checked against this module by ``tests/test_docs_contract.py``).
 
 Backend capability tiers
 ------------------------
@@ -37,6 +43,25 @@ ascending (distance, row index), lowest row index winning every tie —
 including among +inf masked rows.  ``"pallas"`` ships a fused tier
 (:func:`repro.kernels.cam_search.ops.topk_fused`); ``"ref"`` and
 ``"analog"`` are dense-only.
+
+Merge topologies (``search_sharded``'s cross-bank candidate reduction)
+----------------------------------------------------------------------
+Per-bank top-k candidate lists are reduced to the global top-k by one of two
+strategies, selected by the ``merge=`` argument:
+
+* ``"allgather"`` — every bank broadcasts its (Q, k_local) candidate pair to
+  every other bank, then re-ranks locally.  One collective round; per-device
+  traffic O(Q * k * banks).  Right for narrow meshes.
+* ``"tree"``      — ceil(log2(banks)) rounds of pairwise ``ppermute`` +
+  k-way lexicographic (distance, global-row-index) merge, each round keeping
+  only the running top-k.  Per-device traffic O(Q * k * log banks) — flat
+  per bank as the array scales out, the paper's scalability claim.
+* ``"auto"``      — ``"tree"`` when the mesh's ``model`` axis is at least
+  :data:`TREE_MERGE_MIN_BANKS` wide, else ``"allgather"``.
+
+Both strategies are bitwise-identical to single-device :func:`search` —
+the lexicographic merge preserves the (distance, row index) tie-break
+exactly — so the choice is purely a traffic/latency trade.
 
 Distance-unit contract (every backend must satisfy it)
 ------------------------------------------------------
@@ -104,25 +129,39 @@ class AMTable:
     distance: str = "hamming"
 
     def tree_flatten(self):
+        """Flatten into (codes, meta) children + (bits, distance) aux."""
         return (self.codes, self.meta), (self.bits, self.distance)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """Rebuild from the children/aux pair of :meth:`tree_flatten`."""
         codes, meta = children
         return cls(codes=codes, meta=meta, bits=aux[0], distance=aux[1])
 
     @property
     def n_rows(self) -> int:
+        """Stored row (word) count N."""
         return self.codes.shape[0]
 
     @property
     def width(self) -> int:
+        """Word width D in multi-bit symbols."""
         return self.codes.shape[1]
 
 
 def make_table(codes, *, bits: int = 3, distance: str = "hamming",
                meta=None) -> AMTable:
-    """Build an :class:`AMTable` from (N, D) integer symbol codes."""
+    """Build an :class:`AMTable` from (N, D) integer symbol codes.
+
+    Args:
+      codes: (N, D) integer symbols in [0, 2**bits).
+      bits: bits per stored symbol (static).
+      distance: ``"hamming"`` or ``"l1"`` (static; see the unit contract).
+      meta: optional per-row array whose leading axis aligns with rows.
+
+    Returns:
+      A new immutable :class:`AMTable`.
+    """
     if distance not in DISTANCES:
         raise ValueError(f"unknown distance {distance!r}; expected {DISTANCES}")
     codes = jnp.asarray(codes, jnp.int32)
@@ -166,8 +205,7 @@ def append(table: AMTable, codes, meta=None) -> AMTable:
 
 
 def delete(table: AMTable, rows) -> AMTable:
-    """Drop rows by (static) index — or by boolean eviction mask —
-    returning a new table.
+    """Drop rows by index array or boolean eviction mask; returns a new table.
 
     ``rows`` is either an integer index array or an (N,) boolean mask where
     ``True`` marks rows to remove (the eviction-mask path: policies compute
@@ -257,6 +295,7 @@ class _Backend:
 
     @property
     def capabilities(self) -> tuple[str, ...]:
+        """Tier names this backend implements, dense always first."""
         return ("dense",) if self.fused is None else ("dense", "fused")
 
 
@@ -268,11 +307,13 @@ def register_backend(name: str, fn: BackendFn, *,
                      fused: FusedBackendFn | None = None) -> None:
     """Register (or replace) a search backend under ``name``.
 
-    ``fn(queries, codes, bits, distance)`` must return the (Q, N) distance
-    matrix under the module-level unit contract (the dense tier).  ``fused``
-    optionally adds the fused tier — a direct top-k
-    ``fn(queries, codes, bits, distance, k=, valid_rows=)`` that must be
-    bitwise-identical to dense + ``lax.top_k`` (see module docstring).
+    Args:
+      name: registry key callers pass as ``backend=``.
+      fn: the dense tier — ``fn(queries, codes, bits, distance)`` returning
+        the (Q, N) distance matrix under the module-level unit contract.
+      fused: optionally the fused tier — a direct top-k
+        ``fn(queries, codes, bits, distance, k=, valid_rows=)`` that must be
+        bitwise-identical to dense + ``lax.top_k`` (see module docstring).
     """
     _BACKENDS[name] = _Backend(dense=fn, fused=fused)
 
@@ -292,12 +333,16 @@ def _get_entry(name: str) -> _Backend:
 
 
 def backend_names() -> tuple[str, ...]:
+    """Names of every registered backend, registration order."""
     return tuple(_BACKENDS)
 
 
 def backend_capabilities(name: str) -> tuple[str, ...]:
-    """Capability tiers of a registered backend: ("dense",) or
-    ("dense", "fused")."""
+    """Capability tiers of the backend registered under ``name``.
+
+    ``("dense",)`` for dense-only backends, ``("dense", "fused")`` when a
+    fused top-k tier is registered as well.
+    """
     return _get_entry(name).capabilities
 
 
@@ -368,9 +413,15 @@ def make_analog_backend(variation_key: jax.Array | None = None,
     ``codes.shape``, so under :func:`search_sharded` every bank would draw
     the same realisation for different rows (and none would match the
     single-device draw) — run Monte-Carlo studies through :func:`search`.
-    """
 
-    def backend(queries, codes, bits, distance):
+    Args:
+      variation_key: optional PRNG key for per-cell V_TH variation noise.
+      params: FeFET device parameters the circuit model evaluates under.
+
+    Returns:
+      A dense-tier :data:`BackendFn`.
+    """
+    def _backend(queries, codes, bits, distance):
         from repro.core import cam_array
         noise1 = noise2 = None
         if variation_key is not None:
@@ -383,7 +434,7 @@ def make_analog_backend(variation_key: jax.Array | None = None,
             return mismatch
         return i_ml / mibo.lsb_mismatch_current(bits, params)
 
-    return backend
+    return _backend
 
 
 register_backend("ref", _ref_backend)
@@ -410,10 +461,12 @@ class AMSearchResult:
     matched: jnp.ndarray     # bool — within `threshold` (== exact if None)
 
     def tree_flatten(self):
+        """Flatten into the four result arrays (no aux data)."""
         return (self.indices, self.distances, self.exact, self.matched), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """Rebuild from the children of :meth:`tree_flatten`."""
         del aux
         return cls(*children)
 
@@ -424,6 +477,7 @@ class AMSearchResult:
 
     @property
     def best_distance(self) -> jnp.ndarray:
+        """(Q,) distance of the single nearest row."""
         return self.distances[..., 0]
 
 
@@ -518,37 +572,194 @@ def search(table: AMTable, queries, *, k: int = 1,
 # Sharded multi-bank search
 # ---------------------------------------------------------------------------
 
+#: Cross-bank merge strategies ``search_sharded`` accepts.
+MERGE_STRATEGIES = ("auto", "allgather", "tree")
+
+#: ``merge="auto"`` picks the tree merge at and above this ``model``-axis
+#: width.  Below it the flat all-gather's single collective round beats the
+#: tree's log2(banks) round latency; above it the all-gather's O(k * banks)
+#: per-device traffic dominates (ROADMAP: flat merge stops scaling past
+#: ~16-way meshes).  ``docs/ARCHITECTURE.md`` holds the decision table;
+#: ``tests/test_docs_contract.py`` keeps the two in sync.
+TREE_MERGE_MIN_BANKS = 16
+
+#: Row-index sentinel for candidate-list padding and duplicate masking; sorts
+#: after every real row index (and after +inf-masked real rows at equal
+#: distance), so sentinels can never displace a genuine candidate.
+_IDX_SENTINEL = np.iinfo(np.int32).max
+
+
+def resolve_merge(merge: str, n_banks: int) -> str:
+    """Resolve a ``merge=`` argument to a concrete strategy.
+
+    Args:
+      merge: ``"auto"``, ``"allgather"`` or ``"tree"``.
+      n_banks: width of the mesh axis the table is banked over.
+
+    Returns:
+      ``"allgather"`` or ``"tree"`` (``"auto"`` resolves by
+      :data:`TREE_MERGE_MIN_BANKS`).
+    """
+    if merge not in MERGE_STRATEGIES:
+        raise ValueError(
+            f"unknown merge {merge!r}; expected one of {MERGE_STRATEGIES}")
+    if merge != "auto":
+        return merge
+    return "tree" if n_banks >= TREE_MERGE_MIN_BANKS else "allgather"
+
+
+def _pad_candidates(dist: jnp.ndarray, idx: jnp.ndarray,
+                    k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pad a (Q, k_local) candidate list out to (Q, k) with +inf sentinels.
+
+    The tree merge exchanges fixed-width (Q, k) lists every round; a bank
+    with fewer than k live candidates pads with (+inf, _IDX_SENTINEL)
+    entries, which lexicographically rank after every genuine candidate —
+    including +inf-masked real rows, whose indices are < _IDX_SENTINEL.
+    """
+    q, k_local = dist.shape
+    if k_local >= k:
+        return dist, idx
+    pad = k - k_local
+    return (jnp.concatenate(
+                [dist, jnp.full((q, pad), jnp.inf, dist.dtype)], axis=1),
+            jnp.concatenate(
+                [idx, jnp.full((q, pad), _IDX_SENTINEL, idx.dtype)], axis=1))
+
+
+def _lex_merge_topk(dist_a: jnp.ndarray, idx_a: jnp.ndarray,
+                    dist_b: jnp.ndarray, idx_b: jnp.ndarray,
+                    k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Merge two per-query candidate lists, keeping the lexicographic top-k.
+
+    The order is ascending (distance, global row index) — ``lax.sort`` with
+    two keys — which is exactly ``lax.top_k``'s tie-break over a dense
+    matrix, so composing this merge up a reduction tree stays
+    bitwise-identical to the single-device search.
+
+    Duplicate candidates (same global row arriving from both lists, which
+    happens on non-power-of-two bank counts where the recursive-doubling
+    coverage wraps) are masked to (+inf, _IDX_SENTINEL) before the final
+    cut, so a row can never occupy two of the k slots and displace the true
+    k-th best.
+    """
+    dist = jnp.concatenate([dist_a, dist_b], axis=1)
+    idx = jnp.concatenate([idx_a, idx_b], axis=1)
+    dist, idx = jax.lax.sort((dist, idx), num_keys=2)
+    # identical (distance, row) pairs are adjacent after the lex sort
+    dup = jnp.concatenate(
+        [jnp.zeros_like(idx[:, :1], dtype=bool), idx[:, 1:] == idx[:, :-1]],
+        axis=1)
+    dist = jnp.where(dup, jnp.inf, dist)
+    idx = jnp.where(dup, _IDX_SENTINEL, idx)
+    dist, idx = jax.lax.sort((dist, idx), num_keys=2)
+    return dist[:, :k], idx[:, :k]
+
+
+def merge_traffic_bytes(n_banks: int, q: int, k: int, *, merge: str = "auto",
+                        n_rows: int | None = None) -> int:
+    """Per-device bytes *received* over the mesh axis during the merge.
+
+    A traffic *model* kept next to the implementation it describes: the
+    per-round tree payload comes from ``jax.eval_shape`` over
+    :func:`_pad_candidates` — the same helper ``search_sharded``'s bank body
+    builds its exchanged lists with — and the all-gather count multiplies
+    out the local (Q, k_local) candidate avals.  If the bank body changes
+    what it exchanges, change this function in the same commit;
+    ``benchmarks/bench_am_topk.py`` asserts the O(k * log banks) tree bound
+    against it.
+
+    Args:
+      n_banks: width of the banked mesh axis.
+      q: query batch size per device.
+      k: requested top-k.
+      merge: strategy (``"auto"`` resolves by :func:`resolve_merge`).
+      n_rows: total table rows; defaults to enough that every bank fields a
+        full (Q, k) candidate list.
+
+    Returns:
+      Bytes received per device across all merge rounds.
+    """
+    if n_banks < 1:
+        raise ValueError(f"n_banks must be >= 1, got {n_banks}")
+    strategy = resolve_merge(merge, n_banks)
+    n_rows = n_banks * max(1, k) if n_rows is None else n_rows
+    k_eff = min(k, n_rows)
+    local_n = -(-n_rows // n_banks)
+    k_local = min(k_eff, local_n)
+    local = (jax.ShapeDtypeStruct((q, k_local), jnp.float32),
+             jax.ShapeDtypeStruct((q, k_local), jnp.int32))
+
+    def _nbytes(avals) -> int:
+        return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                   for a in jax.tree_util.tree_leaves(avals))
+
+    if strategy == "allgather":
+        # every other bank's (Q, k_local) pair lands on this device
+        return (n_banks - 1) * _nbytes(local)
+    # tree: one padded (Q, k_eff) pair per recursive-doubling round
+    payload = jax.eval_shape(functools.partial(_pad_candidates, k=k_eff),
+                             *local)
+    rounds = (n_banks - 1).bit_length()        # == ceil(log2(n_banks))
+    return rounds * _nbytes(payload)
+
+
 def search_sharded(table: AMTable, queries, *, mesh, rules=None, k: int = 1,
                    threshold: float | jnp.ndarray | None = None,
                    backend: str | BackendFn | None = None,
-                   valid_rows: int | jnp.ndarray | None = None
-                   ) -> AMSearchResult:
+                   valid_rows: int | jnp.ndarray | None = None,
+                   merge: str = "auto") -> AMSearchResult:
     """Row-partitioned search over the ``model`` mesh axis (multi-bank merge).
 
     The table is split into ``mesh.shape[rules.tp]`` banks
     (:meth:`repro.dist.specs.Rules.am_table`); each bank runs the backend on
     its rows and keeps a local top-k with *global* row indices, then the
-    candidates are all-gathered along the axis and reduced with a second
-    top-k — the paper's multi-bank match-merge.  Queries are replicated to
-    every bank (:meth:`Rules.am_queries`).
+    per-bank candidates are reduced to the global top-k by the selected
+    merge strategy — the paper's multi-bank match-merge.
 
-    Bitwise-identical to :func:`search` on one device: per-bank candidate
-    lists are each sorted by (distance, row index) and concatenate in
-    bank-major order, so the merge resolves ties to the lowest global row
-    index exactly like the single-device ``top_k``.  This holds for any
-    backend that is a pure row-wise function of its ``codes`` argument —
-    backends whose output depends on the table's shape or global row
-    position (e.g. :func:`make_analog_backend` with a ``variation_key``,
-    which samples noise from ``codes.shape``) are not supported here.
+    Args:
+      table: the code store (searched in full by every query).
+      queries: (Q, D) — or a single (D,) — integer symbol words.
+      k: how many nearest rows to return (static; clamped to the table size).
+      threshold: optional match radius, :func:`search` semantics.
+      backend: registered backend name / raw dense callable / ``None``.
+      valid_rows: optional live-row count, :func:`search` semantics — rows at
+        index >= ``valid_rows`` are masked to ``+inf`` in every bank (the
+        capacity-slab serving path routes here unchanged when the service
+        holds a mesh).
+      mesh: the device mesh; its ``rules.tp`` axis is the bank axis.
+      rules: optional :class:`repro.dist.specs.Rules`; defaults to
+        ``make_rules(mesh, "tp")``.
+      merge: cross-bank candidate reduction — ``"allgather"`` (one tiled
+        all-gather round, O(k * banks) per-device traffic), ``"tree"``
+        (ceil(log2(banks)) ``ppermute`` rounds of pairwise lexicographic
+        merge, O(k * log banks) traffic), or ``"auto"`` (tree at >=
+        :data:`TREE_MERGE_MIN_BANKS` banks).  Any bank count works with
+        either strategy, including 1 and non-powers-of-two.
 
-    ``valid_rows`` has :func:`search` semantics: rows at index >=
-    ``valid_rows`` are masked to ``+inf`` in every bank (the capacity-slab
-    serving path routes here unchanged when the service holds a mesh).
+    Returns:
+      :class:`AMSearchResult`, bitwise-identical to :func:`search` on one
+      device for every merge strategy: per-bank candidate lists are each
+      ordered by (distance, global row index) and both merges resolve ties
+      to the lowest global row index exactly like the single-device
+      ``top_k``.  This holds for any backend that is a pure row-wise
+      function of its ``codes`` argument — backends whose output depends on
+      the table's shape or global row position (e.g.
+      :func:`make_analog_backend` with a ``variation_key``, which samples
+      noise from ``codes.shape``) are not supported here.
+
+    Data-parallel query sharding composes automatically: when ``rules`` has
+    data-parallel axes (a (dp, model) mesh) and the query count divides
+    their total width, queries go in sharded by
+    :meth:`~repro.dist.specs.Rules.am_queries_dp` — each data shard searches
+    only its own query slice against all banks, instead of every device
+    redundantly searching the full replicated batch.  Results are identical
+    either way; the dp path just removes the replicated compute and memory.
 
     Fused-tier backends run their streaming top-k kernel *per bank* (the
-    bank's slice of the mask handled in-kernel), so each device moves only
-    O(Q*k_local) candidate bytes into the all-gather — cross-device traffic
-    is O(banks*k) whichever tier the backend has.
+    bank's slice of the ``valid_rows`` mask handled in-kernel), so each
+    device moves only O(Q*k_local) candidate bytes into the merge whichever
+    tier the backend has.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -557,6 +768,7 @@ def search_sharded(table: AMTable, queries, *, mesh, rules=None, k: int = 1,
     rules = rules or dist_specs.make_rules(mesh, "tp")
     axis = rules.tp
     n_banks = mesh.shape[axis]
+    strategy = resolve_merge(merge, n_banks)
     queries, squeeze = _prep_queries(table, queries)
     be = _resolve_backend(backend)
     bits, distance_mode = table.bits, table.distance
@@ -570,32 +782,64 @@ def search_sharded(table: AMTable, queries, *, mesh, rules=None, k: int = 1,
     vr = jnp.asarray(n if valid_rows is None else valid_rows, jnp.int32)
     use_fused = be.fused is not None and 1 <= k_local <= FUSED_K_MAX
 
-    def bank_body(codes_local, q, vr):
+    # data-parallel query sharding: each dp shard searches its own slice
+    dp_axes = tuple(rules.dp or ())
+    dp_width = 1
+    for a in dp_axes:
+        dp_width *= mesh.shape.get(a, 1)
+    shard_queries = dp_width > 1 and queries.shape[0] % dp_width == 0
+    q_spec = rules.am_queries_dp() if shard_queries else rules.am_queries()
+    out_batch = rules.dp if shard_queries else None
+
+    def _bank_body(codes_local, q, vr):
+        """Per-bank local top-k + the cross-bank candidate merge."""
         base = jax.lax.axis_index(axis) * local_n
         if use_fused:
             # the bank's slice of the global live-row mask, applied in-kernel
             vr_local = jnp.clip(vr - base, 0, local_n)
             il, dl = be.fused(q, codes_local, bits, distance_mode,
                               k=k_local, valid_rows=vr_local)
-            neg = -dl
         else:
             d = be.dense(q, codes_local, bits,
                          distance_mode).astype(jnp.float32)
             row = base + jnp.arange(local_n)
             d = jnp.where(row[None, :] < vr, d, jnp.inf)  # mask dead/pad rows
             neg, il = jax.lax.top_k(-d, k_local)
+            dl = -neg
         gi = (il + base).astype(jnp.int32)
-        negs = jax.lax.all_gather(neg, axis, axis=1, tiled=True)
+
+        if strategy == "tree":
+            # Recursive doubling: round r receives the running top-k of the
+            # bank 2**r places down-ring and folds it in with the pairwise
+            # lexicographic merge.  After ceil(log2(banks)) rounds every
+            # bank has folded in every other bank's candidates (offsets
+            # 0..2**rounds-1 cover the whole ring; overlap on
+            # non-power-of-two widths is handled by the merge's dedup), so
+            # the result is the replicated global top-k — per-device
+            # traffic O(Q * k * log banks) instead of O(Q * k * banks).
+            dist_c, idx_c = _pad_candidates(dl, gi, k_eff)
+            for r in range((n_banks - 1).bit_length()):
+                shift = 1 << r
+                perm = [(i, (i + shift) % n_banks) for i in range(n_banks)]
+                dist_p = jax.lax.ppermute(dist_c, axis, perm)
+                idx_p = jax.lax.ppermute(idx_c, axis, perm)
+                dist_c, idx_c = _lex_merge_topk(dist_c, idx_c,
+                                                dist_p, idx_p, k_eff)
+            return idx_c, dist_c
+
+        # flat merge: all-gather every bank's candidates, re-rank locally
+        negs = jax.lax.all_gather(-dl, axis, axis=1, tiled=True)
         gis = jax.lax.all_gather(gi, axis, axis=1, tiled=True)
         neg2, pos = jax.lax.top_k(negs, k_eff)
         return jnp.take_along_axis(gis, pos, axis=1), -neg2
 
-    # Outputs are replicated by construction (both come out of the all-gather
-    # merge), but 0.4.x's replication checker can't see through the
-    # gather -> top_k -> take_along_axis chain, so the check is disabled.
+    # Outputs are replicated over `model` by construction (both merges end
+    # with every bank holding the same candidates), but 0.4.x's replication
+    # checker can't see through the collective -> sort/top_k chain, so the
+    # check is disabled.
     idx, dist = jax.shard_map(
-        bank_body, mesh=mesh,
-        in_specs=(rules.am_table(), rules.am_queries(), P()),
-        out_specs=(P(None, None), P(None, None)),
+        _bank_body, mesh=mesh,
+        in_specs=(rules.am_table(), q_spec, P()),
+        out_specs=(P(out_batch, None), P(out_batch, None)),
         check_vma=False)(codes, queries, vr)
     return _finalize(idx, dist, threshold, squeeze)

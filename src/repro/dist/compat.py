@@ -55,9 +55,11 @@ def _install_make_mesh() -> None:
 
     @functools.wraps(orig)
     def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
-        # 0.4.x meshes are always GSPMD-auto; Manual/Explicit requests only
-        # arrive from shard_map (which handles them itself), so the kwarg is
-        # accepted for source compatibility and dropped.
+        """Accept and drop ``axis_types`` on 0.4.x (always GSPMD-auto).
+
+        Manual/Explicit requests only arrive from shard_map, which handles
+        them itself, so the kwarg exists purely for source compatibility.
+        """
         del axis_types
         return orig(axis_shapes, axis_names, devices=devices)
 
@@ -69,9 +71,12 @@ def _install_set_mesh() -> None:
         return
 
     def set_mesh(mesh):
-        """``with jax.set_mesh(mesh):`` — on 0.4.x the legacy mesh context
-        already makes bare ``PartitionSpec``s resolvable, so the mesh itself
-        (a context manager) is the right object to return."""
+        """Return ``mesh`` itself as the ``with jax.set_mesh(mesh):`` context.
+
+        On 0.4.x the legacy mesh resource context already makes bare
+        ``PartitionSpec``s resolvable, so the mesh (a context manager) is
+        the right object to return.
+        """
         return mesh
 
     jax.set_mesh = set_mesh

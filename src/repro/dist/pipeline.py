@@ -72,8 +72,11 @@ def make_pp_forward(block_apply, n_layers: int, n_stages: int, n_micro: int,
     perm = [(s, (s + 1) % n_stages) for s in range(n_stages)]
 
     def stage_body(stage_params, x_local):
-        """Per-pod GPipe schedule.  ``stage_params`` leaves:
-        (layers_per_stage, ...); ``x_local``: (n_micro, batch_local, ...)."""
+        """Run one pod's GPipe schedule.
+
+        ``stage_params`` leaves are (layers_per_stage, ...); ``x_local`` is
+        (n_micro, batch_local, ...).
+        """
         stage = jax.lax.axis_index(PP_AXIS)
         outputs = jnp.zeros_like(x_local)
         carry = jnp.zeros_like(x_local[0])
@@ -95,6 +98,7 @@ def make_pp_forward(block_apply, n_layers: int, n_stages: int, n_micro: int,
     out_spec = P(PP_AXIS, *tuple(in_spec)[1:])
 
     def fwd(params, x):
+        """Pipelined forward: layer-stacked ``params``, microbatched ``x``."""
         if x.shape[0] != n_micro:
             raise ValueError(f"x leading axis {x.shape[0]} != n_micro="
                              f"{n_micro}")

@@ -26,7 +26,14 @@ Specs factories (shapes they describe):
   ``logits``         (B, S, V)     output logits
   ``am_table``       (N, D)        associative-memory code rows banked on tp
   ``am_queries``     (Q, D)        associative-search queries (replicated)
+  ``am_queries_dp``  (Q, D)        associative-search queries, batch on dp
   ``am_meta``        (N, M)        per-row serving meta/timestamps (replicated)
+
+The associative-memory specs are one half of the search-stack contract
+documented in ``docs/ARCHITECTURE.md`` (the other half is the backend tier
+contract in :mod:`repro.core.am`): each spec's docstring states which mesh
+axis every tensor dimension binds to and what replication that implies, and
+the ruff ``D`` gate on this package keeps those docstrings from rotting.
 
 ``make_rules`` binds a mesh: it picks the batch (data-parallel) axes from
 whatever subset of ``("pod", "data")`` the mesh has AND divides the global
@@ -76,23 +83,23 @@ class Rules:
     # -- activations ---------------------------------------------------------
 
     def act_resid(self) -> P:
-        """(B, S, D) residual stream."""
+        """(B, S, D) residual stream: B on dp, S on tp when sequence-sharded."""
         if self.layout == "cp" or self.resid_seq_shard:
             return P(self.dp, self.tp, None)
         return P(self.dp, None, None)
 
     def act_heads(self) -> P:
-        """(B, S, H, dh): heads on tp (Megatron); seq on tp under cp."""
+        """(B, S, H, dh): B on dp; H on tp (Megatron) or S on tp under cp."""
         if self.layout == "tp":
             return P(self.dp, None, self.tp, None)
         return P(self.dp, self.tp, None, None)
 
     def act_seq_heads(self) -> P:
-        """(B, S, H, dh) with the sequence axis sharded (context parallel)."""
+        """(B, S, H, dh): B on dp, S on tp (context parallel), H replicated."""
         return P(self.dp, self.tp, None, None)
 
     def act_ff(self) -> P:
-        """(B, S, F) feed-forward hidden activations."""
+        """(B, S, F): B on dp; F on tp (Megatron) or S on tp under cp."""
         if self.layout == "tp":
             return P(self.dp, None, self.tp)
         return P(self.dp, self.tp, None)
@@ -100,36 +107,62 @@ class Rules:
     # -- weights -------------------------------------------------------------
 
     def w2(self) -> P:
-        """(d_in, d_out) column-parallel weight: output dim on tp, FSDP in."""
+        """(d_in, d_out) column-parallel weight: d_out on tp, d_in on fsdp."""
         return P(self.fsdp, self.tp)
 
     def w2_row(self) -> P:
-        """(d_in, d_out) row-parallel weight: input dim on tp, FSDP out."""
+        """(d_in, d_out) row-parallel weight: d_in on tp, d_out on fsdp."""
         return P(self.tp, self.fsdp)
 
     def embed(self) -> P:
-        """(V, D) embedding table; V is 256-padded so it divides the TP width
-        (and its transpose serves as the tied LM head)."""
+        """(V, D) embedding table: V on tp, D on fsdp.
+
+        V is 256-padded so it divides the TP width, and the transpose serves
+        as the tied LM head.
+        """
         return P(self.tp, self.fsdp)
 
     # -- associative memory (repro.core.am) ----------------------------------
 
     def am_table(self) -> P:
-        """(N, D) associative-memory code table: rows banked over tp.
+        """(N, D) associative-memory code table: N (rows) on tp, D replicated.
 
-        The SEE-MCAM multi-bank organisation — each tp shard holds a bank of
-        rows and searches it locally; :func:`repro.core.am.search_sharded`
-        merges per-bank top-k candidates with an all-gather along this axis.
-        Per-bank search uses the backend's fused top-k tier when it has one,
-        so each bank contributes exactly its (Q, k_local) candidate pair to
-        the collective — cross-device traffic is O(banks * k) and per-device
-        HBM traffic O(Q * k_local), independent of the bank's row count.
+        The SEE-MCAM multi-bank organisation — each ``tp`` shard holds one
+        bank of ``N / banks`` rows and searches it locally;
+        :func:`repro.core.am.search_sharded` reduces the per-bank top-k
+        candidates along this axis (all-gather or tree merge per its
+        ``merge=`` argument).  Per-bank search uses the backend's fused
+        top-k tier when it has one, so each bank contributes exactly its
+        (Q, k_local) candidate pair to the collective — per-device HBM
+        traffic is O(Q * k_local), independent of the bank's row count, and
+        cross-device merge traffic is O(k * banks) for the all-gather or
+        O(k * log banks) for the tree.
         """
         return P(self.tp, None)
 
     def am_queries(self) -> P:
-        """(Q, D) search queries: replicated to every bank."""
+        """(Q, D) search queries: fully replicated.
+
+        Every bank (every ``tp`` shard, on every ``dp`` slice) sees the full
+        query batch and searches it against its own rows — the right layout
+        for small Q or meshes with no data-parallel axes.  For batched
+        traffic on a (dp, model) mesh use :meth:`am_queries_dp`.
+        """
         return P(None, None)
+
+    def am_queries_dp(self) -> P:
+        """(Q, D) search queries: Q (batch) on the dp axes, D replicated.
+
+        Each data-parallel slice holds only its own query shard and searches
+        it against *all* banks (the table stays banked over ``tp`` per
+        :meth:`am_table`, replicated across ``dp``) — the query batch is
+        never replicated, so per-device search compute drops by the dp
+        width.  Degrades to :meth:`am_queries` replication when the rules
+        have no dp axes (``self.dp is None``).  Requires Q to divide the
+        total dp width; :func:`repro.core.am.search_sharded` selects this
+        spec automatically exactly when it does.
+        """
+        return P(self.dp, None)
 
     def am_meta(self) -> P:
         """(N, M) per-row serving meta (timestamps, value ids): replicated.
@@ -143,7 +176,7 @@ class Rules:
     # -- outputs -------------------------------------------------------------
 
     def logits(self) -> P:
-        """(B, S, V) logits: vocab on tp (tp) / sequence on tp (cp)."""
+        """(B, S, V): B on dp; V on tp (tp) or S on tp (cp)."""
         if self.layout == "tp":
             return P(self.dp, None, self.tp)
         return P(self.dp, self.tp, None)
@@ -162,6 +195,9 @@ def make_rules(mesh: jax.sharding.Mesh, layout: str, *,
         while their cumulative product still divides it; a batch of 1 yields a
         fully replicated batch rather than an invalid sharding.
       resid_seq_shard: Megatron-SP residual stream for the ``tp`` layout.
+
+    Returns:
+      An immutable :class:`Rules` whose factories name only axes of ``mesh``.
     """
     if layout not in LAYOUTS:
         raise ValueError(f"unknown layout {layout!r}; expected one of {LAYOUTS}")
@@ -183,8 +219,7 @@ def make_rules(mesh: jax.sharding.Mesh, layout: str, *,
 
 
 def constrain(x: jax.Array, spec: P) -> jax.Array:
-    """Apply a GSPMD sharding constraint, or return ``x`` untouched when the
-    constraint cannot apply.
+    """Apply a GSPMD sharding constraint where it can apply, else return ``x``.
 
     No-op conditions:
       * no ambient mesh (``jax.set_mesh`` not active) — single-process unit
@@ -199,7 +234,8 @@ def constrain(x: jax.Array, spec: P) -> jax.Array:
         return x
     axis_names = set(mesh.axis_names)
 
-    def scrub(entry):
+    def _scrub(entry):
+        """Drop axis names the ambient mesh does not have from one entry."""
         if entry is None:
             return None
         names = entry if isinstance(entry, tuple) else (entry,)
@@ -208,7 +244,7 @@ def constrain(x: jax.Array, spec: P) -> jax.Array:
             return None
         return names if len(names) > 1 else names[0]
 
-    entries = tuple(scrub(e) for e in spec)
+    entries = tuple(_scrub(e) for e in spec)
     if all(e is None for e in entries):
         return x
     return jax.lax.with_sharding_constraint(x, P(*entries))

@@ -47,6 +47,13 @@ def main():
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--am-cache", type=int, default=8, metavar="CAPACITY",
                     help="AM response-cache capacity (0 disables the cache)")
+    ap.add_argument("--am-sharded", action="store_true",
+                    help="route the AM cache through am.search_sharded on "
+                         "the serving mesh (rows banked over `model`)")
+    ap.add_argument("--am-merge", choices=("auto", "allgather", "tree"),
+                    default="auto",
+                    help="cross-bank candidate merge topology for the "
+                         "sharded AM cache (see docs/ARCHITECTURE.md)")
     args = ap.parse_args()
 
     cfg = get_config(ALIASES.get(args.arch, args.arch), smoke=args.smoke)
@@ -67,7 +74,9 @@ def main():
         # deadline-batched: submits queue until the 5 ms flush_after expires;
         # the poll() loop below (the serve loop) fires the flush, so a
         # half-full bucket never waits on another submit arriving.
-        svc = AMService(max_batch=max(64, args.requests),
+        svc = AMService(mesh=mesh if args.am_sharded else None,
+                        merge=args.am_merge,
+                        max_batch=max(64, args.requests),
                         flush_after=0.005, time_fn=time.monotonic)
         svc.create_table("responses", width=CACHE_DIM, bits=CACHE_BITS,
                          capacity=args.am_cache, policy="lru",
@@ -139,7 +148,8 @@ def main():
     if svc is not None:
         s = svc.stats()
         ts = s["tables"]["responses"]
-        print(f"AM cache: {ts['hits']}/{ts['lookups']} hits, "
+        placement = (f"sharded/{s['merge']}" if s["sharded"] else "local")
+        print(f"AM cache [{placement}]: {ts['hits']}/{ts['lookups']} hits, "
               f"{ts['rows']}/{ts['capacity']} rows, "
               f"{s['readbacks']} readbacks, "
               f"{s['compilations']} compilations, "

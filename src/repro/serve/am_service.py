@@ -48,8 +48,13 @@ Design — why this never compiles or syncs per request:
 * **Pluggable placement.**  Constructed with a ``mesh`` (and optionally
   :class:`repro.dist.specs.Rules`), the same dispatch routes through
   ``am.search_sharded`` — rows banked over the ``model`` axis via
-  ``Rules.am_table()`` / ``Rules.am_queries()``, meta kept replicated per
-  ``Rules.am_meta()`` — with identical results.
+  ``Rules.am_table()``, query batches dp-sharded through
+  ``Rules.am_queries_dp()`` when the bucket divides the mesh's data axes,
+  meta kept replicated per ``Rules.am_meta()`` — with identical results.
+  The ``merge=`` knob picks the cross-bank candidate reduction
+  (``"allgather"`` | ``"tree"`` | ``"auto"``, see ``am.search_sharded``);
+  it is baked into the service's compiled dispatch, so switching topology
+  never changes the dispatch signature or the compile accounting.
 
 Latency control: ``max_batch`` caps how many lookups queue before an
 automatic flush, and ``flush_after`` is a deadline (in clock units) on the
@@ -197,6 +202,9 @@ class AMService:
         :func:`am.search_sharded` (rows banked over ``rules.tp``).
       rules: optional :class:`repro.dist.specs.Rules`; defaults to
         ``make_rules(mesh, "tp")`` when a mesh is given.
+      merge: cross-bank merge strategy forwarded to ``am.search_sharded``
+        (``"auto"`` | ``"allgather"`` | ``"tree"``); only meaningful with a
+        mesh.
       max_batch: queued lookups that trigger an automatic flush.
       flush_after: deadline in clock units — a submit flushes the queue when
         the oldest queued request has waited at least this long.
@@ -204,12 +212,16 @@ class AMService:
         (+1.0 per submit/append/flush).
     """
 
-    def __init__(self, *, mesh=None, rules=None, max_batch: int = 64,
-                 flush_after: float | None = None,
+    def __init__(self, *, mesh=None, rules=None, merge: str = "auto",
+                 max_batch: int = 64, flush_after: float | None = None,
                  time_fn: Callable[[], float] | None = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if merge not in am.MERGE_STRATEGIES:
+            raise ValueError(f"unknown merge {merge!r}; expected one of "
+                             f"{am.MERGE_STRATEGIES}")
         self._mesh = mesh
+        self._merge = merge
         self._rules = (rules or dist_specs.make_rules(mesh, "tp")) \
             if mesh is not None else rules
         self.max_batch = max_batch
@@ -546,7 +558,7 @@ class AMService:
 
     def _build_dispatch(self):
         """One jitted search dispatch per service (its own compile cache)."""
-        mesh, rules = self._mesh, self._rules
+        mesh, rules, merge = self._mesh, self._rules, self._merge
 
         @partial(jax.jit, static_argnames=("k", "backend", "sharded"))
         def dispatch(table, queries, n_valid, q_valid, thresholds, now, *,
@@ -555,7 +567,8 @@ class AMService:
             if sharded:
                 res = am.search_sharded(
                     table, queries, mesh=mesh, rules=rules, k=k,
-                    threshold=thr, backend=backend, valid_rows=n_valid)
+                    threshold=thr, backend=backend, valid_rows=n_valid,
+                    merge=merge)
             else:
                 res = am.search(table, queries, k=k, threshold=thr,
                                 backend=backend, valid_rows=n_valid)
@@ -595,4 +608,5 @@ class AMService:
             "dedup_rate": self.dedup_hits / max(1, self.dispatched),
             "compilations": int(cache_size()) if cache_size else -1,
             "sharded": self._mesh is not None,
+            "merge": self._merge,
         }

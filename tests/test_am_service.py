@@ -482,7 +482,10 @@ def test_sharded_placement_matches_local():
     mesh = jax.make_mesh((min(8, len(jax.devices())),), ("model",))
     rng = np.random.default_rng(14)
     codes = _codes(rng, 11, width=8)
-    local, sharded = AMService(), AMService(mesh=mesh)
+    # merge="tree" forces the hierarchical topology below its auto threshold
+    # (mesh width 8 < TREE_MERGE_MIN_BANKS): the service dispatch must stay
+    # bitwise-identical to the local service under either merge
+    local, sharded = AMService(), AMService(mesh=mesh, merge="tree")
     for svc in (local, sharded):
         svc.create_table("t", width=8, bits=3, capacity=32, policy="lru",
                          backend="pallas")
@@ -499,9 +502,17 @@ def test_sharded_placement_matches_local():
         np.testing.assert_array_equal(ra.matched, rb.matched)
         assert ra.value == rb.value
     assert sharded.stats()["sharded"] and sharded.stats()["readbacks"] == 1
+    assert sharded.stats()["merge"] == "tree"
     # eviction works identically over the banked placement
     sharded.append("t", _codes(rng, 25, width=8))
     assert sharded.stats("t")["rows"] <= 32
+    # the merge knob is validated at construction, not at dispatch time
+    try:
+        AMService(merge="ring")
+    except ValueError as e:
+        assert "ring" in str(e)
+    else:
+        raise AssertionError("AMService accepted an unknown merge strategy")
 
 
 def test_next_pow2():

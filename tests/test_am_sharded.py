@@ -3,10 +3,19 @@
 Runs in a subprocess with 8 fake CPU devices (pattern of
 ``tests/test_pipeline.py``): the table is row-banked over the ``model`` mesh
 axis through ``Rules.am_table()``, each bank keeps a local top-k, and the
-all-gather merge must reproduce the single-device ``am.search`` exactly —
+cross-bank merge must reproduce the single-device ``am.search`` exactly —
 indices, distances, and threshold flags — on both an 8-wide pure-``model``
 mesh and the (pod, data, model) production mesh, for both distance modes and
 a row count that does not divide the bank count.
+
+Covers BOTH merge topologies of ``docs/ARCHITECTURE.md`` contract 3: the
+flat all-gather and the hierarchical tree merge must be bitwise-identical to
+each other and to the single-device path — on tie-heavy tables (the
+(distance, row-index) ordering guarantee), with per-bank ``valid_rows``
+slices, for dense and fused backend tiers, and through the degenerate cases
+(1 bank, non-power-of-two bank counts, k larger than any bank's rows).
+Data-parallel query sharding (``Rules.am_queries_dp``) is exercised on a
+(data, model) mesh where the query count divides the dp width.
 """
 
 import os
@@ -29,6 +38,12 @@ SCRIPT = textwrap.dedent("""
     codes = jax.random.randint(key, (37, 24), 0, 8)      # 37 % 8 != 0
     queries = jax.random.randint(jax.random.fold_in(key, 1), (6, 24), 0, 8)
 
+    def check(got, want, ctx):
+        for f in ("indices", "distances", "matched", "exact"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got, f)), np.asarray(getattr(want, f)),
+                err_msg=f"{ctx}: field {f}")
+
     meshes = [
         jax.make_mesh((8,), ("model",)),
         jax.make_mesh((2, 2, 2), ("pod", "data", "model")),
@@ -40,14 +55,7 @@ SCRIPT = textwrap.dedent("""
             rules = specs.make_rules(mesh, "tp")
             got = am.search_sharded(table, queries, mesh=mesh, rules=rules,
                                     k=5, threshold=9)
-            np.testing.assert_array_equal(np.asarray(got.indices),
-                                          np.asarray(want.indices))
-            np.testing.assert_array_equal(np.asarray(got.distances),
-                                          np.asarray(want.distances))
-            np.testing.assert_array_equal(np.asarray(got.matched),
-                                          np.asarray(want.matched))
-            np.testing.assert_array_equal(np.asarray(got.exact),
-                                          np.asarray(want.exact))
+            check(got, want, (mesh.shape, distance))
 
     # k larger than any single bank (forces the cross-bank candidate merge)
     table = am.make_table(codes, bits=3)
@@ -90,14 +98,64 @@ SCRIPT = textwrap.dedent("""
                 got = am.search_sharded(table, queries, mesh=mesh, k=5,
                                         threshold=9, backend="pallas",
                                         valid_rows=vr)
-                np.testing.assert_array_equal(np.asarray(got.indices),
-                                              np.asarray(want.indices))
-                np.testing.assert_array_equal(np.asarray(got.distances),
-                                              np.asarray(want.distances))
-                np.testing.assert_array_equal(np.asarray(got.matched),
-                                              np.asarray(want.matched))
-                np.testing.assert_array_equal(np.asarray(got.exact),
-                                              np.asarray(want.exact))
+                check(got, want, (mesh.shape, distance, vr))
+
+    # ----- tree merge == allgather merge == single-device, bitwise --------
+    # (docs/ARCHITECTURE.md contract 3: both topologies preserve contract 2's
+    # (distance, row-index) ordering — tie-heavy tables and per-bank
+    # valid_rows slices are the cases that would expose an ordering drift,
+    # for both the dense and the fused backend tier)
+    for mesh in meshes:
+        for backend in ("ref", "pallas"):
+            for cs, vr in ((codes, None), (tie_codes, 20)):
+                table = am.make_table(cs, bits=3, distance="l1")
+                want = am.search(table, queries, k=5, threshold=9,
+                                 backend=backend, valid_rows=vr)
+                for merge in ("allgather", "tree"):
+                    got = am.search_sharded(table, queries, mesh=mesh, k=5,
+                                            threshold=9, backend=backend,
+                                            valid_rows=vr, merge=merge)
+                    check(got, want, (mesh.shape, backend, vr, merge))
+
+    # tree-merge degenerate cases (ref backend keeps this cheap):
+    # 1 bank: zero ppermute rounds, the local top-k IS the global result
+    table = am.make_table(codes, bits=3)
+    mesh1 = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("model",))
+    check(am.search_sharded(table, queries, mesh=mesh1, k=5, merge="tree"),
+          am.search(table, queries, k=5), "1 bank")
+
+    # non-power-of-two banks: recursive-doubling coverage wraps, so the
+    # merge's duplicate masking is load-bearing; k=20 > any bank's 7 rows
+    mesh6 = jax.sharding.Mesh(np.array(jax.devices()[:6]), ("model",))
+    for merge in ("allgather", "tree"):
+        for k in (5, 20, 37):
+            check(am.search_sharded(table, queries, mesh=mesh6, k=k,
+                                    merge=merge),
+                  am.search(table, queries, k=k), f"6 banks {merge} k={k}")
+
+    # k >= every per-bank row count on the tie-heavy table (8 banks x 5 rows)
+    t2 = am.make_table(tie_codes, bits=3)
+    for k in (20, 37):
+        check(am.search_sharded(t2, queries, mesh=meshes[0], k=k,
+                                valid_rows=11, merge="tree"),
+              am.search(t2, queries, k=k, valid_rows=11), f"ties k={k}")
+
+    # dp query sharding: (data=2, model=4) mesh, Q=6 divides the dp width —
+    # queries go in sharded by Rules.am_queries_dp(), results identical
+    mesh_dp = jax.make_mesh((2, 4), ("data", "model"))
+    rules = specs.make_rules(mesh_dp, "tp")
+    assert rules.dp == ("data",)
+    for merge in ("allgather", "tree"):
+        check(am.search_sharded(table, queries, mesh=mesh_dp, rules=rules,
+                                k=5, threshold=9, merge=merge),
+              am.search(table, queries, k=5, threshold=9), f"dp {merge}")
+    # odd Q (5) does not divide dp width 2 -> falls back to replication
+    check(am.search_sharded(table, queries[:5], mesh=mesh_dp, k=3),
+          am.search(table, queries[:5], k=3), "dp fallback")
+
+    # the auto decision table (docs/ARCHITECTURE.md merge-table)
+    assert am.resolve_merge("auto", 8) == "allgather"
+    assert am.resolve_merge("auto", am.TREE_MERGE_MIN_BANKS) == "tree"
     print("AM_SHARDED_OK")
 """)
 

@@ -1,0 +1,170 @@
+"""docs/ARCHITECTURE.md is a contract, not prose — assert it against the code.
+
+The architecture page carries three machine-checkable artefacts:
+
+* the backend capability table (name -> tiers) between the
+  ``backend-table`` markers — must equal ``am.backend_names()`` /
+  ``am.backend_capabilities()``;
+* the ``FUSED_K_MAX`` cutover constant quoted in contract 1;
+* the merge-topology decision table between the ``merge-table`` markers —
+  its threshold must equal ``am.TREE_MERGE_MIN_BANKS`` and its strategy
+  column must match what ``am.resolve_merge("auto", width)`` actually does.
+
+Also covered here: the O(k * log banks) vs O(k * banks) merge-traffic law
+(``am.merge_traffic_bytes``, the quantity the benchmark sweep asserts), the
+lexicographic pairwise merge's dedup behaviour in isolation, and the docs
+link checker (``scripts/check_docs_links.py``) run as a test so a broken
+cross-reference fails tier-1, not just the CI docs job.
+"""
+
+import importlib.util
+import os
+import re
+
+import numpy as np
+
+from repro.core import am
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARCH_MD = os.path.join(REPO_ROOT, "docs", "ARCHITECTURE.md")
+
+
+def _table_rows(markdown: str, marker: str) -> list[list[str]]:
+    """Cell texts of the pipe table between ``<!-- marker:begin/end -->``."""
+    m = re.search(rf"<!-- {marker}:begin -->(.*?)<!-- {marker}:end -->",
+                  markdown, re.S)
+    assert m, f"marker {marker!r} not found in docs/ARCHITECTURE.md"
+    rows = []
+    for line in m.group(1).strip().splitlines():
+        line = line.strip()
+        if not line.startswith("|") or set(line) <= {"|", "-", " ", ":"}:
+            continue                      # not a row / the separator rule
+        rows.append([c.strip() for c in line.strip("|").split("|")])
+    assert rows, f"marker {marker!r} holds no table rows"
+    return rows[1:]                       # drop the header row
+
+
+def _arch_text() -> str:
+    assert os.path.exists(ARCH_MD), "docs/ARCHITECTURE.md is missing"
+    with open(ARCH_MD) as f:
+        return f.read()
+
+
+# ---------------------------------------------------------------------------
+# the backend capability table
+# ---------------------------------------------------------------------------
+
+def test_backend_table_matches_registry():
+    rows = _table_rows(_arch_text(), "backend-table")
+    documented = {row[0].strip("`"): tuple(t.strip() for t in
+                                           row[1].split(","))
+                  for row in rows}
+    assert set(documented) == set(am.backend_names()), (
+        "docs/ARCHITECTURE.md backend table lists different backends than "
+        f"am.backend_names(): {sorted(documented)} vs "
+        f"{sorted(am.backend_names())}")
+    for name, tiers in documented.items():
+        assert tiers == am.backend_capabilities(name), (
+            f"backend {name!r}: documented tiers {tiers} != "
+            f"am.backend_capabilities -> {am.backend_capabilities(name)}")
+
+
+def test_fused_k_max_documented():
+    m = re.search(r"`FUSED_K_MAX`\s*=\s*\**(\d+)\**", _arch_text())
+    assert m, "FUSED_K_MAX value not quoted in docs/ARCHITECTURE.md"
+    assert int(m.group(1)) == am.FUSED_K_MAX
+
+
+# ---------------------------------------------------------------------------
+# the merge-topology decision table
+# ---------------------------------------------------------------------------
+
+def test_merge_decision_table_matches_resolve_merge():
+    rows = _table_rows(_arch_text(), "merge-table")
+    assert len(rows) == 2, "merge decision table should have two regimes"
+    parsed = []
+    for cond, strategy in rows:
+        m = re.match(r"(<|>=)\s*(\d+)", cond)
+        assert m, f"unparseable width condition {cond!r}"
+        parsed.append((m.group(1), int(m.group(2)),
+                       strategy.strip().strip("`")))
+    thresholds = {t for _, t, _ in parsed}
+    assert thresholds == {am.TREE_MERGE_MIN_BANKS}, (
+        f"documented threshold(s) {thresholds} != am.TREE_MERGE_MIN_BANKS="
+        f"{am.TREE_MERGE_MIN_BANKS}")
+    for op, thr, strategy in parsed:
+        widths = (1, max(1, thr - 1)) if op == "<" else (thr, 4 * thr)
+        for w in widths:
+            assert am.resolve_merge("auto", w) == strategy, (
+                f"auto at width {w}: doc says {strategy!r}, code says "
+                f"{am.resolve_merge('auto', w)!r}")
+
+
+# ---------------------------------------------------------------------------
+# the traffic law the decision table is justified by
+# ---------------------------------------------------------------------------
+
+def test_merge_traffic_is_log_in_banks():
+    q, k = 16, 8
+    per_round = q * k * 8                 # one (Q, k) f32+i32 candidate pair
+    for banks in (1, 2, 3, 4, 6, 16, 64, 256):
+        tree = am.merge_traffic_bytes(banks, q, k, merge="tree")
+        flat = am.merge_traffic_bytes(banks, q, k, merge="allgather")
+        assert tree == (banks - 1).bit_length() * per_round, (banks, tree)
+        assert flat == (banks - 1) * per_round, (banks, flat)
+    # beyond the documented threshold the tree strictly wins
+    for banks in (16, 64, 256):
+        assert (am.merge_traffic_bytes(banks, q, k, merge="tree")
+                < am.merge_traffic_bytes(banks, q, k, merge="allgather"))
+    # "auto" resolves through the same decision table
+    assert (am.merge_traffic_bytes(am.TREE_MERGE_MIN_BANKS, q, k)
+            == am.merge_traffic_bytes(am.TREE_MERGE_MIN_BANKS, q, k,
+                                      merge="tree"))
+
+
+def test_bad_merge_strategy_rejected():
+    try:
+        am.resolve_merge("ring", 8)
+    except ValueError as e:
+        assert "ring" in str(e)
+    else:
+        raise AssertionError("resolve_merge accepted an unknown strategy")
+
+
+# ---------------------------------------------------------------------------
+# the pairwise lexicographic merge in isolation
+# ---------------------------------------------------------------------------
+
+def test_lex_merge_orders_and_dedups():
+    # two sorted candidate lists sharing row 7 (the non-pow-2 wrap case):
+    # the merged top-4 must hold each row once, (distance, index) ordered
+    da = np.array([[1.0, 2.0, 5.0]], np.float32)
+    ia = np.array([[7, 3, 9]], np.int32)
+    db = np.array([[1.0, 1.0, 4.0]], np.float32)
+    ib = np.array([[2, 7, 8]], np.int32)
+    dist, idx = am._lex_merge_topk(da, ia, db, ib, 4)
+    np.testing.assert_array_equal(np.asarray(idx), [[2, 7, 3, 8]])
+    np.testing.assert_array_equal(np.asarray(dist), [[1.0, 1.0, 2.0, 4.0]])
+
+    # +inf masked rows still order by index; sentinel padding ranks last
+    dp, ip = am._pad_candidates(np.array([[np.inf]], np.float32),
+                                np.array([[5]], np.int32), 3)
+    dq, iq = am._pad_candidates(np.array([[np.inf]], np.float32),
+                                np.array([[1]], np.int32), 3)
+    dist, idx = am._lex_merge_topk(dp, ip, dq, iq, 3)
+    np.testing.assert_array_equal(np.asarray(idx)[0, :2], [1, 5])
+    assert np.asarray(idx)[0, 2] == am._IDX_SENTINEL
+
+
+# ---------------------------------------------------------------------------
+# the link gate, as a test
+# ---------------------------------------------------------------------------
+
+def test_doc_cross_references_resolve():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs_links",
+        os.path.join(REPO_ROOT, "scripts", "check_docs_links.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    failures = mod.check()
+    assert failures == [], "\n".join(failures)
