@@ -220,6 +220,15 @@ def delete(table: AMTable, rows) -> AMTable:
                 f"boolean delete mask shape {rows.shape} != rows "
                 f"({table.n_rows},)")
         rows = np.flatnonzero(rows)
+    else:
+        # a negative index would wrap onto the wrong row (and a too-large
+        # one only errors deep inside jnp.delete) — reject both by name
+        idx = rows.reshape(-1).astype(np.int64)
+        bad = idx[(idx < 0) | (idx >= table.n_rows)]
+        if bad.size:
+            raise ValueError(
+                f"delete indices out of range [0, {table.n_rows}): "
+                f"{sorted(set(bad.tolist()))}")
     new_codes = jnp.delete(table.codes, rows, axis=0)
     new_meta = None if table.meta is None else jnp.delete(table.meta, rows,
                                                           axis=0)
@@ -552,6 +561,8 @@ def search(table: AMTable, queries, *, k: int = 1,
     otherwise the dense matrix + ``lax.top_k`` path runs.  The two are
     bitwise-identical by contract.
     """
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
     queries, squeeze = _prep_queries(table, queries)
     be = _resolve_backend(backend)
     k = min(k, table.n_rows)
@@ -765,6 +776,8 @@ def search_sharded(table: AMTable, queries, *, mesh, rules=None, k: int = 1,
 
     from repro.dist import specs as dist_specs
 
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
     rules = rules or dist_specs.make_rules(mesh, "tp")
     axis = rules.tp
     n_banks = mesh.shape[axis]

@@ -7,10 +7,13 @@ the whole wave), only the unique misses run through the
 :class:`ContinuousBatcher`, and their generations are appended back so later
 repeats hit.
 
-The cache service runs on a wall-clock ``flush_after`` deadline with
-:meth:`AMService.poll` called from the serve loop — lookups coalesce while
-the deadline lasts and flush when it expires, even when no further submits
-arrive (the idle-traffic case an in-``submit``-only check would miss).
+The cache service runs on a wall-clock ``flush_after`` deadline owned by a
+background :class:`AMDriver` (``svc.start_driver()``) — lookups coalesce
+while the deadline lasts and the driver dispatches when it expires, even
+when no further submits arrive (the idle-traffic case an in-``submit``-only
+check would miss).  Waiting is event-driven: ``fut.result(timeout=...)``
+blocks on the driver's completion stage, so there is no busy-wait poll loop
+here any more.
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --requests 6
   PYTHONPATH=src python -m repro.launch.serve --smoke          # CI smoke
@@ -72,8 +75,8 @@ def main():
     svc = None
     if args.am_cache:
         # deadline-batched: submits queue until the 5 ms flush_after expires;
-        # the poll() loop below (the serve loop) fires the flush, so a
-        # half-full bucket never waits on another submit arriving.
+        # the background driver owns the deadline, so a half-full bucket
+        # never waits on another submit arriving.
         svc = AMService(mesh=mesh if args.am_sharded else None,
                         merge=args.am_merge,
                         max_batch=max(64, args.requests),
@@ -81,15 +84,15 @@ def main():
         svc.create_table("responses", width=CACHE_DIM, bits=CACHE_BITS,
                          capacity=args.am_cache, policy="lru",
                          backend="pallas")
+        svc.start_driver()
         proj = hdc.token_key_projection(cfg.vocab_size, CACHE_DIM)
         keys = [np.asarray(hdc.prompt_key(proj, p, CACHE_BITS))
                 for p in workload]
 
     def drain(futs):
-        """The serve loop's idle side: poll the deadline until all resolve."""
-        while not all(f.done for f in futs):
-            if svc.poll() == 0:
-                time.sleep(0.001)
+        """Event-driven wait on the driver's completion stage (no busy loop)."""
+        for f in futs:
+            f.result(timeout=60.0)
 
     t0 = time.time()
     results: dict[int, np.ndarray] = {}
@@ -97,7 +100,7 @@ def main():
 
     if svc is not None:
         # wave 1: one micro-batched CAM lookup for the whole workload,
-        # flushed by the poll loop when the deadline expires
+        # dispatched by the driver when the deadline expires
         futs = [svc.submit("responses", key) for key in keys]
         drain(futs)
         miss_ids = [i for i, f in enumerate(futs) if not f.result().hit]
@@ -136,6 +139,7 @@ def main():
         for i, fut in wave2.items():
             resp = fut.result()
             results[i] = resp.value if resp.hit else results[rep_of[i]]
+        svc.stop_driver()
     wall = time.time() - t0
 
     for i, gen in sorted(results.items()):

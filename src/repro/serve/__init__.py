@@ -4,11 +4,14 @@
   decode step driven by a continuous batcher (vLLM-style slots).
 * :mod:`repro.serve.am_service` — :class:`AMService`, the sanctioned way to
   run ``repro.core.am`` searches under traffic: named capacity-bounded
-  tables, LRU/TTL eviction, and a micro-batching lookup scheduler.
+  tables, LRU/TTL eviction, a micro-batching lookup scheduler, per-table
+  admission control, and :class:`AMDriver` — the pipelined dispatch driver
+  that overlaps host batching, device compute and readback.
 """
 
-from repro.serve.am_service import (AMService, PendingSearch, SearchRequest,
+from repro.serve.am_service import (AdmissionError, AMDriver, AMService,
+                                    PendingSearch, SearchRequest,
                                     SearchResponse, TableFullError)
 
-__all__ = ["AMService", "PendingSearch", "SearchRequest", "SearchResponse",
-           "TableFullError"]
+__all__ = ["AdmissionError", "AMDriver", "AMService", "PendingSearch",
+           "SearchRequest", "SearchResponse", "TableFullError"]

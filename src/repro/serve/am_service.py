@@ -26,6 +26,37 @@ Design — why this never compiles or syncs per request:
   group.  Compilation count is exactly one per padding-bucket signature
   (exposed as ``stats()["compilations"]``); results come back in ONE
   ``jax.device_get`` per group — no per-request ``bool()``/``int()`` syncs.
+* **Pipelined dispatch driver.**  Dispatch and readback are two stages:
+  ``_launch_group`` issues the compiled search (JAX dispatch is
+  asynchronous — the host returns immediately) and records an in-flight
+  group; the completion stage (``_resolve_group``) performs the single
+  ``jax.device_get`` per group and fans results out to the waiting
+  :class:`PendingSearch` futures.  The synchronous :meth:`AMService.flush`
+  runs the two stages back to back (the bitwise reference path, always
+  available to single-request callers); an :class:`AMDriver` — a background
+  thread, or an explicit event-loop object stepped with
+  :meth:`AMDriver.run_once` for deterministic tests — overlaps them: up to
+  ``max_in_flight`` dispatched groups compute on device while the host
+  batches the next bucket, and in-flight groups retire strictly in dispatch
+  order (FIFO).  The driver owns the flush deadline outright, replacing the
+  cooperative ``poll()`` whose logical-clock variant could never fire under
+  idle traffic.
+* **Appends overlap in-flight searches.**  A dispatched group snapshots the
+  table (pytree), its payload list, and its ``version`` at launch; appends
+  and evictions replace ``_TableState.table`` without disturbing the
+  snapshot, and the group's LRU-touch meta is written back at completion
+  only if the version is unchanged (a racing append/evict wins and the
+  stale touch is dropped — LRU maintenance is best-effort under overlap,
+  exact under the synchronous path).  ``append()`` therefore never blocks
+  on an in-flight search's device buffers.
+* **Admission control.**  Per-table QPS token buckets (``qps_budget``, with
+  ``burst``) and queued-lookup caps (``max_queue``) bound what one hot
+  table can queue, so it cannot starve a shared flush.  The per-table
+  ``admission`` knob picks the over-budget behaviour — ``"reject"`` raises
+  :class:`AdmissionError`, ``"shed"`` resolves the lookup immediately as a
+  non-admitted miss (``SearchResponse.admitted`` False), ``"block"`` waits
+  for headroom.  Counters surface through ``stats()`` (queue depth,
+  in-flight groups, rejected/shed/blocked, p50/p99 queue wait).
 * **Cross-request dedup.**  Identical (query, threshold) rows inside one
   flush group are dispatched once and the shared result row fans out to
   every duplicate — under Zipfian traffic most of a wave is repeats, so
@@ -56,20 +87,45 @@ Design — why this never compiles or syncs per request:
   it is baked into the service's compiled dispatch, so switching topology
   never changes the dispatch signature or the compile accounting.
 
+Clock semantics — which features need which clock:
+
+The service reads time through one injected ``time_fn``.  With
+``time_fn=None`` the clock is **logical**: it advances by exactly one tick
+per ``submit`` / ``append`` / ``flush``, which makes every eviction and
+deadline decision deterministic and replayable — the right default for
+tests and offline replay.  With ``time_fn=time.monotonic`` (or any fake
+callable — deterministic driver tests inject one) the clock is **wall**:
+readings are re-based to the service's first observation so float32 meta
+stays integer-exact.
+
+* ``ttl`` eviction and LRU ordering work under either clock (ages are
+  clock-unit differences).
+* ``flush_after`` **as an idle deadline requires a real clock**: under the
+  logical clock the deadline is only ever observed at submit time (each
+  submit ages the queue by one tick), so a half-full bucket with no further
+  submits would wait forever — the constructor warns about exactly this
+  combination.  :meth:`AMService.poll` and :class:`AMDriver` both read the
+  clock without advancing it; they can only make progress on a clock that
+  advances on its own.
+* A **background** :class:`AMDriver` (:meth:`AMService.start_driver`)
+  refuses to own a ``flush_after`` deadline without a real clock; an
+  unstarted driver stepped by hand (``AMDriver(svc).run_once(now=...)``)
+  accepts explicit ``now`` values, which is how the deterministic tests
+  drive deadlines.
+
 Latency control: ``max_batch`` caps how many lookups queue before an
-automatic flush, and ``flush_after`` is a deadline (in clock units) on the
-oldest queued request, checked at every submit **and** by :meth:`AMService.
-poll` — drivers call ``poll()`` from their serve loop so a half-full bucket
-still flushes on deadline when no further submits arrive (idle traffic).
-Time is a logical per-service tick by default (deterministic: one tick per
-submit / append / flush), or wall-clock when constructed with
-``time_fn=time.monotonic`` — ``ttl`` / ``flush_after`` are in whichever
-units the clock produces.
+automatic dispatch, and ``flush_after`` is a deadline (in clock units) on
+the oldest queued request — enforced at every submit, by the driver's loop,
+and by the legacy :meth:`AMService.poll` hook for loops that poll by hand.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
+import time
+import warnings
 from functools import partial
 from typing import Any, Callable
 
@@ -83,14 +139,34 @@ from repro.dist import specs as dist_specs
 #: Eviction policies a table may be created with.
 POLICIES = ("lru", "ttl", "reject")
 
+#: Admission-control behaviours for an over-budget submit (``create_table``'s
+#: ``admission=`` knob); the docs/ARCHITECTURE.md admission table is asserted
+#: against this tuple.
+ADMISSION_MODES = ("reject", "shed", "block")
+
+#: Lifecycle states of an :class:`AMDriver`; the docs/ARCHITECTURE.md driver
+#: state table is asserted against this tuple (in this order).
+DRIVER_STATES = ("idle", "running", "draining", "stopped")
+
+#: In-flight groups retire strictly in dispatch order.  The contract test
+#: keeps docs/ARCHITECTURE.md's completion-ordering statement tied to this.
+COMPLETION_ORDER = "fifo"
+
 #: Meta timestamps are float32, which is integer-exact only to 2**24; the
 #: logical clock rebases every live timestamp down once it reaches this, so
 #: LRU/TTL ordering stays exact for arbitrarily long-running services.
 _REBASE_TICKS = float(1 << 23)
 
+#: Resolved queue-wait samples kept for the stats() percentiles.
+_WAIT_SAMPLES = 4096
+
 
 class TableFullError(RuntimeError):
     """An append would exceed capacity and the policy forbids eviction."""
+
+
+class AdmissionError(RuntimeError):
+    """A submit was refused by admission control (budget or queue cap)."""
 
 
 # ---------------------------------------------------------------------------
@@ -116,7 +192,9 @@ class SearchResponse:
 
     All arrays are host numpy, produced by the single per-batch readback.
     Entries beyond the table's live row count carry index ``-1``, distance
-    ``+inf`` and False flags.
+    ``+inf`` and False flags.  ``admitted`` is False only for lookups shed
+    by admission control (``admission="shed"``), which never reach a
+    dispatch and resolve as misses.
     """
 
     rid: int
@@ -126,6 +204,7 @@ class SearchResponse:
     exact: np.ndarray              # (k,) bool — exact word match
     matched: np.ndarray            # (k,) bool — within the request threshold
     value: Any = None              # payload of the best row on an exact hit
+    admitted: bool = True          # False: shed by admission control
 
     @property
     def hit(self) -> bool:
@@ -140,25 +219,54 @@ class SearchResponse:
 class PendingSearch:
     """Future-like handle returned by :meth:`AMService.submit`.
 
-    ``result()`` flushes the service's queue if the response has not been
-    produced yet, so a single-request caller can stay synchronous while
-    concurrent callers get coalesced into one dispatch.
+    ``result()`` forces progress if the response has not been produced yet:
+    with no driver running it flushes the service's queue (single-request
+    callers stay synchronous while concurrent callers get coalesced into
+    one dispatch); with a live :class:`AMDriver` it expedites the queued
+    bucket and waits on the driver's completion stage.
     """
 
-    __slots__ = ("request", "_service", "_response")
+    __slots__ = ("request", "_service", "_response", "_event")
 
     def __init__(self, service: "AMService", request: SearchRequest):
         self.request = request
         self._service = service
         self._response: SearchResponse | None = None
+        self._event = threading.Event()
 
     @property
     def done(self) -> bool:
         return self._response is not None
 
-    def result(self) -> SearchResponse:
+    def _resolve(self, response: SearchResponse) -> None:
+        self._response = response
+        self._event.set()
+
+    def result(self, timeout: float | None = None) -> SearchResponse:
         if self._response is None:
-            self._service.flush()
+            svc = self._service
+            drv = svc._driver
+            if drv is not None and drv.is_alive():
+                svc._expedite(self)
+                deadline = (None if timeout is None
+                            else time.monotonic() + timeout)
+                while self._response is None:
+                    if drv.exception is not None:
+                        raise RuntimeError(
+                            "AMService driver thread died") from drv.exception
+                    if not drv.is_alive():
+                        svc.flush()            # driver gone: finish sync
+                        break
+                    wait = 0.05
+                    if deadline is not None:
+                        wait = min(wait, deadline - time.monotonic())
+                        if wait <= 0:
+                            raise TimeoutError(
+                                f"request {self.request.rid} unresolved "
+                                f"after {timeout}s")
+                    self._event.wait(wait)
+            else:
+                svc.flush()
         assert self._response is not None, "flush did not resolve this request"
         return self._response
 
@@ -184,6 +292,43 @@ class _TableState:
     evicted: int = 0
     hits: int = 0
     misses: int = 0
+    # -- admission control ---------------------------------------------------
+    qps_budget: float | None = None    # sustained lookups per clock unit
+    burst: float = 1.0                 # token-bucket depth
+    max_queue: int | None = None       # cap on this table's queued lookups
+    admission: str = "reject"          # over-budget behaviour
+    tokens: float = 0.0                # current token-bucket level
+    tokens_at: float = 0.0             # clock reading of the last refill
+    queued: int = 0                    # lookups currently in the shared queue
+    rejected: int = 0
+    shed: int = 0
+    blocked: int = 0                   # submits that had to wait
+
+
+@dataclasses.dataclass
+class _InFlightGroup:
+    """One dispatched bucket awaiting its completion-stage readback.
+
+    Everything needed to resolve the futures is snapshotted at launch:
+    device arrays from the compiled dispatch, the payload list *reference*
+    (appends only extend it, compaction rebinds a fresh list — either way
+    the snapshot stays aligned with the dispatched row indices), and the
+    table version guarding the deferred LRU-touch meta writeback.
+    """
+
+    table: _TableState
+    futs: list
+    slot_of: list
+    arrays: tuple                  # (idx, dist, exact, matched) on device
+    new_meta: Any                  # post-touch meta, written back if fresh
+    version: int                   # table.version at launch
+    values: list                   # payload list as of launch
+    now: float                     # dispatch-time clock reading
+
+    def ready(self) -> bool:
+        """True when every result array has landed (non-blocking probe)."""
+        return all(getattr(a, "is_ready", lambda: True)()
+                   for a in self.arrays)
 
 
 def _next_pow2(n: int) -> int:
@@ -197,6 +342,10 @@ def _next_pow2(n: int) -> int:
 class AMService:
     """Named associative-search tables + a micro-batching lookup scheduler.
 
+    Thread-safe: every public method may be called from any thread; a
+    single service lock guards table state, the queue and the in-flight
+    list, while device readbacks happen outside it (the completion stage).
+
     Args:
       mesh: optional device mesh — when given, every dispatch routes through
         :func:`am.search_sharded` (rows banked over ``rules.tp``).
@@ -206,8 +355,13 @@ class AMService:
         (``"auto"`` | ``"allgather"`` | ``"tree"``); only meaningful with a
         mesh.
       max_batch: queued lookups that trigger an automatic flush.
-      flush_after: deadline in clock units — a submit flushes the queue when
-        the oldest queued request has waited at least this long.
+      flush_after: deadline in clock units — the queue is dispatched when
+        the oldest queued request has waited at least this long.  As an
+        *idle* deadline (no further submits arriving) this needs a clock
+        that advances on its own: construct with ``time_fn`` and run an
+        :class:`AMDriver` (or call :meth:`poll` from a loop).  Setting it
+        with the default logical clock warns — see the module docstring's
+        clock-semantics section.
       time_fn: clock source; ``None`` uses a deterministic logical tick
         (+1.0 per submit/append/flush).
     """
@@ -220,6 +374,15 @@ class AMService:
         if merge not in am.MERGE_STRATEGIES:
             raise ValueError(f"unknown merge {merge!r}; expected one of "
                              f"{am.MERGE_STRATEGIES}")
+        if flush_after is not None and time_fn is None:
+            warnings.warn(
+                "AMService(flush_after=...) with the default logical clock "
+                "only observes the deadline at submit time: an idle "
+                "half-full bucket never auto-flushes (the clock advances "
+                "only on submit/append/flush, so poll() and drivers see a "
+                "frozen queue age).  Pass time_fn=time.monotonic and run "
+                "svc.start_driver() — or inject a fake clock in tests — "
+                "for a live idle deadline.", RuntimeWarning, stacklevel=2)
         self._mesh = mesh
         self._merge = merge
         self._rules = (rules or dist_specs.make_rules(mesh, "tp")) \
@@ -229,8 +392,16 @@ class AMService:
         self._time_fn = time_fn
         self._clock = 0.0
         self._epoch: float | None = None
+        self._lock = threading.RLock()
+        self._cv = threading.Condition(self._lock)
         self._tables: dict[str, _TableState] = {}
         self._pending: list[PendingSearch] = []
+        self._in_flight: collections.deque[_InFlightGroup] = \
+            collections.deque()
+        self._wait_samples: collections.deque[float] = \
+            collections.deque(maxlen=_WAIT_SAMPLES)
+        self._drain_req = False
+        self._driver: AMDriver | None = None
         self._next_rid = 0
         self.flushes = 0
         self.readbacks = 0
@@ -245,11 +416,14 @@ class AMService:
         # clocks are re-based to the service's first reading, and the
         # logical clock shifts every live timestamp down before it leaves
         # float32's integer-exact range (old rows go negative, which
-        # preserves both LRU order and TTL ages).
+        # preserves both LRU order and TTL ages).  Rebase only when nothing
+        # is queued or in flight: a deferred meta writeback computed before
+        # the shift must never land on shifted meta.
         if self._time_fn is not None:
             return self._now()
         self._clock += 1.0
-        if self._clock >= _REBASE_TICKS and not self._pending:
+        if (self._clock >= _REBASE_TICKS and not self._pending
+                and not self._in_flight):
             shift = self._clock
             self._clock = 0.0
             for t in self._tables.values():
@@ -260,9 +434,9 @@ class AMService:
     def _now(self) -> float:
         """Read the clock without advancing the logical tick.
 
-        ``poll()`` uses this so an idle polling loop observes deadlines
-        instead of creating them (every logical tick ages the queue by one
-        unit, which would make N no-op polls flush any queue).
+        ``poll()`` and the driver use this so an idle loop observes
+        deadlines instead of creating them (every logical tick ages the
+        queue by one unit, which would make N no-op polls flush any queue).
         """
         if self._time_fn is not None:
             t = float(self._time_fn())
@@ -276,8 +450,19 @@ class AMService:
     def create_table(self, name: str, *, width: int, bits: int = 3,
                      distance: str = "hamming", capacity: int = 1024,
                      policy: str = "lru", ttl: float | None = None,
-                     backend: str = "ref") -> None:
-        """Allocate an empty capacity-bounded table under ``name``."""
+                     backend: str = "ref",
+                     qps_budget: float | None = None,
+                     burst: float | None = None,
+                     max_queue: int | None = None,
+                     admission: str = "reject") -> None:
+        """Allocate an empty capacity-bounded table under ``name``.
+
+        Admission control (all optional): ``qps_budget`` is a sustained
+        lookups-per-clock-unit token bucket (bucket depth ``burst``,
+        default ``max(1, qps_budget)``), ``max_queue`` caps this table's
+        queued lookups, and ``admission`` picks the over-budget behaviour
+        (one of :data:`ADMISSION_MODES`).
+        """
         if name in self._tables:
             raise ValueError(f"table {name!r} already exists")
         if capacity < 1:
@@ -286,18 +471,43 @@ class AMService:
             raise ValueError(f"unknown policy {policy!r}; expected {POLICIES}")
         if (ttl is None) == (policy == "ttl"):
             raise ValueError("ttl must be set iff policy == 'ttl'")
+        if admission not in ADMISSION_MODES:
+            raise ValueError(f"unknown admission {admission!r}; expected "
+                             f"one of {ADMISSION_MODES}")
+        if qps_budget is not None and qps_budget <= 0:
+            raise ValueError(f"qps_budget must be > 0, got {qps_budget}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         am.get_backend(backend)          # fail fast on unknown backends
         table = am.make_table(jnp.zeros((capacity, width), jnp.int32),
                               bits=bits, distance=distance,
                               meta=am.serving_meta(capacity, 0.0))
-        self._tables[name] = _TableState(
-            name=name, table=table, n=0, capacity=capacity, policy=policy,
-            ttl=ttl, backend=backend, values=[])
+        if burst is None:
+            burst = max(1.0, float(qps_budget)) if qps_budget else 1.0
+        else:
+            burst = float(burst)
+        with self._lock:
+            self._tables[name] = _TableState(
+                name=name, table=table, n=0, capacity=capacity, policy=policy,
+                ttl=ttl, backend=backend, values=[],
+                qps_budget=qps_budget, burst=burst, max_queue=max_queue,
+                admission=admission, tokens=burst, tokens_at=self._now())
 
     def drop_table(self, name: str) -> None:
-        if any(p.request.table == name for p in self._pending):
+        """Remove a table; queued and in-flight lookups resolve first.
+
+        No future is ever lost: lookups still queued for the table are
+        dispatched, and groups already in flight hold their own snapshot of
+        the table state, so they complete normally even after removal.
+        """
+        with self._lock:
+            self._state(name)            # fail fast on unknown names
+            has_work = (any(p.request.table == name for p in self._pending)
+                        or any(g.table.name == name for g in self._in_flight))
+        if has_work:
             self.flush()
-        del self._tables[name]
+        with self._lock:
+            del self._tables[name]
 
     def _state(self, name: str) -> _TableState:
         try:
@@ -313,53 +523,69 @@ class AMService:
 
         ``values`` carries one host payload per appended row (any object);
         payloads follow their rows through eviction and come back on exact
-        hits as ``SearchResponse.value``.
+        hits as ``SearchResponse.value``.  Appends overlap in-flight
+        searches: dispatched groups snapshot the table at launch, so this
+        never blocks on a pending readback.
         """
-        t = self._state(name)
         codes = np.asarray(codes, np.int32)
         if codes.ndim == 1:
             codes = codes[None]
-        if codes.ndim != 2 or codes.shape[1] != t.table.width:
-            raise ValueError(f"append codes shape {codes.shape} != "
-                             f"(m, {t.table.width})")
-        m = codes.shape[0]
-        if m > t.capacity:
-            raise TableFullError(
-                f"appending {m} rows exceeds table capacity {t.capacity}")
-        if values is None:
-            values = [None] * m
-        elif not isinstance(values, (list, tuple)):
-            values = [values]
-        if len(values) != m:
-            raise ValueError(f"{len(values)} values for {m} rows")
-        now = self._tick() if now is None else float(now)
-        self._make_room(t, m, now)
-        t.table = dataclasses.replace(
-            t.table,
-            codes=jax.lax.dynamic_update_slice(
-                t.table.codes, jnp.asarray(codes), (t.n, 0)),
-            meta=jax.lax.dynamic_update_slice(
-                t.table.meta, am.serving_meta(m, now), (t.n, 0)))
-        t.values.extend(values)
-        t.n += m
-        t.appends += m
-        t.version += 1
+        with self._lock:
+            t = self._state(name)
+            if codes.ndim != 2 or codes.shape[1] != t.table.width:
+                raise ValueError(f"append codes shape {codes.shape} != "
+                                 f"(m, {t.table.width})")
+            m = codes.shape[0]
+            if m > t.capacity:
+                raise TableFullError(
+                    f"appending {m} rows exceeds table capacity {t.capacity}")
+            if values is None:
+                values = [None] * m
+            elif not isinstance(values, (list, tuple)):
+                values = [values]
+            if len(values) != m:
+                raise ValueError(f"{len(values)} values for {m} rows")
+            now = self._tick() if now is None else float(now)
+            self._make_room(t, m, now)
+            t.table = dataclasses.replace(
+                t.table,
+                codes=jax.lax.dynamic_update_slice(
+                    t.table.codes, jnp.asarray(codes), (t.n, 0)),
+                meta=jax.lax.dynamic_update_slice(
+                    t.table.meta, am.serving_meta(m, now), (t.n, 0)))
+            t.values.extend(values)
+            t.n += m
+            t.appends += m
+            t.version += 1
 
     def delete(self, name: str, rows) -> int:
-        """Drop live rows by index array or boolean mask; returns the count."""
-        t = self._state(name)
-        rows = np.asarray(rows)
-        kill = np.zeros((t.n,), bool)
-        if rows.dtype == np.bool_:
-            if rows.shape != (t.n,):
-                raise ValueError(f"mask shape {rows.shape} != ({t.n},)")
-            kill |= rows
-        else:
-            kill[rows] = True
-        killed = int(kill.sum())
-        if killed:
-            self._compact(t, kill)
-        return killed
+        """Drop live rows by index array or boolean mask; returns the count.
+
+        Integer indices must satisfy ``0 <= row < live rows``: a negative
+        index would numpy-wrap onto the *wrong live row* (silently killing
+        it and desyncing the payload alignment), so both out-of-range
+        directions raise :class:`ValueError` naming the offenders.
+        """
+        with self._lock:
+            t = self._state(name)
+            rows = np.asarray(rows)
+            kill = np.zeros((t.n,), bool)
+            if rows.dtype == np.bool_:
+                if rows.shape != (t.n,):
+                    raise ValueError(f"mask shape {rows.shape} != ({t.n},)")
+                kill |= rows
+            else:
+                idx = rows.reshape(-1).astype(np.int64)
+                bad = idx[(idx < 0) | (idx >= t.n)]
+                if bad.size:
+                    raise ValueError(
+                        f"delete indices out of range [0, {t.n}): "
+                        f"{sorted(set(bad.tolist()))}")
+                kill[idx] = True
+            killed = int(kill.sum())
+            if killed:
+                self._compact(t, kill)
+            return killed
 
     def evict(self, name: str, *, now: float | None = None) -> int:
         """Run the table's eviction policy now; returns rows evicted.
@@ -368,11 +594,12 @@ class AMService:
         ``"lru"``/``"reject"`` it is a no-op unless the table somehow
         exceeds capacity (it cannot through this API).
         """
-        t = self._state(name)
-        now = self._tick() if now is None else float(now)
-        before = t.n
-        self._make_room(t, 0, now)
-        return before - t.n
+        with self._lock:
+            t = self._state(name)
+            now = self._tick() if now is None else float(now)
+            before = t.n
+            self._make_room(t, 0, now)
+            return before - t.n
 
     def _make_room(self, t: _TableState, m: int, now: float) -> None:
         """Evict per policy so ``m`` more rows fit under ``capacity``."""
@@ -412,6 +639,21 @@ class AMService:
         t.n = live.n_rows
         t.version += 1
 
+    # -- admission -----------------------------------------------------------
+
+    def _admission_verdict(self, t: _TableState,
+                           now: float) -> str | None:
+        """Refill the token bucket; return None (admit) or what's exceeded."""
+        if t.max_queue is not None and t.queued >= t.max_queue:
+            return "max_queue"
+        if t.qps_budget is not None:
+            t.tokens = min(t.burst,
+                           t.tokens + (now - t.tokens_at) * t.qps_budget)
+            t.tokens_at = now
+            if t.tokens < 1.0:
+                return "qps_budget"
+        return None
+
     # -- lookups -------------------------------------------------------------
 
     def submit(self, name: str, query, *, k: int = 1,
@@ -420,33 +662,91 @@ class AMService:
         """Queue one lookup; returns a handle whose ``result()`` blocks.
 
         Lookups against an empty table resolve immediately as misses —
-        the cache-front pattern needs no special casing.
+        the cache-front pattern needs no special casing.  Admission control
+        (when configured on the table) runs before anything queues.
         """
-        t = self._state(name)
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
         query = np.asarray(query, np.int32)
-        if query.shape != (t.table.width,):
-            raise ValueError(
-                f"query shape {query.shape} != ({t.table.width},)")
         if backend is not None:
             am.get_backend(backend)      # fail here, not at dispatch time
-        now = self._tick()
-        req = SearchRequest(
-            rid=self._next_rid, table=name, query=query,
-            k=min(k, t.capacity),
-            threshold=None if threshold is None else float(threshold),
-            backend=backend or t.backend, submitted_at=now)
-        self._next_rid += 1
-        fut = PendingSearch(self, req)
-        if t.n == 0:
-            self._resolve_empty(t, fut)
-            return fut
-        self._pending.append(fut)
-        if len(self._pending) >= self.max_batch:
-            self.flush()
-        elif (self.flush_after is not None
-              and now - self._pending[0].request.submitted_at
-              >= self.flush_after):
-            self.flush()
+        blocked_once = False
+        while True:
+            with self._lock:
+                t = self._state(name)
+                if query.shape != (t.table.width,):
+                    raise ValueError(
+                        f"query shape {query.shape} != ({t.table.width},)")
+                over = self._admission_verdict(t, self._now())
+                if over is None:
+                    if t.qps_budget is not None:
+                        t.tokens -= 1.0
+                    now = self._tick()
+                    req = SearchRequest(
+                        rid=self._next_rid, table=name, query=query,
+                        k=min(k, t.capacity),
+                        threshold=(None if threshold is None
+                                   else float(threshold)),
+                        backend=backend or t.backend, submitted_at=now)
+                    self._next_rid += 1
+                    fut = PendingSearch(self, req)
+                    if t.n == 0:
+                        self._resolve_empty(t, fut)
+                        return fut
+                    self._pending.append(fut)
+                    t.queued += 1
+                    due = (len(self._pending) >= self.max_batch
+                           or self._deadline_due(now))
+                    drv = self._driver
+                    if drv is not None and drv.is_alive():
+                        if due:
+                            drv._wake.set()   # the driver owns the dispatch
+                        return fut
+                    if not due:
+                        return fut
+                    break                     # sync path: flush outside loop
+                # over budget: reject / shed / block
+                if t.admission == "reject":
+                    t.rejected += 1
+                    raise AdmissionError(
+                        f"table {name!r} over {over} "
+                        f"(admission='reject'): lookup refused")
+                if t.admission == "shed":
+                    t.shed += 1
+                    req = SearchRequest(
+                        rid=self._next_rid, table=name, query=query,
+                        k=min(k, t.capacity),
+                        threshold=(None if threshold is None
+                                   else float(threshold)),
+                        backend=backend or t.backend,
+                        submitted_at=self._now())
+                    self._next_rid += 1
+                    fut = PendingSearch(self, req)
+                    fut._resolve(SearchResponse(
+                        rid=req.rid, table=name,
+                        indices=np.full((req.k,), -1, np.int32),
+                        distances=np.full((req.k,), np.inf, np.float32),
+                        exact=np.zeros((req.k,), bool),
+                        matched=np.zeros((req.k,), bool), admitted=False))
+                    return fut
+                # block: wait for headroom outside the lock
+                if not blocked_once:
+                    t.blocked += 1
+                    blocked_once = True
+                drv = self._driver
+                queue_over = over == "max_queue"
+            if queue_over:
+                self.flush()                  # make room ourselves
+                continue
+            if self._time_fn is None:
+                raise AdmissionError(
+                    f"table {name!r} over qps_budget with admission='block' "
+                    "but no real clock to wait on: construct AMService with "
+                    "time_fn=time.monotonic, or use 'reject'/'shed'")
+            if drv is not None and drv.is_alive():
+                drv._wake.set()
+            time.sleep(5e-4)
+        self.flush()
         return fut
 
     def lookup(self, name: str, query, *, k: int = 1,
@@ -458,60 +758,145 @@ class AMService:
 
     def _resolve_empty(self, t: _TableState, fut: PendingSearch) -> None:
         k = fut.request.k
-        fut._response = SearchResponse(
+        fut._resolve(SearchResponse(
             rid=fut.request.rid, table=t.name,
             indices=np.full((k,), -1, np.int32),
             distances=np.full((k,), np.inf, np.float32),
-            exact=np.zeros((k,), bool), matched=np.zeros((k,), bool))
+            exact=np.zeros((k,), bool), matched=np.zeros((k,), bool)))
         t.misses += 1
 
+    def _deadline_due(self, now: float) -> bool:
+        """Lock held: has the oldest queued request crossed ``flush_after``?"""
+        return (self.flush_after is not None and bool(self._pending)
+                and now - self._pending[0].request.submitted_at
+                >= self.flush_after)
+
+    def _take_pending(self) -> dict[tuple, list[PendingSearch]]:
+        """Lock held: drain the queue into signature groups."""
+        pending, self._pending = self._pending, []
+        groups: dict[tuple, list[PendingSearch]] = {}
+        for fut in pending:
+            r = fut.request
+            self._tables[r.table].queued -= 1
+            key = (r.table, r.k, r.backend, r.threshold is not None)
+            groups.setdefault(key, []).append(fut)
+        return groups
+
     def flush(self, *, now: float | None = None) -> int:
-        """Dispatch every queued lookup; returns how many were served.
+        """Dispatch and complete every queued lookup; returns how many.
 
         Requests are grouped by (table, k, backend, thresholded) signature;
         each group becomes one compiled ``am.search`` over queries padded to
         the next power of two, and one ``jax.device_get`` fans the batch
-        back out to the waiting futures.
+        back out to the waiting futures.  Groups launched by a driver and
+        still in flight are retired first (FIFO), so after ``flush()``
+        returns nothing is pending or in flight.  This serial
+        launch-then-complete path is the bitwise reference the pipelined
+        driver is tested against.
         """
-        pending, self._pending = self._pending, []
-        if not pending:
-            return 0
-        now = self._tick() if now is None else float(now)
-        groups: dict[tuple, list[PendingSearch]] = {}
-        for fut in pending:
-            r = fut.request
-            key = (r.table, r.k, r.backend, r.threshold is not None)
-            groups.setdefault(key, []).append(fut)
+        while self._complete_next():           # retire driver-launched work
+            pass
+        with self._lock:
+            if not self._pending:
+                return 0
+            now = self._tick() if now is None else float(now)
+            groups = self._take_pending()
+        served = 0
         for (name, k, backend, has_thr), futs in groups.items():
-            self._dispatch_group(self._state(name), futs, k, backend,
-                                 has_thr, now)
-        self.flushes += 1
-        return len(pending)
+            with self._lock:
+                g = self._launch_group(self._state(name), futs, k, backend,
+                                       has_thr, now, track=False)
+            self._resolve_group(g)
+            served += len(futs)
+        with self._lock:
+            self.flushes += 1
+        return served
 
     def poll(self, *, now: float | None = None) -> int:
         """Flush the queue if the oldest queued request's deadline expired.
 
-        Covers the idle-traffic gap: ``flush_after`` is otherwise only
+        The cooperative fallback for serve loops that poll by hand instead
+        of running an :class:`AMDriver`: ``flush_after`` is otherwise only
         checked inside :meth:`submit`, so a half-full bucket would wait
-        forever when no further submits arrive.  Serve loops call this once
-        per tick; it reads the clock without advancing the logical tick, so
-        polling is free when nothing is due.  Returns the number of lookups
-        served (0 when no deadline has passed or no deadline is set).
+        forever when no further submits arrive.  Reads the clock without
+        advancing the logical tick, so polling is free when nothing is due
+        — which also means that under the default logical clock an idle
+        queue's age never changes and this can only fire via an explicit
+        ``now=`` (the constructor warns about that combination).  Returns
+        the number of lookups served.
         """
-        if not self._pending or self.flush_after is None:
-            return 0
-        now = self._now() if now is None else float(now)
-        if now - self._pending[0].request.submitted_at < self.flush_after:
-            return 0
+        with self._lock:
+            if not self._pending or self.flush_after is None:
+                return 0
+            now = self._now() if now is None else float(now)
+            if not self._deadline_due(now):
+                return 0
         return self.flush(now=now)
 
-    def _dispatch_group(self, t: _TableState, futs: list[PendingSearch],
-                        k: int, backend: str, has_thr: bool,
-                        now: float) -> None:
-        # Cross-request dedup: identical (query, threshold) rows dispatch
-        # once; the shared result row fans out to every duplicate below.
-        # Hashing happens BEFORE padding, so a wave of repeats can collapse
-        # into a smaller power-of-two bucket.
+    def drain(self, timeout: float | None = None) -> bool:
+        """Resolve everything queued and in flight; True when fully drained.
+
+        With a live driver this hands the work to it and waits on the
+        completion stage; otherwise it is a synchronous :meth:`flush`.
+        """
+        drv = self._driver
+        if drv is None or not drv.is_alive():
+            self.flush()
+            with self._lock:
+                return not self._pending and not self._in_flight
+        with self._cv:
+            self._drain_req = True
+            drv._wake.set()
+            ok = self._cv.wait_for(
+                lambda: not self._pending and not self._in_flight, timeout)
+            self._drain_req = False
+        return ok
+
+    def _expedite(self, fut: PendingSearch) -> None:
+        """Force progress for one future: dispatch its bucket, help retire.
+
+        Called by ``result()`` under a live driver so a caller never waits
+        out a distant deadline: anything queued launches now, and this
+        thread helps the completion stage until the future resolves or the
+        in-flight list empties (the driver may retire the final group).
+        """
+        with self._lock:
+            if fut._response is not None:
+                return
+            if self._pending:
+                self._launch_pending(self._tick())
+        while fut._response is None and self._complete_next():
+            pass
+
+    # -- the two pipeline stages ---------------------------------------------
+
+    def _launch_pending(self, now: float) -> int:
+        """Lock held: dispatch every queued lookup as in-flight groups.
+
+        The driver-side counterpart of :meth:`flush`'s launch phase —
+        groups go onto the in-flight list for the completion stage instead
+        of being read back inline.  Returns the number of lookups launched.
+        """
+        groups = self._take_pending()
+        served = 0
+        for (name, k, backend, has_thr), futs in groups.items():
+            self._launch_group(self._state(name), futs, k, backend, has_thr,
+                               now, track=True)
+            served += len(futs)
+        if served:
+            self.flushes += 1
+        return served
+
+    def _launch_group(self, t: _TableState, futs: list[PendingSearch],
+                      k: int, backend: str, has_thr: bool, now: float, *,
+                      track: bool) -> _InFlightGroup:
+        """Lock held: issue one compiled dispatch; no host sync happens here.
+
+        Cross-request dedup: identical (query, threshold) rows dispatch
+        once; the shared result row fans out to every duplicate at
+        completion.  Hashing happens BEFORE padding, so a wave of repeats
+        can collapse into a smaller power-of-two bucket.
+        """
         slot_of: list[int] = []
         slots: dict[tuple[bytes, float | None], int] = {}
         uniq: list[PendingSearch] = []
@@ -539,22 +924,95 @@ class AMService:
             jnp.asarray(t.n, jnp.int32), jnp.asarray(q, jnp.int32), thr,
             jnp.asarray(now, jnp.float32),
             k=k, backend=backend, sharded=self._mesh is not None)
-        t.table = dataclasses.replace(t.table, meta=new_meta)
-        # the single host sync for the whole group
-        idx, dist, exact, matched = jax.device_get(
-            (idx, dist, exact, matched))
-        self.readbacks += 1
-        for fut, slot in zip(futs, slot_of):
-            hit = bool(exact[slot, 0])
-            if hit:
-                t.hits += 1
-            else:
-                t.misses += 1
-            fut._response = SearchResponse(
-                rid=fut.request.rid, table=t.name, indices=idx[slot],
-                distances=dist[slot], exact=exact[slot],
-                matched=matched[slot],
-                value=t.values[int(idx[slot, 0])] if hit else None)
+        g = _InFlightGroup(table=t, futs=futs, slot_of=slot_of,
+                           arrays=(idx, dist, exact, matched),
+                           new_meta=new_meta, version=t.version,
+                           values=t.values, now=now)
+        if track:
+            self._in_flight.append(g)
+        return g
+
+    def _complete_next(self, *, only_ready: bool = False) -> bool:
+        """Retire the oldest in-flight group (FIFO); False if none retired.
+
+        ``only_ready`` makes this a non-blocking probe: the group is
+        skipped unless its device arrays have already landed.
+        """
+        with self._lock:
+            if not self._in_flight:
+                return False
+            g = self._in_flight[0]
+            if only_ready and not g.ready():
+                return False
+            self._in_flight.popleft()
+        self._resolve_group(g)
+        return True
+
+    def _resolve_group(self, g: _InFlightGroup) -> None:
+        """Completion stage: the single host sync for one dispatched group.
+
+        ``jax.device_get`` (which blocks until the arrays are ready) runs
+        OUTSIDE the service lock, so submits and appends proceed while a
+        readback is in progress.  The deferred LRU-touch meta lands only if
+        the table version is unchanged since launch — a racing append or
+        eviction wins and the stale touch is dropped.
+        """
+        idx, dist, exact, matched = jax.device_get(g.arrays)
+        with self._cv:
+            t = g.table
+            if self._tables.get(t.name) is t and t.version == g.version:
+                t.table = dataclasses.replace(t.table, meta=g.new_meta)
+            self.readbacks += 1
+            done_at = self._now()
+            for fut, slot in zip(g.futs, g.slot_of):
+                hit = bool(exact[slot, 0])
+                if hit:
+                    t.hits += 1
+                else:
+                    t.misses += 1
+                fut._resolve(SearchResponse(
+                    rid=fut.request.rid, table=t.name, indices=idx[slot],
+                    distances=dist[slot], exact=exact[slot],
+                    matched=matched[slot],
+                    value=g.values[int(idx[slot, 0])] if hit else None))
+                self._wait_samples.append(
+                    done_at - fut.request.submitted_at)
+            self._cv.notify_all()
+
+    # -- driver lifecycle ----------------------------------------------------
+
+    def start_driver(self, *, max_in_flight: int = 2,
+                     poll_interval: float = 1e-3) -> "AMDriver":
+        """Start a background :class:`AMDriver` thread; returns it.
+
+        The driver owns the flush deadline, so ``flush_after`` requires a
+        real clock here — a deadline against the logical clock can never
+        fire from a background thread (nothing ticks it).
+        """
+        if self._driver is not None and self._driver.is_alive():
+            raise RuntimeError("a driver is already running")
+        if self.flush_after is not None and self._time_fn is None:
+            raise ValueError(
+                "a background driver cannot own a flush_after deadline on "
+                "the logical clock (it never advances between submits); "
+                "construct AMService with time_fn=time.monotonic")
+        drv = AMDriver(self, max_in_flight=max_in_flight,
+                       poll_interval=poll_interval)
+        self._driver = drv
+        drv.start()
+        return drv
+
+    def stop_driver(self, *, drain: bool = True,
+                    timeout: float = 10.0) -> "AMDriver | None":
+        """Stop the background driver (draining first by default)."""
+        drv, self._driver = self._driver, None
+        if drv is not None:
+            drv.stop(drain=drain, timeout=timeout)
+        return drv
+
+    def close(self) -> None:
+        """Drain and stop any running driver; the sync path stays usable."""
+        self.stop_driver(drain=True)
 
     def _build_dispatch(self):
         """One jitted search dispatch per service (its own compile cache)."""
@@ -588,25 +1046,173 @@ class AMService:
     # -- stats ---------------------------------------------------------------
 
     def stats(self, name: str | None = None) -> dict:
-        """Service-level (or one table's) observability counters."""
-        if name is not None:
-            t = self._state(name)
+        """Service-level (or one table's) observability counters.
+
+        Queue-wait percentiles are over the last ``_WAIT_SAMPLES`` resolved
+        lookups, in clock units (seconds under a wall clock, ticks under
+        the logical one).
+        """
+        with self._lock:
+            if name is not None:
+                t = self._state(name)
+                return {
+                    "rows": t.n, "capacity": t.capacity, "policy": t.policy,
+                    "ttl": t.ttl, "backend": t.backend, "version": t.version,
+                    "appends": t.appends, "evicted": t.evicted,
+                    "hits": t.hits, "misses": t.misses,
+                    "lookups": t.hits + t.misses,
+                    "queued": t.queued,
+                    "admission": t.admission,
+                    "qps_budget": t.qps_budget, "max_queue": t.max_queue,
+                    "rejected": t.rejected, "shed": t.shed,
+                    "blocked": t.blocked,
+                }
+            cache_size = getattr(self._dispatch, "_cache_size", None)
+            waits = np.asarray(self._wait_samples, np.float64)
+            p50, p99 = (np.percentile(waits, [50, 99]) if waits.size
+                        else (0.0, 0.0))
+            drv = self._driver
             return {
-                "rows": t.n, "capacity": t.capacity, "policy": t.policy,
-                "ttl": t.ttl, "backend": t.backend, "version": t.version,
-                "appends": t.appends, "evicted": t.evicted,
-                "hits": t.hits, "misses": t.misses,
-                "lookups": t.hits + t.misses,
+                "tables": {n: self.stats(n) for n in self._tables},
+                "pending": len(self._pending),
+                "queue_depth": len(self._pending),
+                "in_flight": len(self._in_flight),
+                "flushes": self.flushes,
+                "readbacks": self.readbacks,
+                "dedup_hits": self.dedup_hits,
+                "dedup_rate": self.dedup_hits / max(1, self.dispatched),
+                "compilations": int(cache_size()) if cache_size else -1,
+                "sharded": self._mesh is not None,
+                "merge": self._merge,
+                "driver": drv.state if drv is not None else None,
+                "admission": {
+                    "rejected": sum(t.rejected for t in
+                                    self._tables.values()),
+                    "shed": sum(t.shed for t in self._tables.values()),
+                    "blocked": sum(t.blocked for t in
+                                   self._tables.values()),
+                },
+                "queue_wait_p50": float(p50),
+                "queue_wait_p99": float(p99),
             }
-        cache_size = getattr(self._dispatch, "_cache_size", None)
-        return {
-            "tables": {n: self.stats(n) for n in self._tables},
-            "pending": len(self._pending),
-            "flushes": self.flushes,
-            "readbacks": self.readbacks,
-            "dedup_hits": self.dedup_hits,
-            "dedup_rate": self.dedup_hits / max(1, self.dispatched),
-            "compilations": int(cache_size()) if cache_size else -1,
-            "sharded": self._mesh is not None,
-            "merge": self._merge,
-        }
+
+
+# ---------------------------------------------------------------------------
+# The pipelined dispatch driver
+# ---------------------------------------------------------------------------
+
+class AMDriver:
+    """Pipelined dispatch driver for one :class:`AMService`.
+
+    Owns the flush deadline and overlaps the pipeline's three stages —
+    host batching (submits keep queueing), device compute (up to
+    ``max_in_flight`` dispatched groups), and readback (the completion
+    stage, one ``jax.device_get`` per group, retired strictly in dispatch
+    order).  Two ways to run it:
+
+    * **Deterministic**: construct directly and step :meth:`run_once`
+      (optionally with an explicit ``now=``) — no thread, no wall clock,
+      exact control over when dispatch and completion happen.  This is how
+      the driver tests prove the async path bitwise-identical to
+      :meth:`AMService.flush`.
+    * **Background**: :meth:`AMService.start_driver` spawns a daemon thread
+      running :meth:`run_once` in a loop, woken by submits and a
+      ``poll_interval`` heartbeat.  Requires a real clock when the service
+      has a ``flush_after`` deadline (the logical clock never advances
+      between submits).
+
+    States (see :data:`DRIVER_STATES`): ``idle`` (constructed, stepped by
+    hand), ``running`` (thread live), ``draining`` (stop requested, work
+    retiring), ``stopped`` (thread joined; the service's sync path remains
+    fully usable).
+    """
+
+    def __init__(self, service: AMService, *, max_in_flight: int = 2,
+                 poll_interval: float = 1e-3):
+        if max_in_flight < 1:
+            raise ValueError(
+                f"max_in_flight must be >= 1, got {max_in_flight}")
+        self._service = service
+        self.max_in_flight = max_in_flight
+        self.poll_interval = poll_interval
+        self._wake = threading.Event()
+        self._stop_evt = threading.Event()
+        self._thread: threading.Thread | None = None
+        self.state = "idle"
+        self.exception: BaseException | None = None
+
+    def run_once(self, *, now: float | None = None,
+                 force: bool = False) -> dict[str, int]:
+        """One driver step: dispatch due work, then retire finished groups.
+
+        Dispatches the queue when it is due (``max_batch`` reached, the
+        ``flush_after`` deadline expired, a drain was requested, or
+        ``force``).  Then retires in-flight groups FIFO: every group whose
+        arrays have landed, plus — blocking — any beyond ``max_in_flight``
+        (backpressure) or everything when forcing/draining.  Returns
+        ``{"launched": lookups dispatched, "completed": groups retired}``.
+        """
+        svc = self._service
+        launched = 0
+        with svc._lock:
+            force = force or svc._drain_req
+            t_now = svc._now() if now is None else float(now)
+            if svc._pending and (force
+                                 or len(svc._pending) >= svc.max_batch
+                                 or svc._deadline_due(t_now)):
+                launched = svc._launch_pending(t_now)
+        completed = 0
+        while True:
+            with svc._lock:
+                over = (force or svc._drain_req
+                        or len(svc._in_flight) > self.max_in_flight)
+            if not svc._complete_next(only_ready=not over):
+                break
+            completed += 1
+        return {"launched": launched, "completed": completed}
+
+    # -- thread lifecycle ----------------------------------------------------
+
+    def is_alive(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def start(self) -> "AMDriver":
+        if self.is_alive():
+            raise RuntimeError("driver already running")
+        self._stop_evt.clear()
+        self.exception = None
+        self.state = "running"
+        self._thread = threading.Thread(target=self._loop, name="am-driver",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, *, drain: bool = True, timeout: float = 10.0) -> None:
+        """Stop the background thread; with ``drain`` retire all work first."""
+        if self._thread is not None and self._thread.is_alive():
+            if drain:
+                self.state = "draining"
+                self._service.drain(timeout)
+            self._stop_evt.set()
+            self._wake.set()
+            self._thread.join(timeout)
+        self.state = "stopped"
+
+    def __enter__(self) -> "AMDriver":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def _loop(self) -> None:
+        try:
+            while not self._stop_evt.is_set():
+                r = self.run_once()
+                if not r["launched"] and not r["completed"]:
+                    self._wake.wait(self.poll_interval)
+                    self._wake.clear()
+        except BaseException as e:               # pragma: no cover - safety
+            self.exception = e
+            self.state = "stopped"
+            with self._service._cv:
+                self._service._cv.notify_all()

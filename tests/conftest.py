@@ -8,10 +8,19 @@ Must run before the first ``import jax`` anywhere in the test process:
 * when the real ``hypothesis`` package is unavailable (hermetic containers),
   installs the minimal shim from ``tests/_hypothesis_stub.py`` so property
   tests still run as seeded randomized sweeps.
+
+Also arms a per-test hang guard (``faulthandler.dump_traceback_later``): a
+test that deadlocks — the failure mode of the threaded AMDriver tests —
+dumps every thread's traceback and kills the process after
+``REPRO_TEST_TIMEOUT`` seconds (default 600), so CI fails in minutes with a
+stack instead of idling to the job timeout.
 """
 
+import faulthandler
 import os
 import sys
+
+import pytest
 
 # -- JAX platform pinning (before any jax import) ---------------------------
 
@@ -34,3 +43,22 @@ except ImportError:
     sys.path.insert(0, os.path.dirname(__file__))
     import _hypothesis_stub
     _hypothesis_stub.install()
+
+# -- per-test hang guard ----------------------------------------------------
+
+_TEST_TIMEOUT = float(os.environ.get("REPRO_TEST_TIMEOUT", "600"))
+
+
+@pytest.fixture(autouse=True)
+def _hang_guard():
+    """Dump all thread stacks and abort if a single test exceeds the budget.
+
+    ``exit=True`` hard-kills the process after the dump: a deadlocked
+    driver thread would otherwise hold pytest open until the CI job
+    timeout.  Disable with REPRO_TEST_TIMEOUT=0 when debugging.
+    """
+    if _TEST_TIMEOUT > 0:
+        faulthandler.dump_traceback_later(_TEST_TIMEOUT, exit=True)
+    yield
+    if _TEST_TIMEOUT > 0:
+        faulthandler.cancel_dump_traceback_later()

@@ -173,14 +173,16 @@ def test_search_fused_valid_rows_matches_dense(vr, seed):
                                   np.asarray(dense.exact))
 
 
-def test_search_k_zero_skips_fused_tier():
-    """k=0 (a no-op probe) must return an empty result on every backend —
-    the fused kernel cannot run it, so dispatch falls back to dense."""
+def test_search_k_zero_rejected_on_every_backend():
+    """k < 1 is a caller bug, not a no-op probe: a shape-(Q, 0) result
+    silently reads as "no matches" — reject it before dispatch, on every
+    backend, so the fused/dense tiers never have to define it."""
     queries, codes = _random_case(8, 2, 6, 8, seed=6)
     t = am.make_table(codes, bits=3)
     for backend in ("ref", "pallas"):
-        r = am.search(t, queries, k=0, backend=backend)
-        assert r.indices.shape == (2, 0) and r.distances.shape == (2, 0)
+        for k in (0, -1):
+            with pytest.raises(ValueError, match="k must be >= 1"):
+                am.search(t, queries, k=k, backend=backend)
 
 
 def test_search_k_above_fused_max_falls_back_to_dense():

@@ -242,7 +242,8 @@ def test_max_batch_autoflush():
 
 def test_flush_after_deadline():
     rng = np.random.default_rng(7)
-    svc = _svc(flush_after=2.0)                    # logical-clock units
+    with pytest.warns(RuntimeWarning, match="logical clock"):
+        svc = _svc(flush_after=2.0)                # logical-clock units
     svc.append("t", _codes(rng, 8))
     f1 = svc.submit("t", rng.integers(0, 8, (WIDTH,)))
     f2 = svc.submit("t", rng.integers(0, 8, (WIDTH,)))
@@ -279,7 +280,8 @@ def test_poll_logical_clock_does_not_self_tick():
     """With the deterministic logical clock, polling must not age the queue
     (a tick-per-poll would turn N no-op polls into a spurious flush)."""
     rng = np.random.default_rng(71)
-    svc = _svc(flush_after=5.0)
+    with pytest.warns(RuntimeWarning, match="logical clock"):
+        svc = _svc(flush_after=5.0)
     svc.append("t", _codes(rng, 8))
     fut = svc.submit("t", rng.integers(0, 8, (WIDTH,)))
     for _ in range(20):                            # >> flush_after ticks

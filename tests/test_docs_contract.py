@@ -157,6 +157,38 @@ def test_lex_merge_orders_and_dedups():
 
 
 # ---------------------------------------------------------------------------
+# the serving-driver contract (contract 4)
+# ---------------------------------------------------------------------------
+
+def test_driver_state_table_matches_code():
+    from repro.serve import am_service
+    rows = _table_rows(_arch_text(), "driver-states")
+    documented = tuple(row[0].strip("`") for row in rows)
+    assert documented == am_service.DRIVER_STATES, (
+        "docs/ARCHITECTURE.md driver state table must list "
+        f"am_service.DRIVER_STATES in order: {documented} vs "
+        f"{am_service.DRIVER_STATES}")
+
+
+def test_admission_table_matches_code():
+    from repro.serve import am_service
+    rows = _table_rows(_arch_text(), "admission-table")
+    documented = tuple(row[0].strip("`") for row in rows)
+    assert documented == am_service.ADMISSION_MODES, (
+        "docs/ARCHITECTURE.md admission table must list "
+        f"am_service.ADMISSION_MODES in order: {documented} vs "
+        f"{am_service.ADMISSION_MODES}")
+
+
+def test_completion_ordering_documented():
+    from repro.serve import am_service
+    assert am_service.COMPLETION_ORDER == "fifo"
+    assert re.search(r"Completion ordering is FIFO", _arch_text()), (
+        "docs/ARCHITECTURE.md must state the FIFO completion-ordering "
+        "contract (contract 4)")
+
+
+# ---------------------------------------------------------------------------
 # the link gate, as a test
 # ---------------------------------------------------------------------------
 
