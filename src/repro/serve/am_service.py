@@ -112,6 +112,13 @@ stays integer-exact.
   unstarted driver stepped by hand (``AMDriver(svc).run_once(now=...)``)
   accepts explicit ``now`` values, which is how the deterministic tests
   drive deadlines.
+* ``qps_budget`` token buckets refill from clock deltas, so under the
+  logical clock every submit — admitted or not — advances the tick: a
+  budget then means "sustained lookups per submit-tick", and an exhausted
+  bucket refills as over-budget traffic keeps arriving (were the clock
+  frozen on non-admitted submits, ``reject``/``shed`` would livelock at
+  zero tokens forever).  ``admission="block"`` still requires a real
+  clock and raises without one.
 
 Latency control: ``max_batch`` caps how many lookups queue before an
 automatic dispatch, and ``flush_after`` is a deadline (in clock units) on
@@ -267,7 +274,13 @@ class PendingSearch:
                     self._event.wait(wait)
             else:
                 svc.flush()
-        assert self._response is not None, "flush did not resolve this request"
+            # A concurrent flush() may have claimed this request's bucket
+            # and be mid-readback: our own flush was then a no-op.  Every
+            # claimed future is guaranteed to resolve (vanished tables
+            # resolve as misses), so wait for that completion stage.
+            if self._response is None and not self._event.wait(timeout):
+                raise TimeoutError(
+                    f"request {self.request.rid} unresolved after {timeout}s")
         return self._response
 
 
@@ -401,6 +414,7 @@ class AMService:
         self._wait_samples: collections.deque[float] = \
             collections.deque(maxlen=_WAIT_SAMPLES)
         self._drain_req = False
+        self._resolving = 0            # popped in-flight groups mid-readback
         self._driver: AMDriver | None = None
         self._next_rid = 0
         self.flushes = 0
@@ -423,7 +437,7 @@ class AMService:
             return self._now()
         self._clock += 1.0
         if (self._clock >= _REBASE_TICKS and not self._pending
-                and not self._in_flight):
+                and not self._in_flight and not self._resolving):
             shift = self._clock
             self._clock = 0.0
             for t in self._tables.values():
@@ -498,16 +512,23 @@ class AMService:
 
         No future is ever lost: lookups still queued for the table are
         dispatched, and groups already in flight hold their own snapshot of
-        the table state, so they complete normally even after removal.
+        the table state, so they complete normally even after removal.  The
+        has-work check and the removal happen under one lock acquisition,
+        so a submit racing this call either lands before the delete (and is
+        flushed by the next loop pass) or fails with "unknown table" after
+        it — never in between.
         """
-        with self._lock:
-            self._state(name)            # fail fast on unknown names
-            has_work = (any(p.request.table == name for p in self._pending)
-                        or any(g.table.name == name for g in self._in_flight))
-        if has_work:
+        while True:
+            with self._lock:
+                self._state(name)        # fail fast on unknown names
+                has_work = (any(p.request.table == name
+                                for p in self._pending)
+                            or any(g.table.name == name
+                                   for g in self._in_flight))
+                if not has_work:
+                    del self._tables[name]
+                    return
             self.flush()
-        with self._lock:
-            del self._tables[name]
 
     def _state(self, name: str) -> _TableState:
         try:
@@ -705,7 +726,12 @@ class AMService:
                     if not due:
                         return fut
                     break                     # sync path: flush outside loop
-                # over budget: reject / shed / block
+                # over budget: reject / shed / block.  Non-admitted submits
+                # still advance the logical clock: the token bucket refills
+                # from clock deltas, so a frozen clock would livelock an
+                # exhausted budget (shed/reject forever, no refill).
+                if self._time_fn is None and t.admission != "block":
+                    self._tick()
                 if t.admission == "reject":
                     t.rejected += 1
                     raise AdmissionError(
@@ -722,12 +748,7 @@ class AMService:
                         submitted_at=self._now())
                     self._next_rid += 1
                     fut = PendingSearch(self, req)
-                    fut._resolve(SearchResponse(
-                        rid=req.rid, table=name,
-                        indices=np.full((req.k,), -1, np.int32),
-                        distances=np.full((req.k,), np.inf, np.float32),
-                        exact=np.zeros((req.k,), bool),
-                        matched=np.zeros((req.k,), bool), admitted=False))
+                    fut._resolve(self._miss_response(req, admitted=False))
                     return fut
                 # block: wait for headroom outside the lock
                 if not blocked_once:
@@ -756,13 +777,19 @@ class AMService:
         return self.submit(name, query, k=k, threshold=threshold,
                            backend=backend).result()
 
-    def _resolve_empty(self, t: _TableState, fut: PendingSearch) -> None:
-        k = fut.request.k
-        fut._resolve(SearchResponse(
-            rid=fut.request.rid, table=t.name,
+    @staticmethod
+    def _miss_response(req: SearchRequest, *,
+                       admitted: bool = True) -> SearchResponse:
+        k = req.k
+        return SearchResponse(
+            rid=req.rid, table=req.table,
             indices=np.full((k,), -1, np.int32),
             distances=np.full((k,), np.inf, np.float32),
-            exact=np.zeros((k,), bool), matched=np.zeros((k,), bool)))
+            exact=np.zeros((k,), bool), matched=np.zeros((k,), bool),
+            admitted=admitted)
+
+    def _resolve_empty(self, t: _TableState, fut: PendingSearch) -> None:
+        fut._resolve(self._miss_response(fut.request))
         t.misses += 1
 
     def _deadline_due(self, now: float) -> bool:
@@ -772,12 +799,21 @@ class AMService:
                 >= self.flush_after)
 
     def _take_pending(self) -> dict[tuple, list[PendingSearch]]:
-        """Lock held: drain the queue into signature groups."""
+        """Lock held: drain the queue into signature groups.
+
+        Lookups whose table has vanished (dropped between queueing and this
+        drain) resolve immediately as misses instead of raising — a flush
+        must never orphan a drained future.
+        """
         pending, self._pending = self._pending, []
         groups: dict[tuple, list[PendingSearch]] = {}
         for fut in pending:
             r = fut.request
-            self._tables[r.table].queued -= 1
+            t = self._tables.get(r.table)
+            if t is None:
+                fut._resolve(self._miss_response(r))
+                continue
+            t.queued -= 1
             key = (r.table, r.k, r.backend, r.threshold is not None)
             groups.setdefault(key, []).append(fut)
         return groups
@@ -788,28 +824,23 @@ class AMService:
         Requests are grouped by (table, k, backend, thresholded) signature;
         each group becomes one compiled ``am.search`` over queries padded to
         the next power of two, and one ``jax.device_get`` fans the batch
-        back out to the waiting futures.  Groups launched by a driver and
-        still in flight are retired first (FIFO), so after ``flush()``
-        returns nothing is pending or in flight.  This serial
-        launch-then-complete path is the bitwise reference the pipelined
-        driver is tested against.
+        back out to the waiting futures.  Every launched group goes through
+        the in-flight list, so concurrent callers (``result()``, another
+        ``flush``, a driver) can help retire it; groups already in flight
+        are retired first (FIFO).  Single-threaded — or with no driver and
+        no concurrent submitters — nothing is pending or in flight when
+        this returns; under a live driver or concurrent submits new work
+        may land at any moment, so use :meth:`drain` for a quiescence
+        guarantee.  This serial launch-then-complete path is the bitwise
+        reference the pipelined driver is tested against.
         """
-        while self._complete_next():           # retire driver-launched work
+        with self._lock:
+            served = 0
+            if self._pending:
+                now = self._tick() if now is None else float(now)
+                served = self._launch_pending(now)
+        while self._complete_next():           # retire everything in flight
             pass
-        with self._lock:
-            if not self._pending:
-                return 0
-            now = self._tick() if now is None else float(now)
-            groups = self._take_pending()
-        served = 0
-        for (name, k, backend, has_thr), futs in groups.items():
-            with self._lock:
-                g = self._launch_group(self._state(name), futs, k, backend,
-                                       has_thr, now, track=False)
-            self._resolve_group(g)
-            served += len(futs)
-        with self._lock:
-            self.flushes += 1
         return served
 
     def poll(self, *, now: float | None = None) -> int:
@@ -837,18 +868,23 @@ class AMService:
         """Resolve everything queued and in flight; True when fully drained.
 
         With a live driver this hands the work to it and waits on the
-        completion stage; otherwise it is a synchronous :meth:`flush`.
+        completion stage; otherwise it is a synchronous :meth:`flush` plus
+        a wait for any group a concurrent caller popped for readback —
+        ``True`` is only returned once every drained future has resolved.
         """
+        quiet = lambda: (not self._pending and not self._in_flight
+                         and self._resolving == 0)
         drv = self._driver
         if drv is None or not drv.is_alive():
             self.flush()
-            with self._lock:
-                return not self._pending and not self._in_flight
+            with self._cv:
+                ok = self._cv.wait_for(
+                    lambda: self._resolving == 0, timeout)
+                return ok and quiet()
         with self._cv:
             self._drain_req = True
             drv._wake.set()
-            ok = self._cv.wait_for(
-                lambda: not self._pending and not self._in_flight, timeout)
+            ok = self._cv.wait_for(quiet, timeout)
             self._drain_req = False
         return ok
 
@@ -881,15 +917,15 @@ class AMService:
         served = 0
         for (name, k, backend, has_thr), futs in groups.items():
             self._launch_group(self._state(name), futs, k, backend, has_thr,
-                               now, track=True)
+                               now)
             served += len(futs)
         if served:
             self.flushes += 1
         return served
 
     def _launch_group(self, t: _TableState, futs: list[PendingSearch],
-                      k: int, backend: str, has_thr: bool, now: float, *,
-                      track: bool) -> _InFlightGroup:
+                      k: int, backend: str, has_thr: bool,
+                      now: float) -> _InFlightGroup:
         """Lock held: issue one compiled dispatch; no host sync happens here.
 
         Cross-request dedup: identical (query, threshold) rows dispatch
@@ -928,15 +964,16 @@ class AMService:
                            arrays=(idx, dist, exact, matched),
                            new_meta=new_meta, version=t.version,
                            values=t.values, now=now)
-        if track:
-            self._in_flight.append(g)
+        self._in_flight.append(g)
         return g
 
     def _complete_next(self, *, only_ready: bool = False) -> bool:
         """Retire the oldest in-flight group (FIFO); False if none retired.
 
         ``only_ready`` makes this a non-blocking probe: the group is
-        skipped unless its device arrays have already landed.
+        skipped unless its device arrays have already landed.  A popped
+        group counts in ``_resolving`` until its futures are resolved, so
+        :meth:`drain` never declares quiescence mid-readback.
         """
         with self._lock:
             if not self._in_flight:
@@ -945,7 +982,13 @@ class AMService:
             if only_ready and not g.ready():
                 return False
             self._in_flight.popleft()
-        self._resolve_group(g)
+            self._resolving += 1
+        try:
+            self._resolve_group(g)
+        finally:
+            with self._cv:
+                self._resolving -= 1
+                self._cv.notify_all()
         return True
 
     def _resolve_group(self, g: _InFlightGroup) -> None:

@@ -421,3 +421,124 @@ def test_k_validation_at_every_entry():
     mesh = jax.sharding.Mesh(np.array(jax.devices()[:2]), ("tp",))
     with pytest.raises(ValueError, match="k must be >= 1"):
         am.search_sharded(t, q, mesh=mesh, k=-1)
+
+
+# ---------------------------------------------------------------------------
+# review regressions: sync-path races, drop_table windows, budget livelock
+# ---------------------------------------------------------------------------
+
+def _park_readback(svc):
+    """Patch the completion stage to park until a gate opens.
+
+    Returns (started, gate): ``started`` fires once a flusher has claimed a
+    group and is inside the (parked) readback; ``gate`` releases it.
+    """
+    started, gate = threading.Event(), threading.Event()
+    real = svc._resolve_group
+
+    def slow(g):
+        started.set()
+        assert gate.wait(10.0)
+        real(g)
+
+    svc._resolve_group = slow
+    return started, gate
+
+
+def test_result_waits_out_concurrent_sync_flush():
+    """Driverless concurrent callers: a thread calling result() while
+    another thread's flush() holds its bucket mid-readback must wait on
+    the completion stage — the pre-fix code did a no-op flush and hit
+    `assert self._response is not None` (or returned None under -O)."""
+    rng = np.random.default_rng(20)
+    svc = _svc(max_batch=64)
+    codes = _codes(rng, 4)
+    svc.append("t", codes, values=["a", "b", "c", "d"])
+    f1 = svc.submit("t", codes[0])
+    f2 = svc.submit("t", codes[1])
+    started, gate = _park_readback(svc)
+    flusher = threading.Thread(target=svc.flush)
+    flusher.start()
+    out = {}
+    try:
+        assert started.wait(10.0)        # bucket claimed, readback parked
+        waiter = threading.Thread(
+            target=lambda: out.setdefault("r", f2.result(timeout=10.0)))
+        waiter.start()
+        waiter.join(0.2)
+        assert waiter.is_alive()         # waiting on the event, not dead
+        gate.set()
+        waiter.join(10.0)
+        assert not waiter.is_alive()
+    finally:
+        gate.set()
+        flusher.join(10.0)
+    assert out["r"].hit and out["r"].value == "b"
+    assert f1.result(timeout=1.0).value == "a"
+
+
+def test_drain_sync_path_waits_for_midflight_readback():
+    """drain() without a driver must not report quiescence while another
+    thread holds a popped group mid-readback (futures still unresolved)."""
+    rng = np.random.default_rng(21)
+    svc = _svc(max_batch=64)
+    codes = _codes(rng, 2)
+    svc.append("t", codes, values=["a", "b"])
+    fut = svc.submit("t", codes[0])
+    started, gate = _park_readback(svc)
+    flusher = threading.Thread(target=svc.flush)
+    flusher.start()
+    out = {}
+    try:
+        assert started.wait(10.0)
+        drainer = threading.Thread(
+            target=lambda: out.setdefault("ok", svc.drain(timeout=10.0)))
+        drainer.start()
+        drainer.join(0.2)
+        # pre-fix: drain returned True here with fut still unresolved
+        assert drainer.is_alive() or fut.done
+        gate.set()
+        drainer.join(10.0)
+        assert not drainer.is_alive()
+    finally:
+        gate.set()
+        flusher.join(10.0)
+    assert out["ok"] is True and fut.done
+    assert fut.result().value == "a"
+
+
+def test_flush_tolerates_table_dropped_after_queueing():
+    """The drop_table race window: a lookup queued for a table that
+    vanishes before the flush drains it resolves as a miss — the pre-fix
+    `_take_pending` raised KeyError and orphaned every drained future."""
+    rng = np.random.default_rng(22)
+    svc = _svc(max_batch=64)
+    codes = _codes(rng, 2)
+    svc.append("t", codes)
+    fut = svc.submit("t", codes[0])
+    with svc._lock:
+        del svc._tables["t"]          # simulate the submit/drop interleaving
+    svc.flush()
+    assert fut.done
+    r = fut.result()
+    assert not r.hit and r.admitted and r.indices[0] == -1
+
+
+def test_qps_budget_refills_under_logical_clock():
+    """Over-budget submits advance the logical clock, so an exhausted
+    token bucket refills from continued traffic — pre-fix, reject/shed
+    never ticked and the budget livelocked at zero tokens forever."""
+    rng = np.random.default_rng(23)
+    svc = AMService(max_batch=64)
+    svc.create_table("t", width=WIDTH, capacity=32, qps_budget=0.5,
+                     burst=1.0, admission="shed")
+    svc.append("t", _codes(rng, 4))
+    q = _codes(rng, 1)[0]
+    admitted = []
+    for _ in range(5):
+        f = svc.submit("t", q)
+        admitted.append(not (f.done and not f.result().admitted))
+    # 0.5 tokens per tick: every other submit is admitted after the burst
+    assert admitted == [True, False, True, False, True]
+    assert svc.stats("t")["shed"] == 2
+    svc.flush()
