@@ -1,0 +1,186 @@
+"""IVF index tier vs flat search: recall/candidate-fraction/wall-clock.
+
+The index tier's claim (``docs/ARCHITECTURE.md``, layer 2.5) is that a
+set-associative coarse pass turns the O(N) flat scan into O(S + P*N/S)
+fine work while staying *contract-compatible* with ``am.search``:
+
+  * at ``probes == sets`` the result is bitwise-identical to the flat
+    path — indices AND distances, including the ascending
+    (distance, row) tie-break — because in-set slabs keep ascending
+    global-id order and the cross-set merge is the same two-key sort;
+  * at ``probes < sets`` the candidate fraction drops to ~P/S while
+    recall@k degrades gracefully on clusterable data.
+
+This benchmark generates clustered synthetic data (S Gaussian centers,
+3-bit CDF-equalized quantization — the regime the paper's multi-bit CAM
+targets), sweeps probes for the recall/fraction frontier, and wall-clocks
+indexed vs flat search over growing row counts.  Results land in
+``BENCH_index.json`` next to the CSV lines.
+
+``--smoke`` (the CI benchmark job) shrinks the sweeps and asserts the
+acceptance gates:
+
+  * ``probes == sets`` reproduces ``am.search`` bitwise on the property
+    shape, for both the "ref" and "pallas" backends;
+  * recall@10 >= 0.9 at P=4 / S=32 on the clustered data;
+  * mean candidate fraction <= P/S * 1.5 (the coarse pass actually
+    prunes — probing P sets must not touch much more than P/S of rows).
+
+  PYTHONPATH=src:. python benchmarks/bench_am_index.py
+  PYTHONPATH=src:. python benchmarks/bench_am_index.py --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+# must land before the first jax import (benchmarks.common imports jax)
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS",
+                                                                ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro import index as rindex
+from repro.core import am, quantize
+
+BITS = 3
+SETS = 32
+PROBES_GATE = 4          # the acceptance gate probes P=4 / S=32
+RECALL_GATE = 0.9        # recall@10 floor at the gate point
+FRAC_SLACK = 1.5         # candidate fraction <= P/S * slack
+
+
+def make_clustered(n, q, *, d=32, sets=SETS, noise=0.35, center_scale=2.0,
+                   seed=0):
+    """S Gaussian clusters quantized to 3-bit codes with global stats.
+
+    ``center_scale`` spreads the centers relative to the within-cluster
+    noise so the clusters survive the CDF-equalizing quantizer: the
+    global sigma is dominated by the center spread, and a 3-bit grid
+    then resolves cluster membership rather than within-cluster jitter.
+    """
+    rng = np.random.default_rng(seed)
+    centers = center_scale * rng.normal(size=(sets, d)).astype(np.float32)
+    owner = rng.integers(0, sets, size=n)
+    x = centers[owner] + noise * rng.normal(size=(n, d)).astype(np.float32)
+    qsrc = rng.integers(0, sets, size=q)
+    qx = centers[qsrc] + noise * rng.normal(size=(q, d)).astype(np.float32)
+    mu, sigma = np.float32(x.mean()), np.float32(x.std())
+    codes = np.asarray(quantize.quantize(x, BITS, mu=mu, sigma=sigma))
+    qcodes = np.asarray(quantize.quantize(qx, BITS, mu=mu, sigma=sigma))
+    return codes, qcodes
+
+
+def recall_at_k(approx, exact):
+    """Fraction of (query, slot) distances matching the exact top-k.
+
+    Comparing sorted distance arrays (not indices) is the tie-safe
+    definition: equal-distance rows may legally swap slots.
+    """
+    return float((np.asarray(approx) == np.asarray(exact)).mean())
+
+
+def check_bitwise(backend):
+    """probes == sets must reproduce the flat path bitwise — indices AND
+    distances — on a tie-heavy shape (binary codes force collisions)."""
+    rng = np.random.default_rng(3)
+    codes = rng.integers(0, 2, size=(96, 8)) * 7   # levels {0,7}: many ties
+    t = am.make_table(codes, bits=BITS)
+    idx = rindex.build(t, sets=8, seed=0)
+    ex = am.search(t, codes[:16], k=12, backend=backend)
+    r = rindex.search(idx, codes[:16], k=12, probes=8, backend=backend)
+    np.testing.assert_array_equal(np.asarray(r.indices),
+                                  np.asarray(ex.indices))
+    np.testing.assert_array_equal(np.asarray(r.distances),
+                                  np.asarray(ex.distances))
+
+
+def run(smoke: bool = False) -> None:
+    k = 10
+    n, q = (2048, 64) if smoke else (8192, 128)
+    probes_sweep = (1, 2, 4, 8, 32) if smoke else (1, 2, 4, 8, 16, 32)
+    rows_sweep = (2048,) if smoke else (1024, 4096, 16384)
+    iters = 3 if smoke else 10
+    report: dict = {"sets": SETS, "k": k, "n": n, "queries": q,
+                    "probes": {}, "wall": {}}
+
+    if smoke:
+        for backend in ("ref", "pallas"):
+            check_bitwise(backend)
+
+    codes, qcodes = make_clustered(n, q)
+    table = am.make_table(codes, bits=BITS)
+    index = rindex.build(table, sets=SETS, seed=0)
+    exact = am.search(table, qcodes, k=k, backend="ref")
+    jnp_q = jnp.asarray(qcodes)
+
+    for probes in probes_sweep:
+        f_idx = jax.jit(lambda ix, qq, p=probes: rindex.search(
+            ix, qq, k=k, probes=p, backend="ref"))
+        us = time_call(f_idx, index, jnp_q, iters=iters)
+        r = jax.device_get(f_idx(index, jnp_q))
+        rec = recall_at_k(r.distances, exact.distances)
+        frac = float(np.asarray(r.candidate_fraction).mean())
+        proxy = float(np.asarray(r.recall_proxy).mean())
+        report["probes"][probes] = {"recall_at_k": rec,
+                                    "candidate_fraction": frac,
+                                    "recall_proxy": proxy,
+                                    "us_per_call": us}
+        emit(f"am_index_s{SETS}_p{probes}_n{n}_k{k}", us,
+             f"recall@{k}={rec:.3f};frac={frac:.4f};proxy={proxy:.3f}")
+        if smoke and probes == SETS:
+            assert rec == 1.0 and proxy == 1.0, (rec, proxy)
+
+    if smoke:
+        gate = report["probes"][PROBES_GATE]
+        assert gate["recall_at_k"] >= RECALL_GATE, gate
+        bound = PROBES_GATE / SETS * FRAC_SLACK
+        assert gate["candidate_fraction"] <= bound, (gate, bound)
+        # recall must not degrade as probes grow (monotone frontier)
+        recs = [report["probes"][p]["recall_at_k"] for p in probes_sweep]
+        assert all(a <= b + 1e-9 for a, b in zip(recs, recs[1:])), recs
+
+    # wall-clock vs row count: flat O(N) scan vs indexed O(S + P*N/S).
+    # NB on CPU both paths run through the interpreted/ref kernels, so the
+    # wall numbers track candidate counts, not TPU memory-boundedness —
+    # candidate_fraction is the architectural signal.
+    for rows in rows_sweep:
+        c, qc = make_clustered(rows, q, seed=1)
+        t = am.make_table(c, bits=BITS)
+        ix = rindex.build(t, sets=SETS, seed=0)
+        qj = jnp.asarray(qc)
+        f_flat = jax.jit(lambda tt, qq: am.search(tt, qq, k=k,
+                                                  backend="ref"))
+        f_ivf = jax.jit(lambda ii, qq: rindex.search(
+            ii, qq, k=k, probes=PROBES_GATE, backend="ref"))
+        flat_us = time_call(f_flat, t, qj, iters=iters)
+        ivf_us = time_call(f_ivf, ix, qj, iters=iters)
+        frac = float(np.asarray(
+            jax.device_get(f_ivf(ix, qj)).candidate_fraction).mean())
+        report["wall"][rows] = {"flat_us": flat_us, "indexed_us": ivf_us,
+                                "candidate_fraction": frac}
+        emit(f"am_index_rows{rows}_p{PROBES_GATE}", ivf_us,
+             f"flat_us={flat_us:.1f};indexed_us={ivf_us:.1f};"
+             f"frac={frac:.4f}")
+
+    with open("BENCH_index.json", "w") as fh:
+        json.dump(report, fh, indent=2, sort_keys=True)
+    print(f"wrote BENCH_index.json ({len(report['probes'])} probe points, "
+          f"{len(report['wall'])} row counts)", flush=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweeps + recall/bitwise assertions (CI)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)

@@ -2,7 +2,8 @@
 
 Programs a 3-bit NOR SEE-MCAM array, runs associative searches through the
 behavioural FeFET device model, the exact-match oracle and the Pallas MXU
-kernel, shards the same search over a multi-bank device mesh, and prints the
+kernel, shards the same search over a multi-bank device mesh, prunes it
+sub-linearly through the set-associative index tier, and prints the
 calibrated energy/latency/area numbers (Table II).
 
   PYTHONPATH=src python examples/quickstart.py
@@ -18,6 +19,7 @@ device mesh first:
 import jax
 import jax.numpy as jnp
 
+from repro import index as rindex
 from repro.core import am, cam_array, energy
 
 
@@ -59,7 +61,19 @@ def main():
           f"top3_rows={[int(i) for i in res.indices]} "
           f"distances={[float(d) for d in res.distances]}")
 
-    # 6. calibrated circuit model (Table II operating point)
+    # 6. sub-linear search through the set-associative index tier
+    #    (docs/ARCHITECTURE.md layer 2.5): a coarse pass over quantized
+    #    centroid codes picks `probes` sets, the fine pass scans only those —
+    #    probes = sets reproduces the flat am.search above bitwise
+    idx = rindex.build(table, sets=8)
+    r4 = rindex.search(idx, noisy, k=3, probes=4)
+    r8 = rindex.search(idx, noisy, k=3, probes=8)
+    print(f"indexed (probes=4/8): top3_rows={[int(i) for i in r4.indices]} "
+          f"scanned={float(r4.candidate_fraction):.0%} of rows "
+          f"(certified recall >= {float(r4.recall_proxy):.2f}); "
+          f"probes=8 exact={r8.distances.tolist() == res.distances.tolist()}")
+
+    # 7. calibrated circuit model (Table II operating point)
     s = energy.model_summary(n_cells=32, bits=3)
     print(f"\nNOR  2FeFET-1T : {s['nor']['energy_fj_per_bit']:.3f} fJ/bit, "
           f"{s['nor']['latency_ps']:.0f} ps, "

@@ -19,8 +19,10 @@ topologies" below).
 
 Backends are plugins registered through :func:`register_backend`; ``"ref"``
 (pure jnp oracle), ``"pallas"`` (MXU one-hot Gram kernel,
-:mod:`repro.kernels.cam_search`) and ``"analog"`` (behavioural FeFET circuit
-model, :mod:`repro.core.cam_array`) ship by default.
+:mod:`repro.kernels.cam_search`), ``"analog"`` (behavioural FeFET circuit
+model, :mod:`repro.core.cam_array`) and ``"analog_cal"`` (the same circuit
+model with its L1 readout calibrated back to digital level units through the
+affine overdrive fit) ship by default.
 
 The full stack contract — layer map, capability tiers, tie-break guarantee,
 merge-topology decision table — is documented in ``docs/ARCHITECTURE.md``
@@ -85,7 +87,12 @@ Requirements:
 * the analog ``"l1"`` path reports the *physical* ML discharge in LSB units —
   monotone in the level distance of each cell but not numerically equal to
   the digital L1 sum (the device's overdrive response is affine, not
-  proportional); rankings agree on exact matches and single-cell gaps.
+  proportional); rankings agree on exact matches and single-cell gaps.  The
+  ``"analog_cal"`` backend closes that gap: it inverts the affine fit
+  ``i_ml ~= a * mismatches + b * L1``
+  (:func:`repro.core.mibo.overdrive_response_fit`) so its ``"l1"`` values
+  are digital-equivalent level distances and half-integer thresholds carry
+  over between analog and digital backends unchanged.
 """
 
 from __future__ import annotations
@@ -407,7 +414,8 @@ def _pallas_fused_backend(queries, codes, bits, distance, *, k, valid_rows):
 
 
 def make_analog_backend(variation_key: jax.Array | None = None,
-                        params: fefet.FeFETParams = fefet.DEFAULT) -> BackendFn:
+                        params: fefet.FeFETParams = fefet.DEFAULT,
+                        calibrated: bool = False) -> BackendFn:
     """Build an analog (device-model) backend, optionally with V_TH variation.
 
     ``"hamming"`` counts cells whose MIBO node D charged; ``"l1"`` reports the
@@ -418,6 +426,16 @@ def make_analog_backend(variation_key: jax.Array | None = None,
 
         am.register_backend("analog_mc", am.make_analog_backend(key))
 
+    With ``calibrated=True`` the ``"l1"`` readout is inverted through the
+    affine overdrive-response fit
+    (:func:`repro.core.mibo.overdrive_response_fit`): a matchline discharge
+    ``i_ml ~= a * mismatches + b * L1`` maps back to the digital-equivalent
+    level distance ``(i_ml - a * mismatches) / b``, so analog thresholds
+    compare directly with digital ones (the registered ``"analog_cal"``
+    backend).  The residual is the fit error of the device's slightly
+    super-affine response — well under half a level per mismatching cell —
+    so half-integer thresholds are exact.
+
     Variation-keyed instances are **not shard-safe**: the noise is drawn from
     ``codes.shape``, so under :func:`search_sharded` every bank would draw
     the same realisation for different rows (and none would match the
@@ -426,6 +444,8 @@ def make_analog_backend(variation_key: jax.Array | None = None,
     Args:
       variation_key: optional PRNG key for per-cell V_TH variation noise.
       params: FeFET device parameters the circuit model evaluates under.
+      calibrated: invert the affine overdrive fit so ``"l1"`` distances come
+        back in digital level units instead of raw LSB-current units.
 
     Returns:
       A dense-tier :data:`BackendFn`.
@@ -441,6 +461,9 @@ def make_analog_backend(variation_key: jax.Array | None = None,
             codes, queries, bits, noise1, noise2, params)
         if distance == "hamming":
             return mismatch
+        if calibrated:
+            a, b = mibo.overdrive_response_fit(bits, params)
+            return (i_ml - a * mismatch) / b
         return i_ml / mibo.lsb_mismatch_current(bits, params)
 
     return _backend
@@ -449,6 +472,7 @@ def make_analog_backend(variation_key: jax.Array | None = None,
 register_backend("ref", _ref_backend)
 register_backend("pallas", _pallas_backend, fused=_pallas_fused_backend)
 register_backend("analog", make_analog_backend())
+register_backend("analog_cal", make_analog_backend(calibrated=True))
 
 
 # ---------------------------------------------------------------------------
@@ -508,6 +532,11 @@ def _prep_queries(table: AMTable, queries) -> tuple[jnp.ndarray, bool]:
     squeeze = queries.ndim == 1
     if squeeze:
         queries = queries[None]
+    if queries.ndim != 2:
+        raise ValueError(
+            f"queries must be (Q, D) or a single (D,) word, got a "
+            f"{queries.ndim}-D array of shape {queries.shape} — flatten "
+            f"leading batch axes before searching")
     if queries.shape[-1] != table.width:
         raise ValueError(
             f"query width {queries.shape[-1]} != stored width {table.width}")
@@ -667,6 +696,62 @@ def _lex_merge_topk(dist_a: jnp.ndarray, idx_a: jnp.ndarray,
     return dist[:, :k], idx[:, :k]
 
 
+def _merge_bank_candidates(dist_local: jnp.ndarray, idx_local: jnp.ndarray, *,
+                           axis: str, n_banks: int, k: int,
+                           strategy: str) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Reduce per-bank (Q, k_local) candidates to the replicated global top-k.
+
+    The cross-bank half of :func:`search_sharded`'s bank body, factored out
+    so other banked layers (the set-associative index tier,
+    :mod:`repro.index.ivf`) reuse the identical collective schedule.  Must
+    run inside a ``shard_map`` body over mesh axis ``axis``; both inputs are
+    this bank's candidate list, already (distance, global row index)-sorted
+    with +inf for masked rows.
+
+    Args:
+      dist_local: (Q, k_local) float32 per-bank candidate distances.
+      idx_local: (Q, k_local) int32 *global* row indices of the candidates.
+      axis: the mesh axis name the table is banked over.
+      n_banks: width of that axis.
+      k: global top-k to keep (the exchanged lists are padded to it).
+      strategy: ``"tree"`` or ``"allgather"`` (resolve ``"auto"`` first via
+        :func:`resolve_merge`).
+
+    Returns:
+      ``(indices, distances)`` — the (Q, k) global top-k, replicated across
+      the axis, ordered by ascending (distance, global row index).
+    """
+    if strategy == "tree":
+        # Recursive doubling: round r receives the running top-k of the
+        # bank 2**r places down-ring and folds it in with the pairwise
+        # lexicographic merge.  After ceil(log2(banks)) rounds every
+        # bank has folded in every other bank's candidates (offsets
+        # 0..2**rounds-1 cover the whole ring; overlap on
+        # non-power-of-two widths is handled by the merge's dedup), so
+        # the result is the replicated global top-k — per-device
+        # traffic O(Q * k * log banks) instead of O(Q * k * banks).
+        dist_c, idx_c = _pad_candidates(dist_local, idx_local, k)
+        for r in range((n_banks - 1).bit_length()):
+            shift = 1 << r
+            perm = [(i, (i + shift) % n_banks) for i in range(n_banks)]
+            dist_p = jax.lax.ppermute(dist_c, axis, perm)
+            idx_p = jax.lax.ppermute(idx_c, axis, perm)
+            dist_c, idx_c = _lex_merge_topk(dist_c, idx_c,
+                                            dist_p, idx_p, k)
+        return idx_c, dist_c
+
+    # flat merge: all-gather every bank's candidates, re-rank locally with
+    # the two-key (distance, global row index) sort.  A positional top_k
+    # would only honour the tie-break contract when bank order equals
+    # global-index order for equal distances — true for contiguously banked
+    # rows, NOT for the set-associative index tier, where a bank's sets
+    # hold arbitrary global ids.  The explicit lex sort is exact for both.
+    dists = jax.lax.all_gather(dist_local, axis, axis=1, tiled=True)
+    gis = jax.lax.all_gather(idx_local, axis, axis=1, tiled=True)
+    dists, gis = jax.lax.sort((dists, gis), num_keys=2)
+    return gis[:, :k], dists[:, :k]
+
+
 def merge_traffic_bytes(n_banks: int, q: int, k: int, *, merge: str = "auto",
                         n_rows: int | None = None) -> int:
     """Per-device bytes *received* over the mesh axis during the merge.
@@ -820,31 +905,8 @@ def search_sharded(table: AMTable, queries, *, mesh, rules=None, k: int = 1,
             neg, il = jax.lax.top_k(-d, k_local)
             dl = -neg
         gi = (il + base).astype(jnp.int32)
-
-        if strategy == "tree":
-            # Recursive doubling: round r receives the running top-k of the
-            # bank 2**r places down-ring and folds it in with the pairwise
-            # lexicographic merge.  After ceil(log2(banks)) rounds every
-            # bank has folded in every other bank's candidates (offsets
-            # 0..2**rounds-1 cover the whole ring; overlap on
-            # non-power-of-two widths is handled by the merge's dedup), so
-            # the result is the replicated global top-k — per-device
-            # traffic O(Q * k * log banks) instead of O(Q * k * banks).
-            dist_c, idx_c = _pad_candidates(dl, gi, k_eff)
-            for r in range((n_banks - 1).bit_length()):
-                shift = 1 << r
-                perm = [(i, (i + shift) % n_banks) for i in range(n_banks)]
-                dist_p = jax.lax.ppermute(dist_c, axis, perm)
-                idx_p = jax.lax.ppermute(idx_c, axis, perm)
-                dist_c, idx_c = _lex_merge_topk(dist_c, idx_c,
-                                                dist_p, idx_p, k_eff)
-            return idx_c, dist_c
-
-        # flat merge: all-gather every bank's candidates, re-rank locally
-        negs = jax.lax.all_gather(-dl, axis, axis=1, tiled=True)
-        gis = jax.lax.all_gather(gi, axis, axis=1, tiled=True)
-        neg2, pos = jax.lax.top_k(negs, k_eff)
-        return jnp.take_along_axis(gis, pos, axis=1), -neg2
+        return _merge_bank_candidates(dl, gi, axis=axis, n_banks=n_banks,
+                                      k=k_eff, strategy=strategy)
 
     # Outputs are replicated over `model` by construction (both merges end
     # with every bank holding the same candidates), but 0.4.x's replication

@@ -102,6 +102,42 @@ def mibo_xor(values: jnp.ndarray, queries: jnp.ndarray, bits: int) -> jnp.ndarra
     return mibo_current(values, queries, bits) > I_D_THRESHOLD
 
 
+def overdrive_response_fit(bits: int,
+                           params: FeFETParams = DEFAULT) -> tuple[float, float]:
+    """Affine fit ``i_cell(g) ~= a + b * g`` of the per-cell mismatch current.
+
+    The conducting FeFET of a cell mismatching by ``g`` levels sees a gate
+    overdrive of ``(g - 0.5) * step`` (VWL sits mid-rung), so above threshold
+    its current grows affinely in the level gap.  A word's matchline discharge
+    is the sum over mismatching cells, hence
+
+        ``i_ml ~= a * mismatches + b * L1``
+
+    where ``mismatches`` is the Hamming (symbol-mismatch) count and ``L1`` the
+    total level distance.  Inverting this fit is what lets the analog backend
+    report digital-equivalent L1 distances (``am.make_analog_backend(...,
+    calibrated=True)``, registered as ``"analog_cal"``): thresholds tuned on a
+    digital backend then transfer to the analog one unchanged.
+
+    Least squares over every realisable gap ``g = 1 .. 2**bits - 1``, through
+    the full device model so parameter overrides propagate.  For ``bits=1``
+    there is a single gap and the fit degenerates to the exact proportional
+    map ``(a, b) = (0, i(1))``.  Returns ``(a, b)`` in amperes (per mismatch /
+    per level).
+    """
+    m = 1 << bits
+    gaps = jnp.arange(1, m)
+    cur = mibo_current(jnp.zeros_like(gaps), gaps, bits, params=params)
+    if m == 2:
+        return 0.0, float(cur[0])
+    g = jnp.asarray(gaps, jnp.float64 if jax.config.jax_enable_x64
+                    else jnp.float32)
+    gm, cm = jnp.mean(g), jnp.mean(cur)
+    b = jnp.sum((g - gm) * (cur - cm)) / jnp.sum((g - gm) ** 2)
+    a = cm - b * gm
+    return float(a), float(b)
+
+
 def lsb_mismatch_current(bits: int, params: FeFETParams = DEFAULT) -> jnp.ndarray:
     """Pull-up current (A) of a single cell mismatching by exactly ONE level.
 

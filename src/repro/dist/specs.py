@@ -28,6 +28,7 @@ Specs factories (shapes they describe):
   ``am_queries``     (Q, D)        associative-search queries (replicated)
   ``am_queries_dp``  (Q, D)        associative-search queries, batch on dp
   ``am_meta``        (N, M)        per-row serving meta/timestamps (replicated)
+  ``am_index``       (S, ...)      set-associative index per-set arrays, S on tp
 
 The associative-memory specs are one half of the search-stack contract
 documented in ``docs/ARCHITECTURE.md`` (the other half is the backend tier
@@ -172,6 +173,23 @@ class Rules:
         banked rows only pay for their codes, which dominate.
         """
         return P(None, None)
+
+    def am_index(self) -> P:
+        """(S, ...) set-associative index arrays: S (sets) on tp, rest replicated.
+
+        The spec of every per-set array of an :class:`repro.index.ivf.IVFIndex`
+        — the (S, C, D) row slabs, (S, C) global row ids, (S,) set sizes and
+        radii — so one factory covers all ranks (a single leading entry leaves
+        trailing dimensions replicated).  Sets shard over the same ``tp`` axis
+        the flat table banks over (:meth:`am_table`): each bank owns a
+        contiguous run of whole sets and fine-scores only the probed sets it
+        owns, then the per-bank candidates reduce through the identical
+        tree/all-gather merge as the exact sharded search.  The (S, D)
+        centroid table is *not* sharded by this spec — the coarse pass is
+        O(S) work on a table ~rows/sets smaller than the data and runs
+        replicated, outside the banked region.
+        """
+        return P(self.tp)
 
     # -- outputs -------------------------------------------------------------
 

@@ -1,0 +1,44 @@
+"""repro.index — set-associative IVF tier for sub-linear associative search.
+
+Layer 2.5 of the stack (between the search engine ``repro.core.am`` and the
+distribution layer ``repro.dist``): partitions a table's rows into S sets
+around quantized centroid codes, coarse-ranks the centroids with the exact
+digital machinery, and fine-searches only the top ``probes`` sets' row slabs
+with the real backends — including the fused ``cam_search_topk`` kernel.
+``probes == sets`` is bitwise the flat ``am.search``; fewer probes trade
+certified recall (``recall_proxy``) for O(S + probes * N/S) work per query.
+
+See ``docs/ARCHITECTURE.md`` ("Layer 2.5 — index") for the contract table.
+"""
+
+from repro.index.ivf import (
+    IndexSpec,
+    IVFIndex,
+    IVFSearchResult,
+    append,
+    build,
+    search,
+    search_sharded,
+)
+from repro.index.partition import (
+    METHODS,
+    assign,
+    hyperplane_centroids,
+    kmeans_centroids,
+    train_centroids,
+)
+
+__all__ = [
+    "METHODS",
+    "IVFIndex",
+    "IndexSpec",
+    "IVFSearchResult",
+    "append",
+    "assign",
+    "build",
+    "hyperplane_centroids",
+    "kmeans_centroids",
+    "search",
+    "search_sharded",
+    "train_centroids",
+]

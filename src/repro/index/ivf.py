@@ -1,0 +1,587 @@
+"""IVF-style set-associative index over ``AMTable`` — sub-linear search.
+
+Every ``am.search`` backend scans all N rows per query.  This module makes
+the scan *set-associative*, the hardware-faithful way a multi-bank MCAM goes
+sub-linear: rows are partitioned into S sets around quantized centroid codes
+(:mod:`repro.index.partition`), a **coarse** pass ranks the S centroids with
+the exact digital machinery (one tiny ``am``-style search over an (S, D)
+table), and the **fine** pass runs the real backend — including the fused
+``cam_search_topk`` kernel — only over the ``probes`` top-ranked sets'
+gathered row slabs.  Work per query drops from O(N) to
+O(S + probes * N/S); with balanced sets and ``S ~ sqrt(N)`` that is
+O(sqrt(N)).
+
+Exactness anatomy (why ``probes = S`` is *bitwise* the flat search):
+
+* every row lives in exactly one set, and within a set's slab rows are
+  stored in ascending global-row-id order — so the fused kernel's
+  slab-position tie-break IS the global-id tie-break within a set;
+* per-row distances are pure functions of (query, row) for every supported
+  backend, so gathering a row into a slab cannot change its distance;
+* cross-set candidates merge through a two-key ``lax.sort`` on
+  (distance, global row id) — exactly ``lax.top_k``'s ordering over the
+  dense matrix (contract 2 of ``docs/ARCHITECTURE.md``).
+
+With ``probes < S`` the search is approximate; :class:`IVFSearchResult`
+carries a per-query ``recall_proxy`` — the fraction of returned candidates
+whose distance is *certified* correct by the triangle inequality
+(``d(q, x) >= d(q, c_s) - r_s`` for any row x of an unprobed set s, with
+``r_s`` the set's build-time covering radius in exact digital units).
+``probes = S`` certifies everything (proxy 1.0).
+
+Backends whose output depends on the table's shape or global row position
+(``am.make_analog_backend`` with a ``variation_key``) are not supported —
+the same exclusion as ``am.search_sharded``, for the same reason.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import am
+from repro.index import partition
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSpec:
+    """Recipe for a table's index tier — how the serving layer builds one.
+
+    ``AMService.create_table(..., index=IndexSpec(sets=32, probes=4))``
+    routes that table's dispatches through an :class:`IVFIndex`
+    transparently: the service builds the index lazily once the table holds
+    ``build_threshold`` live rows (k-means over a handful of rows is
+    noise), extends it incrementally on appends, and rebuilds it after any
+    compaction (eviction / delete renumbers global row ids).
+
+    Attributes:
+      sets: number of sets S.
+      probes: coarse sets fine-searched per query (1 <= probes <= sets;
+        ``probes == sets`` makes the indexed path bitwise the exact one).
+      method: centroid trainer, one of
+        :data:`repro.index.partition.METHODS`.
+      seed: deterministic trainer seed.
+      iters: k-means iterations.
+      min_rows: live-row count that triggers the lazy build; ``None``
+        means ``4 * sets``.
+    """
+
+    sets: int
+    probes: int
+    method: str = "kmeans"
+    seed: int = 0
+    iters: int = 10
+    min_rows: int | None = None
+
+    @property
+    def build_threshold(self) -> int:
+        """Live rows needed before the index is (re)built."""
+        base = 4 * self.sets if self.min_rows is None else self.min_rows
+        return max(self.sets, base)
+
+    def validate(self) -> None:
+        """Raise :class:`ValueError` on an unusable spec."""
+        if self.sets < 1:
+            raise ValueError(f"index sets must be >= 1, got {self.sets}")
+        if not 1 <= self.probes <= self.sets:
+            raise ValueError(
+                f"index probes must be in [1, sets={self.sets}], "
+                f"got {self.probes}")
+        if self.method not in partition.METHODS:
+            raise ValueError(
+                f"unknown partition method {self.method!r}; "
+                f"expected one of {partition.METHODS}")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class IVFIndex:
+    """Immutable set-associative index over one table (a registered pytree).
+
+    Children (all traced, so a jitted search re-dispatches on fill changes
+    without recompiling):
+
+    * ``centroids``  (S, D) int32 quantized centroid codes — the coarse table.
+    * ``slabs``      (S, C, D) int32 per-set row slabs; within a set, rows
+      sit in ascending global-row-id order (the fused-tier exactness
+      invariant); dead slots hold zeros.
+    * ``row_ids``    (S, C) int32 global row ids; dead slots hold
+      ``am._IDX_SENTINEL`` so they can never outrank a real candidate.
+    * ``set_sizes``  (S,) int32 live rows per set.
+    * ``set_radius`` (S,) float32 covering radius — max member->centroid
+      distance in exact digital units (the triangle-bound certificate).
+
+    ``bits`` / ``distance`` are static aux data, mirroring ``AMTable``.
+    """
+
+    centroids: jnp.ndarray
+    slabs: jnp.ndarray
+    row_ids: jnp.ndarray
+    set_sizes: jnp.ndarray
+    set_radius: jnp.ndarray
+    bits: int = 3
+    distance: str = "hamming"
+
+    def tree_flatten(self):
+        """Flatten into the five index arrays + (bits, distance) aux."""
+        return ((self.centroids, self.slabs, self.row_ids, self.set_sizes,
+                 self.set_radius), (self.bits, self.distance))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        """Rebuild from the children/aux pair of :meth:`tree_flatten`."""
+        return cls(*children, bits=aux[0], distance=aux[1])
+
+    @property
+    def sets(self) -> int:
+        """Number of sets S."""
+        return self.slabs.shape[0]
+
+    @property
+    def set_capacity(self) -> int:
+        """Slab width C — max rows one set can hold before a rebuild."""
+        return self.slabs.shape[1]
+
+    @property
+    def width(self) -> int:
+        """Word width D in multi-bit symbols."""
+        return self.slabs.shape[2]
+
+    @property
+    def n_rows(self) -> int:
+        """Total live rows (host-side only: concretises ``set_sizes``)."""
+        return int(np.sum(np.asarray(self.set_sizes)))
+
+    def centroid_table(self) -> am.AMTable:
+        """The (S, D) coarse table the probe ranking searches."""
+        return am.make_table(self.centroids, bits=self.bits,
+                             distance=self.distance)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class IVFSearchResult:
+    """An :class:`am.AMSearchResult` plus the index tier's per-query metadata.
+
+    ``result`` follows the flat-search contract exactly (best-first,
+    (distance, row) tie-break); the extra fields quantify what the probe
+    budget bought:
+
+    * ``recall_proxy`` (Q,) float32 — fraction of the returned finite
+      candidates certified exact by the triangle bound (1.0 at probes=S).
+    * ``probed_sets`` (Q, P) int32 — which sets each query probed,
+      best-first.
+    * ``candidate_fraction`` (Q,) float32 — gathered live candidates / total
+      live rows, the work actually done relative to a flat scan.
+    """
+
+    result: am.AMSearchResult
+    recall_proxy: jnp.ndarray
+    probed_sets: jnp.ndarray
+    candidate_fraction: jnp.ndarray
+
+    def tree_flatten(self):
+        """Flatten into the result pytree + metadata arrays (no aux)."""
+        return ((self.result, self.recall_proxy, self.probed_sets,
+                 self.candidate_fraction), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        """Rebuild from the children of :meth:`tree_flatten`."""
+        del aux
+        return cls(*children)
+
+    # -- delegation: an IVFSearchResult reads like an AMSearchResult --------
+
+    @property
+    def indices(self):
+        """(Q, k) int32 global row indices, best-first."""
+        return self.result.indices
+
+    @property
+    def distances(self):
+        """(Q, k) float32 distances in contract units."""
+        return self.result.distances
+
+    @property
+    def exact(self):
+        """(Q, k) bool exact-match flags."""
+        return self.result.exact
+
+    @property
+    def matched(self):
+        """(Q, k) bool threshold-match flags."""
+        return self.result.matched
+
+    @property
+    def best_row(self):
+        """(Q,) index of the single nearest row."""
+        return self.result.best_row
+
+
+# ---------------------------------------------------------------------------
+# build / append (host-side, like am.delete: shape-changing, not jitted)
+# ---------------------------------------------------------------------------
+
+def _exact_centroid_distances(centroids: np.ndarray, codes: np.ndarray,
+                              bits: int, distance: str) -> np.ndarray:
+    """(M, S) exact digital distances of rows to centroid codes (f32)."""
+    ct = am.make_table(np.asarray(centroids, np.int32), bits=bits,
+                      distance=distance)
+    return np.asarray(am.distances(ct, np.asarray(codes, np.int32),
+                                   backend="ref")).astype(np.float32)
+
+
+def build(table: am.AMTable, *, sets: int, method: str = "kmeans",
+          seed: int = 0, iters: int = 10,
+          set_capacity: int | None = None) -> IVFIndex:
+    """Build an :class:`IVFIndex` over every row of ``table``.
+
+    Global row id == row position in ``table`` (the returned indices are
+    directly comparable to ``am.search`` over the same table).
+
+    Args:
+      table: the code store to index (its ``bits``/``distance`` carry over).
+      sets: number of sets S (1 <= S <= rows).
+      method: centroid trainer — ``"kmeans"`` or ``"hyperplane"``
+        (:data:`repro.index.partition.METHODS`).
+      seed: deterministic training seed.
+      iters: k-means iterations (ignored for ``"hyperplane"``).
+      set_capacity: slab width C; defaults to the largest set's size.  A
+        later :func:`append` that overflows C rebuilds the slabs (a host
+        reallocation + one recompile of any jitted search, exactly like
+        growing a serving slab).
+
+    Returns:
+      A new immutable :class:`IVFIndex`.
+    """
+    codes = np.asarray(table.codes, np.int32)
+    n, d = codes.shape
+    if n == 0:
+        raise ValueError("cannot index an empty table (0 rows)")
+    centroids = partition.train_centroids(codes, sets, bits=table.bits,
+                                          method=method, seed=seed,
+                                          iters=iters)
+    owner = partition.assign(centroids, codes, bits=table.bits,
+                             distance=table.distance)
+    members = [np.flatnonzero(owner == s) for s in range(sets)]  # ascending
+    sizes = np.array([len(m) for m in members], np.int32)
+    cap = int(sizes.max(initial=1)) if set_capacity is None else set_capacity
+    if cap < int(sizes.max(initial=0)):
+        raise ValueError(f"set_capacity {cap} < largest set "
+                         f"({int(sizes.max())} rows)")
+    cap = max(1, cap)
+    slabs = np.zeros((sets, cap, d), np.int32)
+    row_ids = np.full((sets, cap), am._IDX_SENTINEL, np.int32)
+    dmat = _exact_centroid_distances(centroids, codes, table.bits,
+                                     table.distance)
+    radius = np.zeros((sets,), np.float32)
+    for s, m in enumerate(members):
+        if len(m):
+            slabs[s, :len(m)] = codes[m]
+            row_ids[s, :len(m)] = m
+            radius[s] = dmat[m, s].max()
+    return IVFIndex(centroids=jnp.asarray(centroids),
+                    slabs=jnp.asarray(slabs), row_ids=jnp.asarray(row_ids),
+                    set_sizes=jnp.asarray(sizes),
+                    set_radius=jnp.asarray(radius),
+                    bits=table.bits, distance=table.distance)
+
+
+def append(index: IVFIndex, codes, *, start_row: int | None = None
+           ) -> IVFIndex:
+    """Place (M, D) new rows into their nearest sets; returns a new index.
+
+    New rows get global ids ``start_row .. start_row + M - 1`` (defaulting
+    to the current live count, matching ``am.append`` on the flat table) and
+    land at their sets' slab ends — ids are monotonically increasing, so the
+    in-set ascending-id invariant is preserved without re-sorting.  Covering
+    radii only grow (max with the new members' centroid distances), so the
+    triangle certificate stays sound.  Overflowing a set's slab reallocates
+    every slab ~25% wider (host-side; any jitted search recompiles once).
+
+    Args:
+      index: the index to extend (returned unchanged object is never
+        mutated).
+      codes: (M, D) — or a single (D,) — integer level codes.
+      start_row: global id of the first appended row.
+
+    Returns:
+      A new :class:`IVFIndex` holding the old and new rows.
+    """
+    codes = np.asarray(codes, np.int32)
+    if codes.ndim == 1:
+        codes = codes[None]
+    if codes.ndim != 2 or codes.shape[1] != index.width:
+        raise ValueError(f"append codes shape {codes.shape} != "
+                         f"(m, {index.width})")
+    m = codes.shape[0]
+    if m == 0:
+        return index
+    centroids = np.asarray(index.centroids)
+    sizes = np.asarray(index.set_sizes).copy()
+    start = int(np.sum(sizes)) if start_row is None else int(start_row)
+    owner = partition.assign(centroids, codes, bits=index.bits,
+                             distance=index.distance)
+    new_sizes = sizes.copy()
+    for s in owner:
+        new_sizes[s] += 1
+    cap = index.set_capacity
+    if int(new_sizes.max()) > cap:
+        cap = max(int(new_sizes.max()), cap + max(1, cap // 4))
+    s_n, d = centroids.shape
+    slabs = np.zeros((s_n, cap, d), np.int32)
+    row_ids = np.full((s_n, cap), am._IDX_SENTINEL, np.int32)
+    old_slabs = np.asarray(index.slabs)
+    old_ids = np.asarray(index.row_ids)
+    for s in range(s_n):
+        slabs[s, :sizes[s]] = old_slabs[s, :sizes[s]]
+        row_ids[s, :sizes[s]] = old_ids[s, :sizes[s]]
+    dmat = _exact_centroid_distances(centroids, codes, index.bits,
+                                     index.distance)
+    radius = np.asarray(index.set_radius).copy()
+    fill = sizes.copy()
+    for i, s in enumerate(owner):
+        slabs[s, fill[s]] = codes[i]
+        row_ids[s, fill[s]] = start + i
+        fill[s] += 1
+        radius[s] = max(radius[s], dmat[i, s])
+    return dataclasses.replace(index, slabs=jnp.asarray(slabs),
+                               row_ids=jnp.asarray(row_ids),
+                               set_sizes=jnp.asarray(fill.astype(np.int32)),
+                               set_radius=jnp.asarray(radius))
+
+
+# ---------------------------------------------------------------------------
+# search
+# ---------------------------------------------------------------------------
+
+def _validate(index: IVFIndex, k: int, probes: int) -> None:
+    """Reject unusable (k, probes) combinations with offender-naming errors."""
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    if probes < 1:
+        raise ValueError(f"probes must be >= 1, got {probes}")
+    if probes > index.sets:
+        raise ValueError(
+            f"probes={probes} exceeds the index's set count ({index.sets}); "
+            f"pass probes <= sets (probes == sets is the exact search)")
+
+
+def _coarse(index: IVFIndex, queries: jnp.ndarray, probes: int
+            ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Rank centroids with exact digital distances; derive the triangle bound.
+
+    Always ``"ref"``-scored regardless of the fine backend: the probe
+    ranking must equal the partition's assignment rule, and the bound is
+    only a certificate in exact metric units.
+
+    Returns ``(probed (Q, P) int32 best-first set ids, coarse (Q, P)
+    distances, bound (Q,) float32)`` where ``bound`` lower-bounds the
+    distance of every row in any *unprobed non-empty* set.
+    """
+    cd = am._ref_backend(queries, index.centroids, index.bits,
+                         index.distance).astype(jnp.float32)     # (Q, S)
+    neg, probed = jax.lax.top_k(-cd, probes)
+    s = index.sets
+    probed_mask = jnp.any(
+        jnp.arange(s)[None, None, :] == probed[:, :, None], axis=1)  # (Q, S)
+    skip = probed_mask | (index.set_sizes[None, :] == 0)
+    bound = jnp.min(jnp.where(skip, jnp.inf,
+                              cd - index.set_radius[None, :]), axis=1)
+    return probed.astype(jnp.int32), -neg, bound
+
+
+def _fine_candidates(be, queries: jnp.ndarray, slab_q: jnp.ndarray,
+                     ids_q: jnp.ndarray, sizes_q: jnp.ndarray, bits: int,
+                     distance: str, k: int
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Score gathered probed-set slabs; return sorted (dist, gid) candidates.
+
+    ``slab_q`` (Q, P, C, D) / ``ids_q`` (Q, P, C) / ``sizes_q`` (Q, P) are
+    each query's gathered probe targets.  With a fused-tier backend the
+    streaming top-k kernel runs per (query, probed set) — vmapped over both
+    axes, per-set ``valid_rows`` masked in-kernel, O(k) output per set; the
+    slab-position tie-break equals the global-id tie-break because in-set
+    slabs are ascending-id (the build/append invariant).  Dense-tier
+    backends score the flattened gather and mask dead slots.  Either way the
+    per-query candidates come back two-key sorted by (distance, global row
+    id) with dead entries at (+inf, ``_IDX_SENTINEL``) — ready for a direct
+    cut or a cross-bank merge.
+    """
+    q_n, p_n, c, d = slab_q.shape
+    kc = min(k, c)
+    if be.fused is not None and 1 <= kc <= am.FUSED_K_MAX:
+        def _one(q, slab, size):
+            il, dl = be.fused(q[None], slab, bits, distance, k=kc,
+                              valid_rows=size)
+            return il[0], dl[0]
+        il, dl = jax.vmap(jax.vmap(_one, in_axes=(None, 0, 0)),
+                          in_axes=(0, 0, 0))(queries, slab_q, sizes_q)
+        gid = jnp.take_along_axis(ids_q, il, axis=-1)        # (Q, P, kc)
+        gid = jnp.where(jnp.isinf(dl), am._IDX_SENTINEL, gid)
+        dist = dl.reshape(q_n, p_n * kc)
+        gid = gid.reshape(q_n, p_n * kc)
+    else:
+        flat = slab_q.reshape(q_n, p_n * c, d)
+        dist = jax.vmap(
+            lambda q, s: be.dense(q[None], s, bits, distance)[0]
+        )(queries, flat).astype(jnp.float32)                 # (Q, P*C)
+        live = (jnp.arange(c)[None, None, :]
+                < sizes_q[:, :, None]).reshape(q_n, p_n * c)
+        dist = jnp.where(live, dist, jnp.inf)
+        gid = jnp.where(live, ids_q.reshape(q_n, p_n * c), am._IDX_SENTINEL)
+    return jax.lax.sort((dist, gid), num_keys=2)
+
+
+def _gather(index: IVFIndex, probed: jnp.ndarray
+            ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-query (slab_q, ids_q, sizes_q) for the probed set ids."""
+    return (index.slabs[probed], index.row_ids[probed],
+            index.set_sizes[probed])
+
+
+def _proxy(dist: jnp.ndarray, bound: jnp.ndarray) -> jnp.ndarray:
+    """(Q,) certified fraction of the finite returned candidates."""
+    finite = jnp.isfinite(dist)
+    cert = finite & (dist <= bound[:, None])
+    return (jnp.sum(cert, axis=1)
+            / jnp.maximum(jnp.sum(finite, axis=1), 1)).astype(jnp.float32)
+
+
+def search(index: IVFIndex, queries, *, k: int = 1, probes: int = 1,
+           threshold: float | jnp.ndarray | None = None,
+           backend: str | None = None) -> IVFSearchResult:
+    """Probe the top-``probes`` sets per query; fine-search their slabs.
+
+    Jittable as a whole (the index is a pytree argument); ``k`` and
+    ``probes`` are static like ``am.search``'s ``k``.
+
+    Args:
+      index: the set-associative index.
+      queries: (Q, D) — or a single (D,) — integer symbol words.
+      k: how many nearest rows to return (static; clamped to the index's
+        total slab capacity — entries beyond the gathered live candidates
+        come back with +inf distance and index ``am._IDX_SENTINEL``).
+      probes: how many coarse-ranked sets to fine-search (static;
+        ``probes == index.sets`` reproduces the flat ``am.search`` bitwise).
+      threshold: optional match radius, :func:`am.search` semantics.
+      backend: registered backend name or ``None`` for the ``am`` default;
+        fused-tier backends run their streaming kernel per probed set.
+
+    Returns:
+      :class:`IVFSearchResult` — the :class:`am.AMSearchResult` plus
+      ``recall_proxy`` / ``probed_sets`` / ``candidate_fraction`` metadata.
+    """
+    _validate(index, k, probes)
+    be = am._resolve_backend(backend)
+    ct = index.centroid_table()
+    queries, squeeze = am._prep_queries(ct, queries)
+    k_eff = min(k, index.sets * index.set_capacity)
+    probed, _, bound = _coarse(index, queries, probes)
+    slab_q, ids_q, sizes_q = _gather(index, probed)
+    dist, gid = _fine_candidates(be, queries, slab_q, ids_q, sizes_q,
+                                 index.bits, index.distance, k_eff)
+    dist, gid = am._pad_candidates(dist[:, :k_eff], gid[:, :k_eff], k_eff)
+    res = am._finalize(gid, dist, threshold, squeeze)
+    proxy = _proxy(dist, bound)
+    frac = (jnp.sum(sizes_q, axis=1)
+            / jnp.maximum(jnp.sum(index.set_sizes), 1)).astype(jnp.float32)
+    if squeeze:
+        proxy, probed, frac = proxy[0], probed[0], frac[0]
+    return IVFSearchResult(result=res, recall_proxy=proxy,
+                           probed_sets=probed, candidate_fraction=frac)
+
+
+def search_sharded(index: IVFIndex, queries, *, mesh, rules=None, k: int = 1,
+                   probes: int = 1,
+                   threshold: float | jnp.ndarray | None = None,
+                   backend: str | None = None,
+                   merge: str = "auto") -> IVFSearchResult:
+    """Set-sharded probe search over the ``model`` mesh axis.
+
+    Sets shard across the banks (``Rules.am_index()``: the leading S axis on
+    ``tp``, each bank owning a contiguous run of whole sets), the coarse
+    pass runs replicated (an (S, D) table is ~rows/sets smaller than the
+    data), and each bank fine-scores only the probed sets it owns — dead
+    probes contribute (+inf, sentinel) candidates.  Per-bank candidate lists
+    then reduce through the *same* tree / all-gather merge as the flat
+    ``am.search_sharded`` (:func:`am._merge_bank_candidates`), so the result
+    is bitwise-identical to single-device :func:`search` for every merge
+    strategy and bank count.
+
+    Args:
+      index: the set-associative index.
+      queries: (Q, D) — or a single (D,) — integer symbol words.
+      k: how many nearest rows to return (static, :func:`search` semantics).
+      probes: how many coarse-ranked sets to fine-search (static).
+      threshold: optional match radius, :func:`am.search` semantics.
+      backend: registered backend name or ``None`` for the ``am`` default.
+      mesh: the device mesh; its ``rules.tp`` axis is the set-bank axis.
+      rules: optional :class:`repro.dist.specs.Rules`; defaults to
+        ``make_rules(mesh, "tp")``.
+      merge: cross-bank reduction, ``am.search_sharded`` semantics
+        (``"allgather"`` | ``"tree"`` | ``"auto"``).
+
+    Returns:
+      :class:`IVFSearchResult`, bitwise-identical to :func:`search`.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist import specs as dist_specs
+
+    _validate(index, k, probes)
+    rules = rules or dist_specs.make_rules(mesh, "tp")
+    axis = rules.tp
+    n_banks = mesh.shape[axis]
+    strategy = am.resolve_merge(merge, n_banks)
+    be = am._resolve_backend(backend)
+    ct = index.centroid_table()
+    queries, squeeze = am._prep_queries(ct, queries)
+    bits, distance = index.bits, index.distance
+    s_n, cap = index.sets, index.set_capacity
+    k_eff = min(k, s_n * cap)
+
+    probed, _, bound = _coarse(index, queries, probes)
+
+    pad_s = (-s_n) % n_banks
+    s_local = (s_n + pad_s) // n_banks
+    slabs = jnp.pad(index.slabs, ((0, pad_s), (0, 0), (0, 0)))
+    row_ids = jnp.pad(index.row_ids, ((0, pad_s), (0, 0)),
+                      constant_values=am._IDX_SENTINEL)
+    sizes = jnp.pad(index.set_sizes, (0, pad_s))
+
+    def _bank_body(slabs_l, ids_l, sizes_l, q, probed):
+        """Fine-score this bank's share of the probed sets, then merge."""
+        base = jax.lax.axis_index(axis) * s_local
+        loc = probed - base                                   # (Q, P)
+        mine = (loc >= 0) & (loc < s_local)
+        locc = jnp.clip(loc, 0, s_local - 1)
+        slab_q = slabs_l[locc]
+        ids_q = jnp.where(mine[:, :, None], ids_l[locc], am._IDX_SENTINEL)
+        sizes_q = jnp.where(mine, sizes_l[locc], 0)
+        dist, gid = _fine_candidates(be, q, slab_q, ids_q, sizes_q,
+                                     bits, distance, k_eff)
+        k_local = min(k_eff, dist.shape[1])
+        return am._merge_bank_candidates(
+            dist[:, :k_local], gid[:, :k_local], axis=axis,
+            n_banks=n_banks, k=k_eff, strategy=strategy)
+
+    spec_idx = rules.am_index()
+    gid, dist = jax.shard_map(
+        _bank_body, mesh=mesh,
+        in_specs=(spec_idx, spec_idx, spec_idx, P(None, None), P(None, None)),
+        out_specs=(P(None, None), P(None, None)),
+        check_vma=False)(slabs, row_ids, sizes, queries, probed)
+    res = am._finalize(gid, dist, threshold, squeeze)
+    proxy = _proxy(dist, bound)
+    sizes_q = index.set_sizes[probed]
+    frac = (jnp.sum(sizes_q, axis=1)
+            / jnp.maximum(jnp.sum(index.set_sizes), 1)).astype(jnp.float32)
+    if squeeze:
+        proxy, probed, frac = proxy[0], probed[0], frac[0]
+    return IVFSearchResult(result=res, recall_proxy=proxy,
+                           probed_sets=probed, candidate_fraction=frac)

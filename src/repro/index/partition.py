@@ -1,0 +1,159 @@
+"""Row clustering for the set-associative index tier (centroid training).
+
+Splits an :class:`repro.core.am.AMTable`'s rows into S sets by training S
+centroid *codes* — multi-bit symbol words quantized through the paper's
+CDF-equalized quantizer (:mod:`repro.core.quantize`), so the coarse pass of
+:mod:`repro.index.ivf` searches centroids with exactly the same multi-bit
+machinery (and hardware model) as the data itself.
+
+Two trainers:
+
+* :func:`kmeans_centroids` — Lloyd's iterations in the dequantized
+  (z-score) space, empty clusters re-seeded to the worst-served row, final
+  centroids re-quantized to level codes.
+* :func:`hyperplane_centroids` — random-hyperplane (sign-LSH) bucketing of
+  the dequantized rows; bucket means become the centroids.  Cheaper, no
+  iteration, the classic HDC-friendly baseline.
+
+Either way the *partition itself* is defined by :func:`assign`, NOT by the
+trainer's own bucketing: a row belongs to the set whose **quantized
+centroid code** is nearest under the table's digital distance, ties to the
+lowest set id.  This is the same rule the coarse search applies to queries
+(``lax.top_k`` over exact digital centroid distances), which is what
+guarantees that a query equal to a stored row always probes that row's set
+first — the index can never miss an exact duplicate at any ``probes >= 1``.
+
+Training is a host-side build step (like ``am.delete``): plain numpy, no
+jit, deterministic under ``seed``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import am, quantize
+
+METHODS = ("kmeans", "hyperplane")
+
+
+def _dequantize_rows(codes: np.ndarray, bits: int) -> np.ndarray:
+    """(N, D) level codes -> (N, D) float32 bin-representative z-values."""
+    reps = np.asarray(quantize.level_representatives(bits))
+    return reps[codes].astype(np.float32)
+
+
+def _quantize_centroids(cent: np.ndarray, bits: int) -> np.ndarray:
+    """Float centroids (already in z-space) -> (S, D) int32 level codes.
+
+    ``mu=0, sigma=1`` because the centroids are means of level
+    representatives of a standard normal — re-standardising over the S
+    centroid values would warp them off the data's quantization grid.
+    """
+    return np.asarray(quantize.quantize(cent, bits, mu=np.float32(0.0),
+                                        sigma=np.float32(1.0)))
+
+
+def kmeans_centroids(codes, sets: int, *, bits: int, iters: int = 10,
+                     seed: int = 0) -> np.ndarray:
+    """Train S centroid codes by k-means over the dequantized rows.
+
+    Args:
+      codes: (N, D) integer level codes (the table's rows).
+      sets: number of centroids S (1 <= S <= N).
+      bits: bits per symbol of ``codes``.
+      iters: Lloyd's iterations (assignment in float L2, empty clusters
+        re-seeded to the row farthest from its current centroid).
+      seed: deterministic init (distinct random rows as initial centroids).
+
+    Returns:
+      (S, D) int32 quantized centroid codes.
+    """
+    codes = np.asarray(codes, np.int32)
+    n = codes.shape[0]
+    if not 1 <= sets <= n:
+        raise ValueError(f"sets must be in [1, rows={n}], got {sets}")
+    x = _dequantize_rows(codes, bits)
+    rng = np.random.default_rng(seed)
+    cent = x[rng.choice(n, size=sets, replace=False)].copy()
+    for _ in range(iters):
+        # (N, S) squared distances without the (N, S, D) broadcast
+        d2 = ((x ** 2).sum(1)[:, None] - 2.0 * x @ cent.T
+              + (cent ** 2).sum(1)[None, :])
+        owner = d2.argmin(axis=1)
+        for s in range(sets):
+            mine = owner == s
+            if mine.any():
+                cent[s] = x[mine].mean(axis=0)
+            else:
+                cent[s] = x[d2[np.arange(n), owner].argmax()]
+    return _quantize_centroids(cent, bits)
+
+
+def hyperplane_centroids(codes, sets: int, *, bits: int,
+                         seed: int = 0) -> np.ndarray:
+    """Train S centroid codes by random-hyperplane (sign-LSH) bucketing.
+
+    ``ceil(log2(S))`` random gaussian hyperplanes hash each dequantized row
+    to a bucket; bucket means (mod S, so every row lands in a valid set even
+    when S is not a power of two) become the centroids.  Buckets that caught
+    no rows fall back to random rows, so all S centroids are always
+    populated.
+
+    Args:
+      codes: (N, D) integer level codes.
+      sets: number of centroids S (1 <= S <= N).
+      bits: bits per symbol of ``codes``.
+      seed: seeds both the hyperplanes and the empty-bucket fallback.
+
+    Returns:
+      (S, D) int32 quantized centroid codes.
+    """
+    codes = np.asarray(codes, np.int32)
+    n, d = codes.shape
+    if not 1 <= sets <= n:
+        raise ValueError(f"sets must be in [1, rows={n}], got {sets}")
+    x = _dequantize_rows(codes, bits)
+    rng = np.random.default_rng(seed)
+    n_planes = max(1, int(np.ceil(np.log2(sets))))
+    planes = rng.standard_normal((n_planes, d)).astype(np.float32)
+    bucket = ((x @ planes.T > 0.0)
+              @ (1 << np.arange(n_planes))).astype(np.int64) % sets
+    cent = np.empty((sets, d), np.float32)
+    for s in range(sets):
+        mine = bucket == s
+        cent[s] = x[mine].mean(axis=0) if mine.any() else x[rng.integers(n)]
+    return _quantize_centroids(cent, bits)
+
+
+def train_centroids(codes, sets: int, *, bits: int, method: str = "kmeans",
+                    seed: int = 0, iters: int = 10) -> np.ndarray:
+    """Dispatch to a centroid trainer by name (one of :data:`METHODS`)."""
+    if method == "kmeans":
+        return kmeans_centroids(codes, sets, bits=bits, iters=iters,
+                                seed=seed)
+    if method == "hyperplane":
+        return hyperplane_centroids(codes, sets, bits=bits, seed=seed)
+    raise ValueError(f"unknown partition method {method!r}; "
+                     f"expected one of {METHODS}")
+
+
+def assign(centroids, codes, *, bits: int, distance: str) -> np.ndarray:
+    """Set id of each row: nearest quantized centroid, lowest-id tie-break.
+
+    THE partition rule — identical to the coarse search's probe ranking
+    (exact digital distances + ``lax.top_k`` index tie-break), so a stored
+    row and a duplicate query always agree on the top-1 set.
+
+    Args:
+      centroids: (S, D) int32 quantized centroid codes.
+      codes: (M, D) integer level codes to place.
+      bits: bits per symbol.
+      distance: ``"hamming"`` or ``"l1"`` — the owning table's metric.
+
+    Returns:
+      (M,) int64 set ids in [0, S).
+    """
+    ct = am.make_table(np.asarray(centroids, np.int32), bits=bits,
+                       distance=distance)
+    res = am.search(ct, np.asarray(codes, np.int32), k=1, backend="ref")
+    return np.asarray(res.indices)[:, 0].astype(np.int64)

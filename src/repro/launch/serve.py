@@ -31,7 +31,7 @@ from repro.configs.registry import ALIASES, get_config
 from repro.core import hdc
 from repro.launch.mesh import make_test_mesh
 from repro.models import transformer
-from repro.serve import AMService
+from repro.serve import AMService, IndexSpec
 from repro.serve.engine import Engine
 from repro.serve.scheduler import ContinuousBatcher, Request
 
@@ -57,6 +57,14 @@ def main():
                     default="auto",
                     help="cross-bank candidate merge topology for the "
                          "sharded AM cache (see docs/ARCHITECTURE.md)")
+    ap.add_argument("--am-index", type=int, default=0, metavar="SETS",
+                    help="route cache lookups through the set-associative "
+                         "IVF tier with this many sets once the table grows "
+                         "past its build threshold (0 = flat scan; see "
+                         "docs/ARCHITECTURE.md layer 2.5)")
+    ap.add_argument("--am-probes", type=int, default=1, metavar="P",
+                    help="sets probed per indexed lookup (only with "
+                         "--am-index)")
     args = ap.parse_args()
 
     cfg = get_config(ALIASES.get(args.arch, args.arch), smoke=args.smoke)
@@ -81,9 +89,11 @@ def main():
                         merge=args.am_merge,
                         max_batch=max(64, args.requests),
                         flush_after=0.005, time_fn=time.monotonic)
+        spec = (IndexSpec(sets=args.am_index, probes=args.am_probes)
+                if args.am_index else None)
         svc.create_table("responses", width=CACHE_DIM, bits=CACHE_BITS,
                          capacity=args.am_cache, policy="lru",
-                         backend="pallas")
+                         backend="pallas", index=spec)
         svc.start_driver()
         proj = hdc.token_key_projection(cfg.vocab_size, CACHE_DIM)
         keys = [np.asarray(hdc.prompt_key(proj, p, CACHE_BITS))

@@ -5,13 +5,17 @@
 * :mod:`repro.serve.am_service` — :class:`AMService`, the sanctioned way to
   run ``repro.core.am`` searches under traffic: named capacity-bounded
   tables, LRU/TTL eviction, a micro-batching lookup scheduler, per-table
-  admission control, and :class:`AMDriver` — the pipelined dispatch driver
-  that overlaps host batching, device compute and readback.
+  admission control, an optional set-associative index tier per table
+  (``create_table(..., index=IndexSpec(...))``), and :class:`AMDriver` —
+  the pipelined dispatch driver that overlaps host batching, device
+  compute and readback.
 """
 
+from repro.index.ivf import IndexSpec
 from repro.serve.am_service import (AdmissionError, AMDriver, AMService,
                                     PendingSearch, SearchRequest,
                                     SearchResponse, TableFullError)
 
-__all__ = ["AdmissionError", "AMDriver", "AMService", "PendingSearch",
-           "SearchRequest", "SearchResponse", "TableFullError"]
+__all__ = ["AdmissionError", "AMDriver", "AMService", "IndexSpec",
+           "PendingSearch", "SearchRequest", "SearchResponse",
+           "TableFullError"]

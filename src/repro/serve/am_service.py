@@ -69,6 +69,17 @@ Design — why this never compiles or syncs per request:
   when it has one (``"pallas"`` does): the (Q, N) distance matrix is never
   materialised and the slab's live-row mask is applied in-kernel.  Same
   signature, same compile accounting — the tiering is invisible here.
+* **Sub-linear tables via the index tier.**  ``create_table(...,
+  index=IndexSpec(sets=32, probes=4))`` gives a table a set-associative
+  :class:`repro.index.ivf.IVFIndex`: built lazily once the table holds
+  ``index.build_threshold`` live rows, extended incrementally on appends,
+  rebuilt after compaction (eviction renumbers rows).  Dispatches route
+  through ``repro.index.ivf.search`` transparently — same micro-batching,
+  same padding buckets, same compile accounting (the index is a traced
+  pytree argument; only slab-capacity growth recompiles) — and
+  ``stats()["index"]`` reports probe counts and candidate fractions.
+  ``probes == sets`` is bitwise the flat search; fewer probes trade
+  certified recall for O(S + probes * N/S) work per lookup.
 * **Eviction is part of the API.**  ``AMTable.meta`` carries (insert,
   last-hit) timestamps (:data:`am.META_INSERT` / :data:`am.META_LAST_HIT`).
   Exact hits update last-hit *inside* the compiled dispatch via
@@ -142,6 +153,8 @@ import numpy as np
 
 from repro.core import am
 from repro.dist import specs as dist_specs
+from repro.index import ivf
+from repro.index.ivf import IndexSpec
 
 #: Eviction policies a table may be created with.
 POLICIES = ("lru", "ttl", "reject")
@@ -316,6 +329,13 @@ class _TableState:
     rejected: int = 0
     shed: int = 0
     blocked: int = 0                   # submits that had to wait
+    # -- set-associative index tier (repro.index) ----------------------------
+    index_spec: IndexSpec | None = None
+    index: "ivf.IVFIndex | None" = None   # built lazily per index_spec
+    index_builds: int = 0              # full (re)builds (lazy + compaction)
+    index_lookups: int = 0             # lookups served through the index
+    index_groups: int = 0              # dispatched groups served through it
+    index_frac_sum: float = 0.0        # sum of per-group candidate fractions
 
 
 @dataclasses.dataclass
@@ -337,6 +357,8 @@ class _InFlightGroup:
     version: int                   # table.version at launch
     values: list                   # payload list as of launch
     now: float                     # dispatch-time clock reading
+    index_frac: Any = None         # device scalar: mean candidate fraction
+    #                                (None when the dispatch was unindexed)
 
     def ready(self) -> bool:
         """True when every result array has landed (non-blocking probe)."""
@@ -468,7 +490,8 @@ class AMService:
                      qps_budget: float | None = None,
                      burst: float | None = None,
                      max_queue: int | None = None,
-                     admission: str = "reject") -> None:
+                     admission: str = "reject",
+                     index: IndexSpec | None = None) -> None:
         """Allocate an empty capacity-bounded table under ``name``.
 
         Admission control (all optional): ``qps_budget`` is a sustained
@@ -476,6 +499,16 @@ class AMService:
         default ``max(1, qps_budget)``), ``max_queue`` caps this table's
         queued lookups, and ``admission`` picks the over-budget behaviour
         (one of :data:`ADMISSION_MODES`).
+
+        ``index`` (an :class:`repro.index.IndexSpec`) turns on the
+        set-associative index tier for this table: once the table holds
+        ``index.build_threshold`` live rows, dispatches route through
+        :func:`repro.index.ivf.search` (or its sharded variant on a mesh)
+        with the spec's ``probes`` — transparently, same signatures, same
+        compile accounting; results follow the search contract exactly,
+        with sub-linear work at ``probes < sets``.  Appends extend the
+        index incrementally; evictions/deletes rebuild it (compaction
+        renumbers rows).  ``stats()`` grows an ``"index"`` block.
         """
         if name in self._tables:
             raise ValueError(f"table {name!r} already exists")
@@ -492,6 +525,12 @@ class AMService:
             raise ValueError(f"qps_budget must be > 0, got {qps_budget}")
         if max_queue is not None and max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if index is not None:
+            index.validate()
+            if index.sets > capacity:
+                raise ValueError(
+                    f"index sets ({index.sets}) exceeds table capacity "
+                    f"({capacity}); every set needs at least one row slot")
         am.get_backend(backend)          # fail fast on unknown backends
         table = am.make_table(jnp.zeros((capacity, width), jnp.int32),
                               bits=bits, distance=distance,
@@ -505,7 +544,8 @@ class AMService:
                 name=name, table=table, n=0, capacity=capacity, policy=policy,
                 ttl=ttl, backend=backend, values=[],
                 qps_budget=qps_budget, burst=burst, max_queue=max_queue,
-                admission=admission, tokens=burst, tokens_at=self._now())
+                admission=admission, tokens=burst, tokens_at=self._now(),
+                index_spec=index)
 
     def drop_table(self, name: str) -> None:
         """Remove a table; queued and in-flight lookups resolve first.
@@ -568,6 +608,7 @@ class AMService:
                 raise ValueError(f"{len(values)} values for {m} rows")
             now = self._tick() if now is None else float(now)
             self._make_room(t, m, now)
+            start = t.n
             t.table = dataclasses.replace(
                 t.table,
                 codes=jax.lax.dynamic_update_slice(
@@ -578,6 +619,12 @@ class AMService:
             t.n += m
             t.appends += m
             t.version += 1
+            if t.index is not None:
+                # incremental: new rows land at their sets' slab ends with
+                # the global ids the slab write just gave them
+                t.index = ivf.append(t.index, codes, start_row=start)
+            elif t.index_spec is not None:
+                self._rebuild_index(t)       # lazy build once big enough
 
     def delete(self, name: str, rows) -> int:
         """Drop live rows by index array or boolean mask; returns the count.
@@ -659,6 +706,29 @@ class AMService:
         t.values = [t.values[i] for i in keep]
         t.n = live.n_rows
         t.version += 1
+        if t.index_spec is not None:
+            # compaction renumbered the surviving rows: the index's global
+            # ids are stale, so rebuild (or drop below the build threshold)
+            self._rebuild_index(t)
+
+    def _rebuild_index(self, t: _TableState) -> None:
+        """Lock held: (re)build the table's IVF index per its spec.
+
+        Below the spec's ``build_threshold`` the index is dropped instead —
+        dispatches fall back to the exact flat search until the table grows
+        back (training centroids on a handful of rows is pure noise).
+        """
+        spec = t.index_spec
+        if spec is None:
+            return
+        if t.n < spec.build_threshold:
+            t.index = None
+            return
+        live = am.AMTable(codes=t.table.codes[:t.n], bits=t.table.bits,
+                          distance=t.table.distance)
+        t.index = ivf.build(live, sets=spec.sets, method=spec.method,
+                            seed=spec.seed, iters=spec.iters)
+        t.index_builds += 1
 
     # -- admission -----------------------------------------------------------
 
@@ -955,15 +1025,18 @@ class AMService:
             tv = np.zeros((qb,), np.float32)
             tv[:q] = [fut.request.threshold for fut in uniq]
             thr = jnp.asarray(tv)
-        idx, dist, exact, matched, new_meta = self._dispatch(
-            t.table, jnp.asarray(queries),
+        indexed = t.index is not None
+        idx, dist, exact, matched, new_meta, frac = self._dispatch(
+            t.table, t.index, jnp.asarray(queries),
             jnp.asarray(t.n, jnp.int32), jnp.asarray(q, jnp.int32), thr,
             jnp.asarray(now, jnp.float32),
-            k=k, backend=backend, sharded=self._mesh is not None)
+            k=k, backend=backend, sharded=self._mesh is not None,
+            indexed=indexed,
+            probes=t.index_spec.probes if indexed else 0)
         g = _InFlightGroup(table=t, futs=futs, slot_of=slot_of,
                            arrays=(idx, dist, exact, matched),
                            new_meta=new_meta, version=t.version,
-                           values=t.values, now=now)
+                           values=t.values, now=now, index_frac=frac)
         self._in_flight.append(g)
         return g
 
@@ -1000,11 +1073,16 @@ class AMService:
         the table version is unchanged since launch — a racing append or
         eviction wins and the stale touch is dropped.
         """
-        idx, dist, exact, matched = jax.device_get(g.arrays)
+        (idx, dist, exact, matched), frac = jax.device_get(
+            (g.arrays, g.index_frac))
         with self._cv:
             t = g.table
             if self._tables.get(t.name) is t and t.version == g.version:
                 t.table = dataclasses.replace(t.table, meta=g.new_meta)
+            if frac is not None:
+                t.index_lookups += len(g.futs)
+                t.index_groups += 1
+                t.index_frac_sum += float(frac)
             self.readbacks += 1
             done_at = self._now()
             for fut, slot in zip(g.futs, g.slot_of):
@@ -1061,11 +1139,30 @@ class AMService:
         """One jitted search dispatch per service (its own compile cache)."""
         mesh, rules, merge = self._mesh, self._rules, self._merge
 
-        @partial(jax.jit, static_argnames=("k", "backend", "sharded"))
-        def dispatch(table, queries, n_valid, q_valid, thresholds, now, *,
-                     k, backend, sharded):
+        @partial(jax.jit,
+                 static_argnames=("k", "backend", "sharded", "indexed",
+                                  "probes"))
+        def dispatch(table, index, queries, n_valid, q_valid, thresholds,
+                     now, *, k, backend, sharded, indexed, probes):
             thr = None if thresholds is None else thresholds[:, None]
-            if sharded:
+            frac = None
+            if indexed:
+                # the set-associative tier: coarse-rank centroids, fine
+                # search only the probed sets' slabs.  The index holds
+                # exactly the live rows, so no valid_rows is needed.
+                if sharded:
+                    r = ivf.search_sharded(
+                        index, queries, mesh=mesh, rules=rules, k=k,
+                        probes=probes, threshold=thr, backend=backend,
+                        merge=merge)
+                else:
+                    r = ivf.search(index, queries, k=k, probes=probes,
+                                   threshold=thr, backend=backend)
+                res = r.result
+                live_q = jnp.arange(queries.shape[0]) < q_valid
+                frac = (jnp.sum(jnp.where(live_q, r.candidate_fraction, 0.0))
+                        / jnp.maximum(q_valid, 1)).astype(jnp.float32)
+            elif sharded:
                 res = am.search_sharded(
                     table, queries, mesh=mesh, rules=rules, k=k,
                     threshold=thr, backend=backend, valid_rows=n_valid,
@@ -1073,7 +1170,6 @@ class AMService:
             else:
                 res = am.search(table, queries, k=k, threshold=thr,
                                 backend=backend, valid_rows=n_valid)
-            idx = jnp.where(jnp.isfinite(res.distances), res.indices, -1)
             # LRU maintenance inside the compiled step: exact best-row hits
             # of real (non-padding) queries get their last-hit stamped
             q_live = jnp.arange(queries.shape[0]) < q_valid
@@ -1082,7 +1178,19 @@ class AMService:
             meta = am.touch(table, hit_rows, now).meta
             if rules is not None:
                 meta = dist_specs.constrain(meta, rules.am_meta())
-            return idx, res.distances, res.exact, res.matched, meta
+            idx = jnp.where(jnp.isfinite(res.distances), res.indices, -1)
+            dist, exact, matched = res.distances, res.exact, res.matched
+            kw = idx.shape[1]
+            if kw < k:
+                # an indexed search clamps k to its total slab capacity,
+                # which can sit below a partially filled table's capacity;
+                # pad back out so the response contract width holds
+                pad = ((0, 0), (0, k - kw))
+                idx = jnp.pad(idx, pad, constant_values=-1)
+                dist = jnp.pad(dist, pad, constant_values=jnp.inf)
+                exact = jnp.pad(exact, pad)
+                matched = jnp.pad(matched, pad)
+            return idx, dist, exact, matched, meta, frac
 
         return dispatch
 
@@ -1109,6 +1217,15 @@ class AMService:
                     "qps_budget": t.qps_budget, "max_queue": t.max_queue,
                     "rejected": t.rejected, "shed": t.shed,
                     "blocked": t.blocked,
+                    "index": None if t.index_spec is None else {
+                        "sets": t.index_spec.sets,
+                        "probes": t.index_spec.probes,
+                        "built": t.index is not None,
+                        "builds": t.index_builds,
+                        "lookups": t.index_lookups,
+                        "candidate_fraction":
+                            t.index_frac_sum / max(1, t.index_groups),
+                    },
                 }
             cache_size = getattr(self._dispatch, "_cache_size", None)
             waits = np.asarray(self._wait_samples, np.float64)
@@ -1134,6 +1251,20 @@ class AMService:
                     "shed": sum(t.shed for t in self._tables.values()),
                     "blocked": sum(t.blocked for t in
                                    self._tables.values()),
+                },
+                "index": {
+                    "tables": sum(1 for t in self._tables.values()
+                                  if t.index_spec is not None),
+                    "built": sum(1 for t in self._tables.values()
+                                 if t.index is not None),
+                    "builds": sum(t.index_builds
+                                  for t in self._tables.values()),
+                    "lookups": sum(t.index_lookups
+                                   for t in self._tables.values()),
+                    "candidate_fraction":
+                        sum(t.index_frac_sum for t in self._tables.values())
+                        / max(1, sum(t.index_groups
+                                     for t in self._tables.values())),
                 },
                 "queue_wait_p50": float(p50),
                 "queue_wait_p99": float(p99),

@@ -44,6 +44,25 @@ except ImportError:
     import _hypothesis_stub
     _hypothesis_stub.install()
 
+# -- compiled-executable cache bounding -------------------------------------
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_jit_cache():
+    """Drop jax's compiled-executable caches between test modules.
+
+    A full-suite run compiles thousands of XLA executables in one process;
+    every live executable pins JIT code mappings, and once the process
+    crosses the kernel's ``vm.max_map_count`` ceiling (65530 here) the next
+    compilation segfaults inside ``backend_compile`` — deterministically at
+    whatever test happens to sit past the cliff.  Clearing per module keeps
+    the map count bounded while leaving in-module caching behaviour (e.g.
+    the serving compile-accounting tests) untouched.
+    """
+    yield
+    import jax
+    jax.clear_caches()
+
+
 # -- per-test hang guard ----------------------------------------------------
 
 _TEST_TIMEOUT = float(os.environ.get("REPRO_TEST_TIMEOUT", "600"))

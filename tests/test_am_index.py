@@ -1,0 +1,379 @@
+"""repro.index — the set-associative IVF tier.
+
+The load-bearing claim is *bitwise exactness at probes == sets*: the indexed
+search must reproduce the flat ``am.search`` — indices AND distances,
+including the ascending (distance, row) tie-break — for every backend tier,
+because the per-set slabs store rows in ascending global-id order and the
+cross-set merge is the same two-key lex sort as the sharded bank merge.
+Everything else (recall monotonicity, the triangle-bound recall proxy, the
+duplicate-query guarantee, serving integration) rides on top of that.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+
+from repro import index as rindex
+from repro.core import am
+from repro.index import partition
+from repro.serve import AMService, IndexSpec
+
+
+def _table(rng, n, d, bits, distance="hamming"):
+    codes = rng.integers(0, 1 << bits, size=(n, d))
+    return am.make_table(codes, bits=bits, distance=distance), codes
+
+
+# ---------------------------------------------------------------------------
+# probes == sets: bitwise the flat search
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(backend=st.sampled_from(["ref", "pallas"]),
+       distance=st.sampled_from(["hamming", "l1"]),
+       bits=st.integers(1, 3), n=st.integers(2, 60), d=st.integers(1, 12),
+       k=st.integers(1, 8), sets=st.integers(1, 6),
+       seed=st.integers(0, 2**31 - 1))
+def test_probes_all_bitwise_exact(backend, distance, bits, n, d, k, sets,
+                                  seed):
+    rng = np.random.default_rng(seed)
+    sets = min(sets, n)
+    k = min(k, n)           # beyond live rows the index pads with sentinels
+    t, codes = _table(rng, n, d, bits, distance)
+    idx = rindex.build(t, sets=sets, seed=seed % 97)
+    q = rng.integers(0, 1 << bits, size=(5, d))
+    r = rindex.search(idx, q, k=k, probes=sets, backend=backend)
+    ex = am.search(t, q, k=k, backend=backend)
+    np.testing.assert_array_equal(np.asarray(r.indices),
+                                  np.asarray(ex.indices))
+    np.testing.assert_array_equal(np.asarray(r.distances),
+                                  np.asarray(ex.distances))
+    assert np.all(np.asarray(r.recall_proxy) == 1.0)
+    assert np.allclose(np.asarray(r.candidate_fraction), 1.0)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_probes_all_bitwise_on_tie_heavy_table(backend):
+    # single-level codes make almost every distance collide: the ascending
+    # (distance, row) tie-break carries the whole ordering
+    rng = np.random.default_rng(0)
+    codes = rng.integers(0, 2, size=(40, 6))
+    t = am.make_table(codes, bits=3, distance="l1")
+    idx = rindex.build(t, sets=5, seed=1)
+    q = rng.integers(0, 2, size=(7, 6))
+    r = rindex.search(idx, q, k=12, probes=5, backend=backend)
+    ex = am.search(t, q, k=12, backend=backend)
+    np.testing.assert_array_equal(np.asarray(r.indices),
+                                  np.asarray(ex.indices))
+    np.testing.assert_array_equal(np.asarray(r.distances),
+                                  np.asarray(ex.distances))
+
+
+def test_threshold_and_squeeze_follow_am_contract():
+    rng = np.random.default_rng(3)
+    t, codes = _table(rng, 30, 8, 3)
+    idx = rindex.build(t, sets=4)
+    r = rindex.search(idx, codes[7], k=3, probes=4, threshold=0.5)
+    assert r.indices.shape == (3,)                   # single word squeezed
+    assert int(r.indices[0]) == 7 and bool(r.exact[0]) and bool(r.matched[0])
+    assert r.probed_sets.shape == (4,)
+    assert float(r.candidate_fraction) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# approximate regime
+# ---------------------------------------------------------------------------
+
+def _recall(r, ex):
+    """Fraction of returned distances matching the exact top-k, per query."""
+    return (np.asarray(r.distances) == np.asarray(ex.distances)).mean(axis=1)
+
+
+def test_recall_monotonic_in_probes():
+    rng = np.random.default_rng(5)
+    t, _ = _table(rng, 200, 16, 3)
+    idx = rindex.build(t, sets=8, seed=2)
+    q = rng.integers(0, 8, size=(12, 16))
+    ex = am.search(t, q, k=10)
+    last = -1.0
+    for probes in (1, 2, 4, 8):
+        r = rindex.search(idx, q, k=10, probes=probes)
+        rec = _recall(r, ex).mean()
+        assert rec >= last - 1e-9
+        last = rec
+    assert last == 1.0                               # probes == sets: exact
+
+
+def test_recall_proxy_is_a_sound_certificate():
+    # every candidate the triangle bound certifies must actually be correct:
+    # proxy <= measured recall, per query
+    rng = np.random.default_rng(6)
+    t, _ = _table(rng, 150, 12, 3, "l1")
+    idx = rindex.build(t, sets=6, seed=3)
+    q = rng.integers(0, 8, size=(20, 12))
+    ex = am.search(t, q, k=5)
+    for probes in (1, 2, 3):
+        r = rindex.search(idx, q, k=5, probes=probes)
+        proxy = np.asarray(r.recall_proxy)
+        assert np.all((proxy >= 0.0) & (proxy <= 1.0))
+        assert np.all(proxy <= _recall(r, ex) + 1e-6)
+
+
+@pytest.mark.parametrize("method", partition.METHODS)
+def test_duplicate_query_always_hits_at_one_probe(method):
+    # partition rule == coarse ranking rule, so a stored row's duplicate
+    # probes that row's set first at any probes >= 1
+    rng = np.random.default_rng(7)
+    t, codes = _table(rng, 80, 10, 2)
+    idx = rindex.build(t, sets=6, method=method, seed=4)
+    r = rindex.search(idx, codes[::7], k=1, probes=1)
+    assert np.asarray(r.exact)[:, 0].all()
+    assert np.all(np.asarray(r.distances)[:, 0] == 0.0)
+
+
+def test_candidate_fraction_counts_probed_sets():
+    rng = np.random.default_rng(8)
+    t, _ = _table(rng, 120, 8, 3)
+    idx = rindex.build(t, sets=6, seed=5)
+    q = rng.integers(0, 8, size=(9, 8))
+    r = rindex.search(idx, q, k=3, probes=2)
+    sizes = np.asarray(idx.set_sizes)
+    expect = sizes[np.asarray(r.probed_sets)].sum(axis=1) / sizes.sum()
+    np.testing.assert_allclose(np.asarray(r.candidate_fraction),
+                               expect.astype(np.float32))
+
+
+def test_append_extends_index_exactly():
+    rng = np.random.default_rng(9)
+    codes = rng.integers(0, 8, size=(90, 10))
+    t_half = am.make_table(codes[:50], bits=3)
+    idx = rindex.build(t_half, sets=5, seed=6)
+    idx = rindex.append(idx, codes[50:])
+    assert idx.n_rows == 90
+    t_full = am.make_table(codes, bits=3)
+    q = rng.integers(0, 8, size=(6, 10))
+    r = rindex.search(idx, q, k=7, probes=5)
+    ex = am.search(t_full, q, k=7)
+    np.testing.assert_array_equal(np.asarray(r.indices),
+                                  np.asarray(ex.indices))
+    np.testing.assert_array_equal(np.asarray(r.distances),
+                                  np.asarray(ex.distances))
+
+
+def test_search_is_jittable_with_index_as_pytree():
+    rng = np.random.default_rng(10)
+    t, _ = _table(rng, 60, 8, 3)
+    idx = rindex.build(t, sets=4)
+    q = rng.integers(0, 8, size=(5, 8))
+    f = jax.jit(lambda ix, qq: rindex.search(ix, qq, k=4, probes=2))
+    rj = f(idx, q)
+    re = rindex.search(idx, q, k=4, probes=2)
+    np.testing.assert_array_equal(np.asarray(rj.indices),
+                                  np.asarray(re.indices))
+    np.testing.assert_array_equal(np.asarray(rj.recall_proxy),
+                                  np.asarray(re.recall_proxy))
+
+
+# ---------------------------------------------------------------------------
+# sharded
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("merge", ["allgather", "tree"])
+def test_sharded_bitwise_matches_unsharded(merge):
+    mesh = jax.make_mesh((8,), ("model",))
+    rng = np.random.default_rng(11)
+    t, _ = _table(rng, 300, 12, 3)
+    idx = rindex.build(t, sets=11, seed=7)        # not a multiple of 8 banks
+    q = rng.integers(0, 8, size=(6, 12))
+    for probes in (1, 4, 11):
+        rs = rindex.search_sharded(idx, q, mesh=mesh, k=9, probes=probes,
+                                   merge=merge)
+        ru = rindex.search(idx, q, k=9, probes=probes)
+        np.testing.assert_array_equal(np.asarray(rs.indices),
+                                      np.asarray(ru.indices))
+        np.testing.assert_array_equal(np.asarray(rs.distances),
+                                      np.asarray(ru.distances))
+        np.testing.assert_array_equal(np.asarray(rs.recall_proxy),
+                                      np.asarray(ru.recall_proxy))
+
+
+def test_sharded_probes_all_matches_flat_search():
+    mesh = jax.make_mesh((8,), ("model",))
+    rng = np.random.default_rng(12)
+    t, _ = _table(rng, 200, 10, 2, "l1")
+    idx = rindex.build(t, sets=8, seed=8)
+    q = rng.integers(0, 4, size=(5, 10))
+    rs = rindex.search_sharded(idx, q, mesh=mesh, k=6, probes=8)
+    ex = am.search(t, q, k=6)
+    np.testing.assert_array_equal(np.asarray(rs.indices),
+                                  np.asarray(ex.indices))
+    np.testing.assert_array_equal(np.asarray(rs.distances),
+                                  np.asarray(ex.distances))
+
+
+# ---------------------------------------------------------------------------
+# partition trainers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", partition.METHODS)
+@pytest.mark.parametrize("bits", [1, 2, 3])
+def test_trainers_emit_valid_codes_and_assignments(method, bits):
+    rng = np.random.default_rng(13)
+    codes = rng.integers(0, 1 << bits, size=(50, 7))
+    cent = partition.train_centroids(codes, 6, bits=bits, method=method,
+                                     seed=9)
+    assert cent.shape == (6, 7) and cent.dtype == np.int32
+    assert cent.min() >= 0 and cent.max() < (1 << bits)
+    owner = partition.assign(cent, codes, bits=bits, distance="hamming")
+    assert owner.shape == (50,)
+    assert owner.min() >= 0 and owner.max() < 6
+
+
+def test_trainers_are_deterministic():
+    rng = np.random.default_rng(14)
+    codes = rng.integers(0, 8, size=(40, 6))
+    for method in partition.METHODS:
+        a = partition.train_centroids(codes, 4, bits=3, method=method, seed=5)
+        b = partition.train_centroids(codes, 4, bits=3, method=method, seed=5)
+        np.testing.assert_array_equal(a, b)
+
+
+def test_unknown_partition_method_raises():
+    with pytest.raises(ValueError, match="unknown partition method"):
+        partition.train_centroids(np.zeros((4, 2), np.int32), 2, bits=1,
+                                  method="voronoi")
+
+
+# ---------------------------------------------------------------------------
+# input validation (satellite: offender-listing errors)
+# ---------------------------------------------------------------------------
+
+def test_search_rejects_bad_probes_and_k():
+    rng = np.random.default_rng(15)
+    t, _ = _table(rng, 20, 6, 2)
+    idx = rindex.build(t, sets=4)
+    q = rng.integers(0, 4, size=(3, 6))
+    with pytest.raises(ValueError, match="probes must be >= 1, got 0"):
+        rindex.search(idx, q, probes=0)
+    with pytest.raises(ValueError, match="probes=9 exceeds"):
+        rindex.search(idx, q, probes=9)
+    with pytest.raises(ValueError, match="k must be >= 1, got -2"):
+        rindex.search(idx, q, k=-2, probes=1)
+    mesh = jax.make_mesh((8,), ("model",))
+    with pytest.raises(ValueError, match="probes=5 exceeds"):
+        rindex.search_sharded(idx, q, mesh=mesh, probes=5)
+
+
+def test_non_2d_queries_rejected_everywhere():
+    rng = np.random.default_rng(16)
+    t, _ = _table(rng, 20, 6, 2)
+    idx = rindex.build(t, sets=4)
+    bad = rng.integers(0, 4, size=(2, 3, 6))
+    with pytest.raises(ValueError, match="3-D array"):
+        rindex.search(idx, bad, probes=1)
+    with pytest.raises(ValueError, match="3-D array"):
+        am.search(t, bad)
+    mesh = jax.make_mesh((8,), ("model",))
+    with pytest.raises(ValueError, match="4-D array"):
+        am.search_sharded(t, bad[None], mesh=mesh)
+
+
+def test_build_rejects_bad_shapes():
+    rng = np.random.default_rng(17)
+    t, _ = _table(rng, 10, 4, 2)
+    with pytest.raises(ValueError, match="sets must be in"):
+        rindex.build(t, sets=11)
+    idx = rindex.build(t, sets=3)
+    with pytest.raises(ValueError, match="append codes shape"):
+        rindex.append(idx, np.zeros((2, 5), np.int32))
+    with pytest.raises(ValueError, match="set_capacity"):
+        rindex.build(t, sets=1, set_capacity=2)
+
+
+# ---------------------------------------------------------------------------
+# serving integration
+# ---------------------------------------------------------------------------
+
+def test_service_builds_lazily_and_routes_through_index():
+    rng = np.random.default_rng(18)
+    svc = AMService()
+    svc.create_table("t", width=10, bits=3, capacity=256, backend="pallas",
+                     index=IndexSpec(sets=6, probes=2))
+    codes = rng.integers(0, 8, size=(100, 10))
+    svc.append("t", codes[:10], values=list(range(10)))
+    st_ = svc.stats("t")["index"]
+    assert st_ is not None and not st_["built"]      # below build threshold
+    r = svc.lookup("t", codes[4], k=2)               # flat fallback works
+    assert r.hit and r.best_row == 4
+    svc.append("t", codes[10:], values=list(range(10, 100)))
+    st_ = svc.stats("t")["index"]
+    assert st_["built"] and st_["builds"] == 1
+    for i in (0, 41, 99):                            # indexed exact hits
+        r = svc.lookup("t", codes[i], k=3)
+        assert r.hit and r.best_row == i and r.value == i
+    st_ = svc.stats("t")["index"]
+    assert st_["lookups"] == 3
+    assert 0.0 < st_["candidate_fraction"] < 1.0
+    top = svc.stats()["index"]
+    assert top["tables"] == 1 and top["built"] == 1 and top["lookups"] == 3
+
+
+def test_service_indexed_probes_all_matches_unindexed():
+    rng = np.random.default_rng(19)
+    codes = rng.integers(0, 8, size=(120, 8))
+    svc = AMService()
+    svc.create_table("a", width=8, capacity=256,
+                     index=IndexSpec(sets=5, probes=5))
+    svc.create_table("b", width=8, capacity=256)
+    svc.append("a", codes)
+    svc.append("b", codes)
+    q = rng.integers(0, 8, size=(8,))
+    ra, rb = svc.lookup("a", q, k=6), svc.lookup("b", q, k=6)
+    np.testing.assert_array_equal(ra.indices, rb.indices)
+    np.testing.assert_array_equal(ra.distances, rb.distances)
+
+
+def test_service_compaction_rebuilds_index():
+    rng = np.random.default_rng(20)
+    svc = AMService()
+    svc.create_table("t", width=8, bits=2, capacity=128,
+                     index=IndexSpec(sets=4, probes=4, min_rows=20))
+    codes = rng.integers(0, 4, size=(60, 8))
+    svc.append("t", codes, values=list(range(60)))
+    assert svc.stats("t")["index"]["builds"] == 1
+    svc.delete("t", [0, 1, 2, 3])
+    st_ = svc.stats("t")["index"]
+    assert st_["builds"] == 2                        # compaction rebuilt
+    r = svc.lookup("t", codes[10], k=1)              # renumbered row hits
+    assert r.hit and r.best_row == 6 and r.value == 10
+    # dropping below the threshold falls back to the flat search
+    svc.delete("t", np.arange(40))
+    assert not svc.stats("t")["index"]["built"]
+    r = svc.lookup("t", codes[45], k=1)
+    assert r.hit
+
+
+def test_service_sharded_with_index():
+    mesh = jax.make_mesh((8,), ("model",))
+    rng = np.random.default_rng(21)
+    svc = AMService(mesh=mesh)
+    svc.create_table("t", width=8, capacity=128,
+                     index=IndexSpec(sets=6, probes=2))
+    codes = rng.integers(0, 8, size=(80, 8))
+    svc.append("t", codes, values=[f"v{i}" for i in range(80)])
+    r = svc.lookup("t", codes[33], k=2)
+    assert r.hit and r.best_row == 33 and r.value == "v33"
+
+
+def test_index_spec_validation():
+    svc = AMService()
+    with pytest.raises(ValueError, match="probes must be in"):
+        svc.create_table("t", width=8, index=IndexSpec(sets=4, probes=0))
+    with pytest.raises(ValueError, match="unknown partition method"):
+        svc.create_table("t", width=8,
+                         index=IndexSpec(sets=4, probes=1, method="lsh2"))
+    with pytest.raises(ValueError, match="exceeds table capacity"):
+        svc.create_table("t", width=8, capacity=2,
+                         index=IndexSpec(sets=4, probes=1))

@@ -1,0 +1,116 @@
+"""Calibrated analog L1 readout — the ``"analog_cal"`` backend.
+
+The raw ``"analog"`` backend reports matchline discharge in LSB-current
+units, whose scale drifts from digital L1 as level gaps grow (the device's
+overdrive response is only approximately proportional).  ``"analog_cal"``
+inverts the affine fit ``i_ml ~= a * mismatches + b * L1``
+(:func:`repro.core.mibo.overdrive_response_fit`) so the same circuit model
+reports *digital-equivalent level distances*: thresholds tuned on a digital
+backend transfer to the analog one unchanged.  These tests pin that
+contract — fit shape, small-distance accuracy under half a level,
+half-integer threshold transfer, and exact/match flag parity.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import am, mibo
+
+BITS = [1, 2, 3]
+
+
+def _perturbed_queries(rng, codes, bits, max_cells=3, max_step=2):
+    """Queries at small L1 distance from their source rows."""
+    q = codes.copy()
+    n, d = codes.shape
+    for i in range(n):
+        for j in rng.choice(d, size=rng.integers(0, max_cells + 1),
+                            replace=False):
+            q[i, j] = np.clip(q[i, j] + rng.integers(-max_step, max_step + 1),
+                              0, (1 << bits) - 1)
+    return q
+
+
+def test_backend_registered():
+    assert "analog_cal" in am.backend_names()
+    assert am.backend_capabilities("analog_cal") == ("dense",)
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_overdrive_fit_shape(bits):
+    a, b = mibo.overdrive_response_fit(bits)
+    assert b > 0.0
+    if bits == 1:
+        # one realisable gap: the fit degenerates to the exact map
+        assert a == 0.0
+        np.testing.assert_allclose(
+            b, float(mibo.lsb_mismatch_current(1)), rtol=1e-6)
+    # the fit must reproduce each realisable gap's current to < 0.5 level
+    gaps = np.arange(1, 1 << bits)
+    cur = np.asarray(mibo.mibo_current(np.zeros_like(gaps), gaps, bits))
+    level_err = np.abs((cur - a) / b - gaps)
+    assert level_err.max() < 0.5
+
+
+@settings(max_examples=12, deadline=None)
+@given(bits=st.integers(1, 3), seed=st.integers(0, 2**31 - 1))
+def test_calibrated_distance_matches_digital_at_small_distances(bits, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 1 << bits, size=(24, 16))
+    t = am.make_table(codes, bits=bits, distance="l1")
+    q = _perturbed_queries(rng, codes, bits)
+    dd = np.asarray(am.distances(t, q, backend="ref"))
+    dc = np.asarray(am.distances(t, q, backend="analog_cal"))
+    small = dd <= 8
+    # within half a level wherever a half-integer threshold could decide
+    assert np.abs(dc - dd)[small].max() < 0.5
+
+
+def test_calibration_beats_raw_lsb_units_at_three_bits():
+    # the raw LSB-unit readout under-counts multi-level gaps (the per-gap
+    # current is sub-proportional); the affine inversion absorbs that
+    rng = np.random.default_rng(0)
+    codes = rng.integers(0, 8, size=(32, 16))
+    t = am.make_table(codes, bits=3, distance="l1")
+    q = _perturbed_queries(rng, codes, 3)
+    dd = np.asarray(am.distances(t, q, backend="ref"))
+    dc = np.asarray(am.distances(t, q, backend="analog_cal"))
+    da = np.asarray(am.distances(t, q, backend="analog"))
+    small = dd <= 8
+    assert np.abs(dc - dd)[small].max() < np.abs(da - dd)[small].max()
+
+
+@settings(max_examples=12, deadline=None)
+@given(bits=st.integers(1, 3), seed=st.integers(0, 2**31 - 1),
+       threshold=st.sampled_from([0.5, 1.5, 2.5, 3.5]))
+def test_half_integer_thresholds_transfer_from_digital(bits, seed, threshold):
+    # the satellite contract: a threshold tuned digitally gives identical
+    # matched flags on the calibrated analog backend
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 1 << bits, size=(20, 12))
+    t = am.make_table(codes, bits=bits, distance="l1")
+    q = _perturbed_queries(rng, codes, bits, max_cells=2, max_step=1)
+    rd = am.search(t, q, k=3, threshold=threshold, backend="ref")
+    rc = am.search(t, q, k=3, threshold=threshold, backend="analog_cal")
+    # both backends sort their own distances, and sorting is 1-Lipschitz in
+    # sup norm: per-position calibrated distances sit within the fit error
+    # of the digital ones, which never crosses a half-integer threshold —
+    # the flags must agree even where equal-distance ties reorder rows
+    np.testing.assert_array_equal(np.asarray(rd.matched),
+                                  np.asarray(rc.matched))
+    np.testing.assert_array_equal(np.asarray(rd.exact),
+                                  np.asarray(rc.exact))
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_exact_match_flags_identical_to_digital(bits):
+    rng = np.random.default_rng(1)
+    codes = rng.integers(0, 1 << bits, size=(30, 10))
+    t = am.make_table(codes, bits=bits, distance="l1")
+    q = np.concatenate([codes[:5], _perturbed_queries(rng, codes[5:10], bits,
+                                                      max_cells=2)])
+    rd = am.search(t, q, k=1, backend="ref")
+    rc = am.search(t, q, k=1, backend="analog_cal")
+    np.testing.assert_array_equal(np.asarray(rd.exact), np.asarray(rc.exact))
+    assert np.asarray(rc.exact)[:5, 0].all()         # duplicates hit exactly

@@ -8,7 +8,11 @@ The architecture page carries three machine-checkable artefacts:
 * the ``FUSED_K_MAX`` cutover constant quoted in contract 1;
 * the merge-topology decision table between the ``merge-table`` markers —
   its threshold must equal ``am.TREE_MERGE_MIN_BANKS`` and its strategy
-  column must match what ``am.resolve_merge("auto", width)`` actually does.
+  column must match what ``am.resolve_merge("auto", width)`` actually does;
+* the index-tier contract table between the ``index-table`` markers —
+  each documented regime (``probes = sets`` bitwise-exact with
+  ``recall_proxy`` 1.0; ``probes < sets`` with a certified recall lower
+  bound) is re-verified on a tie-heavy index built here.
 
 Also covered here: the O(k * log banks) vs O(k * banks) merge-traffic law
 (``am.merge_traffic_bytes``, the quantity the benchmark sweep asserts), the
@@ -154,6 +158,48 @@ def test_lex_merge_orders_and_dedups():
     dist, idx = am._lex_merge_topk(dp, ip, dq, iq, 3)
     np.testing.assert_array_equal(np.asarray(idx)[0, :2], [1, 5])
     assert np.asarray(idx)[0, 2] == am._IDX_SENTINEL
+
+
+# ---------------------------------------------------------------------------
+# the index-tier contract table (layer 2.5)
+# ---------------------------------------------------------------------------
+
+def test_index_contract_table_matches_code():
+    from repro import index as rindex
+    rows = _table_rows(_arch_text(), "index-table")
+    regimes = [row[0].strip().strip("`") for row in rows]
+    assert regimes == ["= sets", "< sets"], (
+        "docs/ARCHITECTURE.md index table must document exactly the "
+        f"probes = sets and probes < sets regimes, got {regimes}")
+
+    # re-verify each documented regime on a tie-heavy index (binary levels
+    # force equal-distance collisions, so the bitwise claim covers the
+    # tie-break contract, not just the distances)
+    rng = np.random.default_rng(0)
+    codes = rng.integers(0, 2, size=(40, 6)) * 3
+    t = am.make_table(codes, bits=2)
+    idx = rindex.build(t, sets=4, seed=0)
+    q = codes[:8]
+    exact = am.search(t, q, k=6)
+
+    # row 1: probes = sets -> bitwise identical, recall_proxy exactly 1.0
+    full = rindex.search(idx, q, k=6, probes=4)
+    np.testing.assert_array_equal(np.asarray(full.indices),
+                                  np.asarray(exact.indices))
+    np.testing.assert_array_equal(np.asarray(full.distances),
+                                  np.asarray(exact.distances))
+    assert np.all(np.asarray(full.recall_proxy) == 1.0)
+
+    # row 2: probes < sets -> exact over probed rows; the proxy is a sound
+    # per-query lower bound on recall (slot-wise distance agreement is the
+    # tie-safe recall definition)
+    part = rindex.search(idx, q, k=6, probes=2)
+    recall = (np.asarray(part.distances)
+              == np.asarray(exact.distances)).mean(axis=1)
+    proxy = np.asarray(part.recall_proxy)
+    assert np.all(proxy <= recall + 1e-6), (proxy, recall)
+    frac = np.asarray(part.candidate_fraction)
+    assert np.all(frac <= 1.0) and np.all(frac > 0.0)
 
 
 # ---------------------------------------------------------------------------

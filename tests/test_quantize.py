@@ -1,0 +1,116 @@
+"""Property tests for the CDF-equalized quantizer (repro.core.quantize).
+
+The quantizer underpins both the paper's HDC encoding pipeline and the
+index tier's centroid codes (:mod:`repro.index.partition` dequantizes rows
+through :func:`level_representatives` and re-quantizes trained centroids),
+so its structural invariants — threshold monotonicity, representative
+ordering/interleaving, level monotonicity, round-trip stability — are
+load-bearing well beyond the figure scripts that first used it.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantize
+
+BITS = [1, 2, 3]
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_thresholds_strictly_increasing_and_symmetric(bits):
+    thr = np.asarray(quantize.gaussian_thresholds(bits))
+    m = 1 << bits
+    assert thr.shape == (m - 1,)
+    assert np.all(np.diff(thr) > 0)
+    # equal-probability quantiles of a symmetric law are antisymmetric
+    np.testing.assert_allclose(thr, -thr[::-1], atol=1e-6)
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_representatives_strictly_increasing_and_interleaved(bits):
+    reps = np.asarray(quantize.level_representatives(bits))
+    thr = np.asarray(quantize.gaussian_thresholds(bits))
+    m = 1 << bits
+    assert reps.shape == (m,)
+    assert np.all(np.diff(reps) > 0)
+    # each representative (conditional mean) sits strictly inside its bin
+    edges = np.concatenate([[-np.inf], thr, [np.inf]])
+    assert np.all(reps > edges[:-1])
+    assert np.all(reps < edges[1:])
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_representatives_round_trip_to_their_own_level(bits):
+    reps = np.asarray(quantize.level_representatives(bits))
+    levels = np.asarray(quantize.quantize(reps, bits, mu=np.float32(0.0),
+                                          sigma=np.float32(1.0)))
+    np.testing.assert_array_equal(levels, np.arange(1 << bits))
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.integers(1, 3), seed=st.integers(0, 2**31 - 1))
+def test_quantize_is_monotone_and_in_range(bits, seed):
+    rng = np.random.default_rng(seed)
+    x = np.sort(rng.normal(size=257).astype(np.float32))
+    lv = np.asarray(quantize.quantize(x, bits, mu=np.float32(0.0),
+                                      sigma=np.float32(1.0)))
+    m = 1 << bits
+    assert lv.min() >= 0 and lv.max() < m
+    assert np.all(np.diff(lv) >= 0)                  # monotone in the input
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.integers(1, 3), seed=st.integers(0, 2**31 - 1))
+def test_round_trip_error_bounded_by_bin_geometry(bits, seed):
+    # |x - dequantize(quantize(x))| is bounded by the distance from x to the
+    # far edge of its bin; for the unbounded edge bins, clip test values
+    rng = np.random.default_rng(seed)
+    thr = np.asarray(quantize.gaussian_thresholds(bits))
+    lo, hi = (-1.5, 1.5) if bits == 1 else (thr[0], thr[-1])
+    x = rng.uniform(lo, hi, size=129).astype(np.float32)
+    lv = np.asarray(quantize.quantize(x, bits, mu=np.float32(0.0),
+                                      sigma=np.float32(1.0)))
+    back = np.asarray(quantize.dequantize(lv, bits))
+    edges = np.concatenate([[lo - 1.0], thr, [hi + 1.0]])
+    width = (edges[1:] - edges[:-1]).max()
+    assert np.all(np.abs(x - back) <= width)
+
+
+@settings(max_examples=15, deadline=None)
+@given(bits=st.integers(1, 3), seed=st.integers(0, 2**31 - 1))
+def test_quantize_is_affine_invariant(bits, seed):
+    # quantizing mu + sigma*z with (mu, sigma) given == quantizing z in
+    # standard coordinates: the Z-score normalisation is exact
+    rng = np.random.default_rng(seed)
+    z = rng.normal(size=(7, 11)).astype(np.float32)
+    mu, sigma = np.float32(3.25), np.float32(0.5)
+    a = np.asarray(quantize.quantize(mu + sigma * z, bits, mu=mu,
+                                     sigma=sigma))
+    b = np.asarray(quantize.quantize(z, bits, mu=np.float32(0.0),
+                                     sigma=np.float32(1.0)))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_default_stats_calibrate_over_requested_axis():
+    rng = np.random.default_rng(0)
+    # two rows with wildly different scales: global calibration would push
+    # one row into the extreme levels; per-row (axis=-1) keeps both centred
+    x = np.stack([rng.normal(0, 1, 4096), rng.normal(50, 10, 4096)]) \
+          .astype(np.float32)
+    lv = np.asarray(quantize.quantize(x, 3, axis=-1))
+    counts0 = np.bincount(lv[0], minlength=8) / 4096
+    counts1 = np.bincount(lv[1], minlength=8) / 4096
+    # CDF equalisation: every level carries ~1/8 of the mass, per row
+    assert np.all(np.abs(counts0 - 0.125) < 0.04)
+    assert np.all(np.abs(counts1 - 0.125) < 0.04)
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_levels_used_equally_often_on_gaussian_data(bits):
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=1 << 14).astype(np.float32)
+    lv = np.asarray(quantize.quantize(x, bits))
+    m = 1 << bits
+    counts = np.bincount(lv, minlength=m) / lv.size
+    assert np.all(np.abs(counts - 1.0 / m) < 0.05)
