@@ -1,0 +1,178 @@
+"""Ternary tier cost + LPM throughput: masked vs unmasked, dense vs fused.
+
+The tcam tier's claims (``docs/ARCHITECTURE.md``, layer 2.75):
+
+  * the care-mask plane costs one extra AND inside the Gram accumulation —
+    masked search should track unmasked search closely on both the dense
+    and the fused tier;
+  * an all-care mask is *free* in semantics: bitwise-identical indices and
+    distances to the unmasked path, dense and fused;
+  * multi-match (``matches=M``) reproduces a numpy oracle including match
+    counts, overflow, and the lowest-(distance, row) priority slot;
+  * longest-prefix-match routing resolves through one
+    ``am.search(..., matches=M)`` call and agrees with the pure-python
+    ``lpm_oracle`` on every address.
+
+This benchmark wall-clocks masked vs unmasked search (ref + pallas
+backends) and batched LPM lookups, and emits the masked/unmasked overhead
+ratio.  ``--smoke`` (the CI benchmark job) shrinks the sweeps and asserts
+the all-care identity, the multi-match oracle, and the LPM oracle gates.
+
+  PYTHONPATH=src:. python benchmarks/bench_tcam.py
+  PYTHONPATH=src:. python benchmarks/bench_tcam.py --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro import tcam
+from repro.core import am
+
+BITS = 3
+WIDTH_LPM, BITS_LPM = 8, 2      # 16-bit addresses, 2-bit cells
+
+
+def make_case(n, q, d, *, seed=0):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 1 << BITS, size=(n, d))
+    queries = rng.integers(0, 1 << BITS, size=(q, d))
+    care = rng.integers(0, 2, size=(n, d))
+    return jnp.asarray(codes), jnp.asarray(queries), jnp.asarray(care)
+
+
+def make_routes(n_routes, *, seed=0):
+    """Random overlapping prefixes plus a default route, first entry last."""
+    rng = np.random.default_rng(seed)
+    total = WIDTH_LPM * BITS_LPM
+    routes = [tcam.Route(0, 0, 0)]
+    for i in range(n_routes - 1):
+        p = int(rng.integers(1, total + 1))
+        v = int(rng.integers(0, 1 << total))
+        routes.append(tcam.Route(v, p, i + 1))
+    return routes
+
+
+def multimatch_oracle(codes, queries, care, thr, m):
+    """Fixed-width all-matches-within-threshold reference, numpy-only."""
+    diff = (queries[:, None, :] != codes[None, :, :]) & (care[None] != 0)
+    d = diff.sum(-1).astype(np.float64)
+    idx = np.full((len(queries), m), -1, np.int64)
+    dist = np.full((len(queries), m), np.inf)
+    count = np.zeros(len(queries), np.int64)
+    for qi in range(len(queries)):
+        hits = np.flatnonzero(d[qi] <= thr)
+        hits = hits[np.argsort(d[qi][hits], kind="stable")]
+        count[qi] = len(hits)
+        w = hits[:m]
+        idx[qi, :len(w)] = w
+        dist[qi, :len(w)] = d[qi][w]
+    return idx, dist, count, count > m
+
+
+def check_allcare_identity(backend):
+    """All-care masked search == unmasked search, bitwise, on a tie-heavy
+    shape — indices AND distances, the layer-2.75 acceptance gate."""
+    rng = np.random.default_rng(3)
+    codes = rng.integers(0, 2, size=(96, 24)) * 7
+    queries = rng.integers(0, 2, size=(16, 24)) * 7
+    plain = am.make_table(codes, bits=BITS)
+    allcare = am.make_table(codes, bits=BITS,
+                            care_mask=np.ones_like(codes))
+    want = am.search(plain, queries, k=12, threshold=9, backend=backend)
+    got = am.search(allcare, queries, k=12, threshold=9, backend=backend)
+    for f in ("indices", "distances", "matched", "exact"):
+        np.testing.assert_array_equal(np.asarray(getattr(got, f)),
+                                      np.asarray(getattr(want, f)),
+                                      err_msg=f"{backend}: {f}")
+
+
+def check_multimatch_oracle(backend):
+    """am.search(matches=M) == the numpy oracle — counts, overflow, and
+    the (distance, row) priority ordering, masked and overflowing."""
+    codes, queries, care = make_case(80, 12, 16, seed=5)
+    t = am.make_table(codes, bits=BITS, care_mask=care)
+    for thr, m in ((4.0, 6), (10.0, 3)):
+        r = am.search(t, queries, matches=m, threshold=thr, backend=backend)
+        wi, wd, wc, wo = multimatch_oracle(np.asarray(codes),
+                                           np.asarray(queries),
+                                           np.asarray(care), thr, m)
+        np.testing.assert_array_equal(np.asarray(r.match_count), wc)
+        np.testing.assert_array_equal(np.asarray(r.overflow), wo)
+        np.testing.assert_array_equal(np.asarray(r.distances), wd)
+        # equal-distance rows may legally swap slots only under identical
+        # distance; the am contract is stricter (ascending row index), so
+        # indices must match the stable-sort oracle exactly
+        np.testing.assert_array_equal(np.asarray(r.indices), wi)
+    assert bool(np.asarray(am.search(t, queries, matches=3, threshold=10.0,
+                                     backend=backend).overflow).any())
+
+
+def check_lpm(routes, rt, addrs):
+    hops, result = tcam.lookup(rt, addrs, matches=8)
+    want = [tcam.lpm_oracle(routes, a, width=WIDTH_LPM, bits=BITS_LPM,
+                            default_hop=-1) for a in addrs.tolist()]
+    assert np.asarray(hops).tolist() == want, "LPM disagrees with oracle"
+    assert bool(np.asarray(result.matched)[:, 0].all())
+
+
+def run(smoke: bool = False) -> None:
+    iters = 3 if smoke else 10
+    shapes = ((512, 32, 32),) if smoke else ((512, 32, 32), (4096, 64, 32),
+                                             (16384, 64, 64))
+    if smoke:
+        for backend in ("ref", "pallas"):
+            check_allcare_identity(backend)
+            check_multimatch_oracle(backend)
+
+    # masked vs unmasked wall-clock: the one-extra-AND overhead claim
+    for n, q, d in shapes:
+        codes, queries, care = make_case(n, q, d)
+        plain = am.make_table(codes, bits=BITS)
+        masked = am.make_table(codes, bits=BITS, care_mask=care)
+        for backend in ("ref", "pallas"):
+            f_plain = jax.jit(lambda t, qq, b=backend: am.search(
+                t, qq, k=8, backend=b))
+            f_mask = jax.jit(lambda t, qq, b=backend: am.search(
+                t, qq, k=8, backend=b))
+            base = time_call(f_plain, plain, queries, iters=iters)
+            cost = time_call(f_mask, masked, queries, iters=iters)
+            emit(f"tcam_masked_{backend}_n{n}_d{d}", cost,
+                 f"unmasked_us={base:.1f};overhead={cost / base:.2f}x")
+        f_mm = jax.jit(lambda t, qq: am.search(t, qq, matches=8,
+                                               threshold=6.0))
+        mm = time_call(f_mm, masked, queries, iters=iters)
+        emit(f"tcam_multimatch_n{n}_d{d}_m8", mm, "threshold=6.0")
+
+    # LPM routing throughput: addresses resolved per second, one
+    # multi-match search per batch
+    n_routes, n_addrs = (64, 256) if smoke else (512, 4096)
+    routes = make_routes(n_routes, seed=1)
+    rt = tcam.build_routing_table(routes, width=WIDTH_LPM, bits=BITS_LPM,
+                                  default_hop=-1)
+    rng = np.random.default_rng(2)
+    addrs = rng.integers(0, 1 << (WIDTH_LPM * BITS_LPM), n_addrs)
+    if smoke:
+        check_lpm(routes, rt, addrs)
+    qcodes = tcam.encode_addresses(rt, addrs)
+    f_lpm = jax.jit(lambda t, qq: am.search(t, qq, matches=8))
+    us = time_call(f_lpm, rt.table, qcodes, iters=iters)
+    emit(f"tcam_lpm_r{rt.table.codes.shape[0]}_a{n_addrs}", us,
+         f"addrs_per_s={n_addrs / (us * 1e-6):.0f}")
+    if smoke:
+        print("smoke gates passed: all-care identity (ref+pallas), "
+              "multi-match oracle, LPM oracle", flush=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweeps + identity/oracle assertions (CI)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)

@@ -1,0 +1,99 @@
+"""Bench regression gate: fresh BENCH_index.json vs the committed baseline.
+
+``benchmarks/bench_am_index.py --smoke`` overwrites ``BENCH_index.json`` with
+the run it just measured; until now CI only *re-measured* and uploaded the
+artifact, so a silent recall or candidate-fraction regression sailed through
+as long as the run's own absolute gates held.  This script closes the loop:
+it diffs a freshly produced report against the baseline committed in git and
+fails when quality drops beyond tolerance.
+
+Quality metrics are deterministic on the pinned seed, so tolerances are
+tight; wall-clock (``us_per_call``) is runner-dependent and is deliberately
+NOT gated — a perf report, not a perf gate.
+
+Tolerances (per probe point present in BOTH reports):
+  * ``recall_at_k``          may drop at most ``RECALL_DROP`` (0.02) absolute;
+  * ``candidate_fraction``   may grow at most ``FRAC_GROWTH`` (1.10) relative
+    (scanning more rows for the same probes = the index got coarser).
+
+Structural drift — a probe point or top-level geometry key (sets, k, n,
+queries) present in the baseline but missing or changed in the fresh run —
+also fails: geometry changes must land with a regenerated committed baseline
+in the same PR.
+
+Usage (CI stashes the committed baseline before the bench overwrites it):
+    cp BENCH_index.json /tmp/BENCH_index.baseline.json
+    python benchmarks/bench_am_index.py --smoke
+    python scripts/check_bench_regression.py \
+        --baseline /tmp/BENCH_index.baseline.json --fresh BENCH_index.json
+
+Stdlib-only, exit status 0/1.
+"""
+
+import argparse
+import json
+import sys
+
+RECALL_DROP = 0.02       # absolute recall@k drop allowed per probe point
+FRAC_GROWTH = 1.10       # relative candidate-fraction growth allowed
+GEOMETRY_KEYS = ("sets", "k", "n", "queries")
+
+
+def compare(baseline: dict, fresh: dict) -> list[str]:
+    """Return a list of human-readable regression descriptions (empty = ok)."""
+    errors = []
+    for key in GEOMETRY_KEYS:
+        if baseline.get(key) != fresh.get(key):
+            errors.append(
+                f"geometry drift: {key} baseline={baseline.get(key)!r} "
+                f"fresh={fresh.get(key)!r} (regenerate the committed "
+                "baseline in the same PR)")
+    for probes, base in sorted(baseline.get("probes", {}).items(),
+                               key=lambda kv: int(kv[0])):
+        cur = fresh.get("probes", {}).get(probes)
+        if cur is None:
+            errors.append(f"probe point P={probes} missing from fresh run")
+            continue
+        drop = base["recall_at_k"] - cur["recall_at_k"]
+        if drop > RECALL_DROP:
+            errors.append(
+                f"P={probes}: recall_at_k regressed "
+                f"{base['recall_at_k']:.4f} -> {cur['recall_at_k']:.4f} "
+                f"(drop {drop:.4f} > {RECALL_DROP})")
+        if base["candidate_fraction"] > 0:
+            growth = cur["candidate_fraction"] / base["candidate_fraction"]
+            if growth > FRAC_GROWTH:
+                errors.append(
+                    f"P={probes}: candidate_fraction grew "
+                    f"{base['candidate_fraction']:.4f} -> "
+                    f"{cur['candidate_fraction']:.4f} "
+                    f"({growth:.2f}x > {FRAC_GROWTH}x)")
+    return errors
+
+
+def main(argv=None) -> int:
+    """CLI entry point; returns the process exit status."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_index.json (stash before the "
+                         "bench overwrites it)")
+    ap.add_argument("--fresh", default="BENCH_index.json",
+                    help="report written by the bench run under test")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+    errors = compare(baseline, fresh)
+    for e in errors:
+        print(f"REGRESSION: {e}")
+    if not errors:
+        n = len(baseline.get("probes", {}))
+        print(f"bench regression gate: {n} probe points within tolerance "
+              f"(recall drop <= {RECALL_DROP}, frac growth <= "
+              f"{FRAC_GROWTH}x)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

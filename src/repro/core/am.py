@@ -46,6 +46,16 @@ including among +inf masked rows.  ``"pallas"`` ships a fused tier
 (:func:`repro.kernels.cam_search.ops.topk_fused`); ``"ref"`` and
 ``"analog"`` are dense-only.
 
+A third **masked** tier (``"ref"`` and ``"pallas"``) adds ternary
+don't-care semantics: tier functions accept ``care=``, an (N, D) 0/1 plane
+stored on the table (:func:`make_table` with ``care_mask=``), and positions
+with ``care == 0`` never count as mismatches.  An all-ones plane is
+bitwise-identical to no plane at all, on every tier.  On top of either tier,
+``search(..., matches=M)`` switches the *result* semantics to multi-match
+(:class:`AMMultiMatchResult`): all rows within threshold in a fixed-width
+window, priority (lowest (distance, index)) entry first, with an exact
+``match_count`` and an ``overflow`` flag — the TCAM/TLB answer shape.
+
 Merge topologies (``search_sharded``'s cross-bank candidate reduction)
 ----------------------------------------------------------------------
 Per-bank top-k candidate lists are reduced to the global top-k by one of two
@@ -123,27 +133,32 @@ DISTANCES = ("hamming", "l1")
 class AMTable:
     """Immutable multi-bit code table (a registered pytree).
 
-    Children: ``codes`` (N, D) int32 symbols in [0, 2**bits) and the optional
+    Children: ``codes`` (N, D) int32 symbols in [0, 2**bits), the optional
     per-row ``meta`` array (e.g. value ids for an associative cache — any
-    array whose leading axis aligns with rows).  ``bits`` and ``distance``
+    array whose leading axis aligns with rows), and the optional ``care``
+    plane — (N, D) int32 0/1 flags marking which symbol positions of each
+    row participate in distance (0 = ternary don't-care cell; positions with
+    ``care == 0`` never count as mismatches).  ``bits`` and ``distance``
     are static aux data, so a jitted function specialises on them exactly
     like on shapes.
     """
 
     codes: jnp.ndarray
     meta: jnp.ndarray | None = None
+    care: jnp.ndarray | None = None
     bits: int = 3
     distance: str = "hamming"
 
     def tree_flatten(self):
-        """Flatten into (codes, meta) children + (bits, distance) aux."""
-        return (self.codes, self.meta), (self.bits, self.distance)
+        """Flatten into (codes, meta, care) children + (bits, distance) aux."""
+        return (self.codes, self.meta, self.care), (self.bits, self.distance)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         """Rebuild from the children/aux pair of :meth:`tree_flatten`."""
-        codes, meta = children
-        return cls(codes=codes, meta=meta, bits=aux[0], distance=aux[1])
+        codes, meta, care = children
+        return cls(codes=codes, meta=meta, care=care, bits=aux[0],
+                   distance=aux[1])
 
     @property
     def n_rows(self) -> int:
@@ -156,8 +171,19 @@ class AMTable:
         return self.codes.shape[1]
 
 
+def _check_care(care_mask, codes) -> jnp.ndarray | None:
+    """Normalise a care plane to (N, D) int32 0/1 aligned with ``codes``."""
+    if care_mask is None:
+        return None
+    care = jnp.asarray(care_mask)
+    if care.shape != codes.shape:
+        raise ValueError(
+            f"care_mask shape {care.shape} != codes shape {codes.shape}")
+    return (care != 0).astype(jnp.int32)
+
+
 def make_table(codes, *, bits: int = 3, distance: str = "hamming",
-               meta=None) -> AMTable:
+               meta=None, care_mask=None) -> AMTable:
     """Build an :class:`AMTable` from (N, D) integer symbol codes.
 
     Args:
@@ -165,6 +191,10 @@ def make_table(codes, *, bits: int = 3, distance: str = "hamming",
       bits: bits per stored symbol (static).
       distance: ``"hamming"`` or ``"l1"`` (static; see the unit contract).
       meta: optional per-row array whose leading axis aligns with rows.
+      care_mask: optional (N, D) ternary care plane — nonzero marks a cared
+        position, 0 a don't-care cell excluded from distance.  Requires a
+        backend with the ``"masked"`` capability tier at search time; an
+        all-nonzero mask is bitwise-identical to no mask.
 
     Returns:
       A new immutable :class:`AMTable`.
@@ -179,17 +209,22 @@ def make_table(codes, *, bits: int = 3, distance: str = "hamming",
         if meta.shape[:1] != codes.shape[:1]:
             raise ValueError(
                 f"meta leading axis {meta.shape[:1]} != rows {codes.shape[:1]}")
-    return AMTable(codes=codes, meta=meta, bits=bits, distance=distance)
+    return AMTable(codes=codes, meta=meta, care=_check_care(care_mask, codes),
+                   bits=bits, distance=distance)
 
 
-def write(table: AMTable, codes, meta=None) -> AMTable:
+def write(table: AMTable, codes, meta=None, care_mask=None) -> AMTable:
     """Replace the stored codes, returning a new table (pure update)."""
     return make_table(codes, bits=table.bits, distance=table.distance,
-                      meta=meta)
+                      meta=meta, care_mask=care_mask)
 
 
-def append(table: AMTable, codes, meta=None) -> AMTable:
-    """Append (M, D) rows, returning a new table."""
+def append(table: AMTable, codes, meta=None, care_mask=None) -> AMTable:
+    """Append (M, D) rows, returning a new table.
+
+    ``meta`` and ``care_mask`` presence must each match the table's — a
+    ternary table stays ternary row-for-row and a plain table stays plain.
+    """
     codes = jnp.asarray(codes, jnp.int32)
     if codes.ndim == 1:
         codes = codes[None]
@@ -199,6 +234,8 @@ def append(table: AMTable, codes, meta=None) -> AMTable:
     new_codes = jnp.concatenate([table.codes, codes], axis=0)
     if (table.meta is None) != (meta is None):
         raise ValueError("append meta presence must match the table's")
+    if (table.care is None) != (care_mask is None):
+        raise ValueError("append care_mask presence must match the table's")
     new_meta = None
     if meta is not None:
         meta = jnp.atleast_1d(jnp.asarray(meta))
@@ -207,8 +244,15 @@ def append(table: AMTable, codes, meta=None) -> AMTable:
                 f"meta leading axis {meta.shape[:1]} != appended rows "
                 f"{codes.shape[:1]}")
         new_meta = jnp.concatenate([table.meta, meta], axis=0)
-    return AMTable(codes=new_codes, meta=new_meta, bits=table.bits,
-                   distance=table.distance)
+    new_care = None
+    if care_mask is not None:
+        care = jnp.asarray(care_mask)
+        if care.ndim == 1:
+            care = care[None]
+        new_care = jnp.concatenate([table.care, _check_care(care, codes)],
+                                   axis=0)
+    return AMTable(codes=new_codes, meta=new_meta, care=new_care,
+                   bits=table.bits, distance=table.distance)
 
 
 def delete(table: AMTable, rows) -> AMTable:
@@ -239,8 +283,10 @@ def delete(table: AMTable, rows) -> AMTable:
     new_codes = jnp.delete(table.codes, rows, axis=0)
     new_meta = None if table.meta is None else jnp.delete(table.meta, rows,
                                                           axis=0)
-    return AMTable(codes=new_codes, meta=new_meta, bits=table.bits,
-                   distance=table.distance)
+    new_care = None if table.care is None else jnp.delete(table.care, rows,
+                                                          axis=0)
+    return AMTable(codes=new_codes, meta=new_meta, care=new_care,
+                   bits=table.bits, distance=table.distance)
 
 
 # ---------------------------------------------------------------------------
@@ -304,15 +350,29 @@ FUSED_K_MAX = 64
 
 @dataclasses.dataclass(frozen=True)
 class _Backend:
-    """Registry entry: the mandatory dense tier + optional fused tier."""
+    """Registry entry: the mandatory dense tier + optional fused tier.
+
+    ``masked`` marks backends whose tier functions additionally accept the
+    ternary ``care=`` keyword (the "masked" capability); ``fused_count``
+    marks a fused tier that also accepts ``count_le=`` per-query thresholds
+    and then returns a third (Q,) int32 within-threshold count (the
+    multi-match fast path).
+    """
 
     dense: BackendFn
     fused: FusedBackendFn | None = None
+    masked: bool = False
+    fused_count: bool = False
 
     @property
     def capabilities(self) -> tuple[str, ...]:
         """Tier names this backend implements, dense always first."""
-        return ("dense",) if self.fused is None else ("dense", "fused")
+        caps = ["dense"]
+        if self.fused is not None:
+            caps.append("fused")
+        if self.masked:
+            caps.append("masked")
+        return tuple(caps)
 
 
 _BACKENDS: dict[str, _Backend] = {}
@@ -320,7 +380,9 @@ DEFAULT_BACKEND = "ref"
 
 
 def register_backend(name: str, fn: BackendFn, *,
-                     fused: FusedBackendFn | None = None) -> None:
+                     fused: FusedBackendFn | None = None,
+                     masked: bool = False,
+                     fused_count: bool = False) -> None:
     """Register (or replace) a search backend under ``name``.
 
     Args:
@@ -330,8 +392,15 @@ def register_backend(name: str, fn: BackendFn, *,
       fused: optionally the fused tier — a direct top-k
         ``fn(queries, codes, bits, distance, k=, valid_rows=)`` that must be
         bitwise-identical to dense + ``lax.top_k`` (see module docstring).
+      masked: declare the masked (ternary) tier: every tier function accepts
+        a ``care=`` keyword ((N, D) 0/1 plane; don't-care positions never
+        mismatch) and an all-ones plane is bitwise-identical to ``None``.
+      fused_count: the fused tier additionally accepts ``count_le=`` and
+        returns ``(rows, distances, counts)`` — required for the fused
+        multi-match path (:func:`search` with ``matches=``).
     """
-    _BACKENDS[name] = _Backend(dense=fn, fused=fused)
+    _BACKENDS[name] = _Backend(dense=fn, fused=fused, masked=masked,
+                               fused_count=fused_count)
 
 
 def get_backend(name: str) -> BackendFn:
@@ -356,8 +425,9 @@ def backend_names() -> tuple[str, ...]:
 def backend_capabilities(name: str) -> tuple[str, ...]:
     """Capability tiers of the backend registered under ``name``.
 
-    ``("dense",)`` for dense-only backends, ``("dense", "fused")`` when a
-    fused top-k tier is registered as well.
+    Always starts with ``"dense"``; ``"fused"`` when a fused top-k tier is
+    registered as well, ``"masked"`` when the backend accepts ternary care
+    planes (``docs/ARCHITECTURE.md`` backend table — machine-checked).
     """
     return _get_entry(name).capabilities
 
@@ -389,28 +459,47 @@ def _expand_l1(queries, codes, bits, distance):
     return queries, codes, bits
 
 
+def _expand_care_l1(care, bits, distance):
+    """Widen a care plane to match :func:`_expand_l1`'s thermometer codes.
+
+    A don't-care *symbol* excludes all ``2**bits - 1`` of its thermometer
+    rungs, so the plane is repeated per rung — masked L1 distance is then
+    ``sum_d care_d * |q_d - t_d|`` exactly.
+    """
+    if care is not None and distance == "l1" and bits > 1:
+        return jnp.repeat(care, (1 << bits) - 1, axis=-1)
+    return care
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "distance"))
-def _ref_backend(queries, codes, bits, distance):
+def _ref_backend(queries, codes, bits, distance, care=None):
     # jitted so eager callers get a fused compare-reduce instead of
     # materialising the (Q, N, D) broadcast comparison
+    care = _expand_care_l1(care, bits, distance)
     queries, codes, bits = _expand_l1(queries, codes, bits, distance)
-    return jnp.sum(queries[:, None, :] != codes[None, :, :], axis=-1,
-                   dtype=jnp.int32)
+    diff = queries[:, None, :] != codes[None, :, :]
+    if care is not None:
+        diff = diff & (care[None, :, :] != 0)
+    return jnp.sum(diff, axis=-1, dtype=jnp.int32)
 
 
-def _pallas_backend(queries, codes, bits, distance):
+def _pallas_backend(queries, codes, bits, distance, care=None):
     from repro.kernels.cam_search import ops as cam_ops
+    care = _expand_care_l1(care, bits, distance)
     queries, codes, bits = _expand_l1(queries, codes, bits, distance)
-    return cam_ops.mismatch_counts(queries, codes, bits)
+    return cam_ops.mismatch_counts(queries, codes, bits, care=care)
 
 
-def _pallas_fused_backend(queries, codes, bits, distance, *, k, valid_rows):
+def _pallas_fused_backend(queries, codes, bits, distance, *, k, valid_rows,
+                          care=None, count_le=None):
     # The L1 thermometer expansion widens D, never the row axis, so the
     # in-kernel valid_rows mask applies unchanged.
     from repro.kernels.cam_search import ops as cam_ops
+    care = _expand_care_l1(care, bits, distance)
     queries, codes, bits = _expand_l1(queries, codes, bits, distance)
     return cam_ops.topk_fused(queries, codes, k=k, bits=bits,
-                              valid_rows=valid_rows)
+                              valid_rows=valid_rows, care=care,
+                              count_le=count_le)
 
 
 def make_analog_backend(variation_key: jax.Array | None = None,
@@ -469,8 +558,9 @@ def make_analog_backend(variation_key: jax.Array | None = None,
     return _backend
 
 
-register_backend("ref", _ref_backend)
-register_backend("pallas", _pallas_backend, fused=_pallas_fused_backend)
+register_backend("ref", _ref_backend, masked=True)
+register_backend("pallas", _pallas_backend, fused=_pallas_fused_backend,
+                 masked=True, fused_count=True)
 register_backend("analog", make_analog_backend())
 register_backend("analog_cal", make_analog_backend(calibrated=True))
 
@@ -524,6 +614,132 @@ def _finalize(indices, distances, threshold, squeeze) -> AMSearchResult:
                           matched=matched)
 
 
+# ---------------------------------------------------------------------------
+# Multi-match: every row within threshold, fixed width, priority-first
+# ---------------------------------------------------------------------------
+
+#: Effective multi-match threshold when ``threshold=None``: the largest f32
+#: strictly below :data:`EXACT_MATCH_EPS`, so the uniform ``distance <=
+#: threshold`` test means exactly ``distance < EXACT_MATCH_EPS`` — exact
+#: matches only — for every representable f32 distance, analog sub-0.5
+#: values included.
+_EXACT_THR = float(np.nextafter(np.float32(EXACT_MATCH_EPS), np.float32(0)))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class AMMultiMatchResult:
+    """Fixed-width multi-match outcome (a registered pytree).
+
+    The TCAM answer shape: *all* rows at distance <= threshold, reported in
+    a static-width window of ``M`` slots ordered by ascending (distance,
+    row index) — so slot 0 is the **priority entry**, the classic CAM
+    lowest-address-wins resolution (and, for a routing table stored
+    longest-prefix-first, the longest matching prefix).  Non-match slots
+    hold index ``-1`` / distance ``+inf`` / flags ``False``.
+
+    ``match_count`` is the exact number of in-threshold rows — also when it
+    exceeds ``M``, in which case ``overflow`` is set and the window holds
+    the ``M`` highest-priority matches.  Per-query shapes are (Q, M) for the
+    window fields and (Q,) for the counts; a single 1-D query drops the
+    leading axis.
+    """
+
+    indices: jnp.ndarray      # int32 matching rows, priority-first; -1 empty
+    distances: jnp.ndarray    # float32 distances; +inf on empty slots
+    exact: jnp.ndarray        # bool — slot is an exact match (< EPS)
+    matched: jnp.ndarray      # bool — slot holds a within-threshold match
+    match_count: jnp.ndarray  # int32 — exact #rows within threshold
+    overflow: jnp.ndarray     # bool — match_count > M (window truncated)
+
+    def tree_flatten(self):
+        """Flatten into the six result arrays (no aux data)."""
+        return (self.indices, self.distances, self.exact, self.matched,
+                self.match_count, self.overflow), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        """Rebuild from the children of :meth:`tree_flatten`."""
+        del aux
+        return cls(*children)
+
+    @property
+    def single_match(self) -> jnp.ndarray:
+        """(Q,) bool — exactly one row matched (the unambiguous-hit flag)."""
+        return self.match_count == 1
+
+    @property
+    def multiple_match(self) -> jnp.ndarray:
+        """(Q,) bool — more than one row matched."""
+        return self.match_count > 1
+
+    @property
+    def priority_index(self) -> jnp.ndarray:
+        """(Q,) the winning row — lowest (distance, index); -1 if no match."""
+        return self.indices[..., 0]
+
+    @property
+    def priority_distance(self) -> jnp.ndarray:
+        """(Q,) distance of the priority entry (+inf if no match)."""
+        return self.distances[..., 0]
+
+
+def _match_threshold(threshold, qn: int) -> jnp.ndarray:
+    """Normalise a multi-match threshold to a (Q, 1) float32 array.
+
+    ``None`` means exact matches only (:data:`_EXACT_THR`); scalars and
+    per-query (Q,) / (Q, 1) arrays broadcast.
+    """
+    t = jnp.asarray(_EXACT_THR if threshold is None else threshold,
+                    jnp.float32)
+    if t.ndim == 0:
+        t = t[None, None]
+    else:
+        t = t.reshape(-1, 1)
+    return jnp.broadcast_to(t, (qn, 1))
+
+
+def _finalize_matches(indices, distances, count, thr_q, matches: int,
+                      squeeze: bool) -> AMMultiMatchResult:
+    """Blank non-match slots and assemble an :class:`AMMultiMatchResult`.
+
+    ``indices``/``distances`` are the (Q, M) lexicographic top-M (already
+    padded to static width ``matches``); since every within-threshold row
+    sorts before every out-of-threshold one, the first ``min(count, M)``
+    slots are exactly the matches, in priority order.
+    """
+    matched = distances <= thr_q
+    exact = matched & (distances < EXACT_MATCH_EPS)
+    indices = jnp.where(matched, indices, -1)
+    distances = jnp.where(matched, distances, jnp.inf)
+    count = count.astype(jnp.int32)
+    overflow = count > matches
+    if squeeze:
+        indices, distances = indices[0], distances[0]
+        exact, matched = exact[0], matched[0]
+        count, overflow = count[0], overflow[0]
+    return AMMultiMatchResult(indices=indices, distances=distances,
+                              exact=exact, matched=matched,
+                              match_count=count, overflow=overflow)
+
+
+def _care_kwargs(table: AMTable, be: _Backend) -> dict:
+    """The ``care=`` kwarg for a masked table — or {} (and a clear error).
+
+    Building ``{}`` for unmasked tables keeps every existing call site
+    byte-identical: backends without the masked tier are still called with
+    their original signature.
+    """
+    if table.care is None:
+        return {}
+    if not be.masked:
+        raise ValueError(
+            "table has a care mask but the backend lacks the 'masked' "
+            f"capability tier (has {be.capabilities}); use a masked backend "
+            "such as 'ref' or 'pallas'")
+    return {"care": table.care}
+
+
 def _prep_queries(table: AMTable, queries) -> tuple[jnp.ndarray, bool]:
     if table.n_rows == 0:
         raise ValueError(
@@ -548,23 +764,28 @@ def distances(table: AMTable, queries, *,
     """Full (Q, N) distance matrix (backend-native dtype, contract units).
 
     Always the dense tier — this function's whole point is the matrix.
+    Tables with a care mask route it through (masked backends only).
     """
     queries, squeeze = _prep_queries(table, queries)
-    d = _resolve_backend(backend).dense(queries, table.codes, table.bits,
-                                        table.distance)
+    be = _resolve_backend(backend)
+    d = be.dense(queries, table.codes, table.bits, table.distance,
+                 **_care_kwargs(table, be))
     return d[0] if squeeze else d
 
 
 def search(table: AMTable, queries, *, k: int = 1,
            threshold: float | jnp.ndarray | None = None,
            backend: str | BackendFn | None = None,
-           valid_rows: int | jnp.ndarray | None = None) -> AMSearchResult:
-    """Batched top-k / threshold associative search.
+           valid_rows: int | jnp.ndarray | None = None,
+           matches: int | None = None):
+    """Batched top-k / threshold / multi-match associative search.
 
     Args:
       table: the code store; passed as a pytree, so this function is jittable
         as a whole (``jax.jit(lambda t, q: am.search(t, q, k=4))``), vmaps
-        over query batches, and runs inside ``shard_map`` bodies.
+        over query batches, and runs inside ``shard_map`` bodies.  A table
+        with a ``care`` plane (ternary cells) requires a backend with the
+        ``"masked"`` capability.
       queries: (Q, D) — or a single (D,) — integer symbol words.
       k: how many nearest rows to return (static; clamped to the table size).
       threshold: optional match radius in contract units (may be traced);
@@ -578,9 +799,16 @@ def search(table: AMTable, queries, *, k: int = 1,
         its fill level without changing compiled shapes; when fewer than
         ``k`` rows are live, the surplus entries come back with ``+inf``
         distance and ``exact``/``matched`` False.
+      matches: switch to **multi-match** mode with a static window width M:
+        return *all* rows at distance <= ``threshold`` (exact matches only
+        when ``threshold=None``) as an :class:`AMMultiMatchResult` — the
+        first ``min(match_count, M)`` slots hold the matches in ascending
+        (distance, row index) order, slot 0 being the lowest-index priority
+        entry.  Mutually exclusive with ``k`` (leave ``k=1``).
 
     Returns:
-      :class:`AMSearchResult` with rows ordered best-first; ties broken by
+      :class:`AMSearchResult` with rows ordered best-first — or, with
+      ``matches=``, an :class:`AMMultiMatchResult`.  Ties break to the
       lowest row index (``jax.lax.top_k`` stability), which both the fused
       backend tier and the sharded path reproduce bitwise.
 
@@ -588,18 +816,49 @@ def search(table: AMTable, queries, *, k: int = 1,
     :data:`FUSED_K_MAX`, the top-k (and the ``valid_rows`` mask) runs inside
     the backend's kernel and the (Q, N) matrix is never materialised;
     otherwise the dense matrix + ``lax.top_k`` path runs.  The two are
-    bitwise-identical by contract.
+    bitwise-identical by contract.  Multi-match needs the ``fused_count``
+    extension (the in-kernel ``match_count``) to stay fused; other backends
+    count on the dense matrix.
     """
     if k < 1:
         raise ValueError(f"k must be >= 1, got {k}")
+    if matches is not None:
+        if k != 1:
+            raise ValueError(
+                f"pass either k= or matches=, not both (k={k}, "
+                f"matches={matches})")
+        if matches < 1:
+            raise ValueError(f"matches must be >= 1, got {matches}")
     queries, squeeze = _prep_queries(table, queries)
     be = _resolve_backend(backend)
+    ckw = _care_kwargs(table, be)
+
+    if matches is not None:
+        m_eff = min(matches, table.n_rows)
+        thr_q = _match_threshold(threshold, queries.shape[0])
+        if (be.fused is not None and be.fused_count
+                and 1 <= m_eff <= FUSED_K_MAX):
+            idx, dist, count = be.fused(
+                queries, table.codes, table.bits, table.distance, k=m_eff,
+                valid_rows=valid_rows, count_le=thr_q, **ckw)
+        else:
+            d = be.dense(queries, table.codes, table.bits, table.distance,
+                         **ckw).astype(jnp.float32)
+            if valid_rows is not None:
+                rows = jnp.arange(table.n_rows)
+                d = jnp.where(rows[None, :] < valid_rows, d, jnp.inf)
+            count = jnp.sum(d <= thr_q, axis=1).astype(jnp.int32)
+            neg, idx = jax.lax.top_k(-d, m_eff)
+            idx, dist = idx.astype(jnp.int32), -neg
+        dist, idx = _pad_candidates(dist, idx, matches)
+        return _finalize_matches(idx, dist, count, thr_q, matches, squeeze)
+
     k = min(k, table.n_rows)
     if be.fused is not None and 1 <= k <= FUSED_K_MAX:
         idx, dist = be.fused(queries, table.codes, table.bits, table.distance,
-                             k=k, valid_rows=valid_rows)
+                             k=k, valid_rows=valid_rows, **ckw)
         return _finalize(idx, dist, threshold, squeeze)
-    d = be.dense(queries, table.codes, table.bits, table.distance)
+    d = be.dense(queries, table.codes, table.bits, table.distance, **ckw)
     d = d.astype(jnp.float32)
     if valid_rows is not None:
         rows = jnp.arange(table.n_rows)
@@ -804,7 +1063,7 @@ def search_sharded(table: AMTable, queries, *, mesh, rules=None, k: int = 1,
                    threshold: float | jnp.ndarray | None = None,
                    backend: str | BackendFn | None = None,
                    valid_rows: int | jnp.ndarray | None = None,
-                   merge: str = "auto") -> AMSearchResult:
+                   merge: str = "auto", matches: int | None = None):
     """Row-partitioned search over the ``model`` mesh axis (multi-bank merge).
 
     The table is split into ``mesh.shape[rules.tp]`` banks
@@ -832,9 +1091,17 @@ def search_sharded(table: AMTable, queries, *, mesh, rules=None, k: int = 1,
         merge, O(k * log banks) traffic), or ``"auto"`` (tree at >=
         :data:`TREE_MERGE_MIN_BANKS` banks).  Any bank count works with
         either strategy, including 1 and non-powers-of-two.
+      matches: multi-match mode, :func:`search` semantics.  Per-bank
+        fixed-width candidate windows ride the very same contract-3 merge as
+        top-k; per-bank within-threshold counts are ``psum``-reduced over
+        the bank axis, so ``match_count`` is the exact global count and
+        ``overflow = match_count > M`` subsumes an OR of per-bank overflow
+        flags (a bank-local overflow implies the global count exceeds M).
+        Both merge topologies produce identical results.
 
     Returns:
-      :class:`AMSearchResult`, bitwise-identical to :func:`search` on one
+      :class:`AMSearchResult` — or :class:`AMMultiMatchResult` with
+      ``matches=`` — bitwise-identical to :func:`search` on one
       device for every merge strategy: per-bank candidate lists are each
       ordered by (distance, global row index) and both merges resolve ties
       to the lowest global row index exactly like the single-device
@@ -863,22 +1130,38 @@ def search_sharded(table: AMTable, queries, *, mesh, rules=None, k: int = 1,
 
     if k < 1:
         raise ValueError(f"k must be >= 1, got {k}")
+    if matches is not None:
+        if k != 1:
+            raise ValueError(
+                f"pass either k= or matches=, not both (k={k}, "
+                f"matches={matches})")
+        if matches < 1:
+            raise ValueError(f"matches must be >= 1, got {matches}")
     rules = rules or dist_specs.make_rules(mesh, "tp")
     axis = rules.tp
     n_banks = mesh.shape[axis]
     strategy = resolve_merge(merge, n_banks)
     queries, squeeze = _prep_queries(table, queries)
     be = _resolve_backend(backend)
+    if table.care is not None:
+        _care_kwargs(table, be)         # masked-capability check (raises)
     bits, distance_mode = table.bits, table.distance
 
     n = table.n_rows
-    k_eff = min(k, n)
+    k_eff = min(matches if matches is not None else k, n)
     pad = (-n) % n_banks
     codes = jnp.pad(table.codes, ((0, pad), (0, 0)))
+    # padded care rows are all-don't-care (0), but like padded codes rows
+    # they sit at index >= n >= valid_rows and are masked to +inf anyway
+    care = (None if table.care is None
+            else jnp.pad(table.care, ((0, pad), (0, 0))))
     local_n = (n + pad) // n_banks
     k_local = min(k_eff, local_n)
     vr = jnp.asarray(n if valid_rows is None else valid_rows, jnp.int32)
-    use_fused = be.fused is not None and 1 <= k_local <= FUSED_K_MAX
+    use_fused = (be.fused is not None and 1 <= k_local <= FUSED_K_MAX
+                 and (matches is None or be.fused_count))
+    thr_q = (None if matches is None
+             else _match_threshold(threshold, queries.shape[0]))
 
     # data-parallel query sharding: each dp shard searches its own slice
     dp_axes = tuple(rules.dp or ())
@@ -889,32 +1172,63 @@ def search_sharded(table: AMTable, queries, *, mesh, rules=None, k: int = 1,
     q_spec = rules.am_queries_dp() if shard_queries else rules.am_queries()
     out_batch = rules.dp if shard_queries else None
 
-    def _bank_body(codes_local, q, vr):
+    def _bank_body(codes_local, q, vr, *extra):
         """Per-bank local top-k + the cross-bank candidate merge."""
+        it = iter(extra)
+        care_local = next(it) if care is not None else None
+        thr_l = next(it) if matches is not None else None
+        ckw = {} if care_local is None else {"care": care_local}
         base = jax.lax.axis_index(axis) * local_n
+        cl = None
         if use_fused:
             # the bank's slice of the global live-row mask, applied in-kernel
             vr_local = jnp.clip(vr - base, 0, local_n)
-            il, dl = be.fused(q, codes_local, bits, distance_mode,
-                              k=k_local, valid_rows=vr_local)
+            if matches is not None:
+                il, dl, cl = be.fused(q, codes_local, bits, distance_mode,
+                                      k=k_local, valid_rows=vr_local,
+                                      count_le=thr_l, **ckw)
+            else:
+                il, dl = be.fused(q, codes_local, bits, distance_mode,
+                                  k=k_local, valid_rows=vr_local, **ckw)
         else:
-            d = be.dense(q, codes_local, bits,
-                         distance_mode).astype(jnp.float32)
+            d = be.dense(q, codes_local, bits, distance_mode,
+                         **ckw).astype(jnp.float32)
             row = base + jnp.arange(local_n)
             d = jnp.where(row[None, :] < vr, d, jnp.inf)  # mask dead/pad rows
+            if matches is not None:
+                cl = jnp.sum(d <= thr_l, axis=1).astype(jnp.int32)
             neg, il = jax.lax.top_k(-d, k_local)
             dl = -neg
         gi = (il + base).astype(jnp.int32)
-        return _merge_bank_candidates(dl, gi, axis=axis, n_banks=n_banks,
-                                      k=k_eff, strategy=strategy)
+        gi, dl = _merge_bank_candidates(dl, gi, axis=axis, n_banks=n_banks,
+                                        k=k_eff, strategy=strategy)
+        if matches is None:
+            return gi, dl
+        # exact global match count: each bank counted disjoint rows
+        return gi, dl, jax.lax.psum(cl, axis)
 
     # Outputs are replicated over `model` by construction (both merges end
     # with every bank holding the same candidates), but 0.4.x's replication
     # checker can't see through the collective -> sort/top_k chain, so the
     # check is disabled.
-    idx, dist = jax.shard_map(
+    args = [codes, queries, vr]
+    in_specs = [rules.am_table(), q_spec, P()]
+    out_specs = [P(out_batch, None), P(out_batch, None)]
+    if care is not None:
+        args.append(care)
+        in_specs.append(rules.am_table())
+    if matches is not None:
+        args.append(thr_q)
+        in_specs.append(q_spec)
+        out_specs.append(P(out_batch))
+    out = jax.shard_map(
         _bank_body, mesh=mesh,
-        in_specs=(rules.am_table(), q_spec, P()),
-        out_specs=(P(out_batch, None), P(out_batch, None)),
-        check_vma=False)(codes, queries, vr)
-    return _finalize(idx, dist, threshold, squeeze)
+        in_specs=tuple(in_specs),
+        out_specs=tuple(out_specs),
+        check_vma=False)(*args)
+    if matches is None:
+        idx, dist = out
+        return _finalize(idx, dist, threshold, squeeze)
+    idx, dist, count = out
+    dist, idx = _pad_candidates(dist, idx, matches)
+    return _finalize_matches(idx, dist, count, thr_q, matches, squeeze)

@@ -30,6 +30,14 @@ Two kernels share that tiling:
   O(Q*N) to O(Q*k).  A prefetched ``valid_rows`` scalar masks dead slab
   rows in-kernel (distance +inf), and ties are broken by lowest global row
   index — bitwise the ordering of ``lax.top_k`` over the dense matrix.
+
+Both kernels optionally take a per-row **care plane** (ternary/don't-care
+cells, the FeCAM TCAM mode): masked search accumulates mismatches directly as
+``sum_m onehot_m(q) . (care & 1[t != m])`` — one extra AND on the stored-side
+one-hot — which for an all-ones plane reproduces the unmasked integers
+bit-for-bit (see :func:`_accumulate`).  The streaming kernel additionally
+offers an in-kernel per-query **threshold count** (multi-match
+``match_count``) folded into the same N-block pass.
 """
 
 from __future__ import annotations
@@ -42,8 +50,41 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _cam_search_kernel(q_ref, t_ref, out_ref, acc_ref, *, levels: int,
-                       d_total: int, nk: int):
+def _accumulate(q, t, c, acc, levels: int):
+    """One D-block of Gram accumulation; ``c`` selects the ternary variant.
+
+    Unmasked (``c is None``): accumulates *match* counts, the original
+    one-hot reformulation (the caller finalises ``D - acc``).  Masked:
+    accumulates *mismatch* counts directly — per level m the stored-side
+    one-hot becomes ``(t != m) & care``, i.e. the paper's popcount reduction
+    with one extra AND against the don't-care plane:
+
+        sum_m 1[q = m] * (care * 1[t != m]) = care * 1[q != t]
+
+    for any in-range q.  An all-ones care plane therefore yields exactly
+    ``1[q != t]`` summed over D — the same integers the unmasked path's
+    ``D - #matches`` finalisation produces, so all-care masked search is
+    bitwise-identical to unmasked search while sharing none of its trace.
+    """
+    care = None if c is None else (c != 0)
+    for m in range(levels):
+        a = (q == m).astype(jnp.bfloat16)
+        if care is None:
+            b = (t == m).astype(jnp.bfloat16)
+        else:
+            b = ((t != m) & care).astype(jnp.bfloat16)
+        acc = acc + jax.lax.dot_general(
+            a, b, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    return acc
+
+
+def _cam_search_kernel(*refs, levels: int, d_total: int, nk: int,
+                       masked: bool):
+    it = iter(refs)
+    q_ref, t_ref = next(it), next(it)
+    c_ref = next(it) if masked else None
+    out_ref, acc_ref = next(it), next(it)
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -52,51 +93,62 @@ def _cam_search_kernel(q_ref, t_ref, out_ref, acc_ref, *, levels: int,
 
     q = q_ref[...]  # (bq, bd) int8 symbols
     t = t_ref[...]  # (bn, bd) int8 symbols
-    acc = acc_ref[...]
-    for m in range(levels):
-        a = (q == m).astype(jnp.bfloat16)
-        b = (t == m).astype(jnp.bfloat16)
-        acc = acc + jax.lax.dot_general(
-            a, b, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)
-    acc_ref[...] = acc
+    c = None if c_ref is None else c_ref[...]  # (bn, bd) int8 care flags
+    acc_ref[...] = _accumulate(q, t, c, acc_ref[...], levels)
 
     @pl.when(k == nk - 1)
     def _finalize():
-        out_ref[...] = (jnp.float32(d_total) - acc_ref[...]).astype(jnp.int32)
+        acc = acc_ref[...]
+        out = acc if masked else jnp.float32(d_total) - acc
+        out_ref[...] = out.astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("levels", "block_q", "block_n",
                                              "block_d", "interpret"))
 def cam_search(queries: jnp.ndarray, table: jnp.ndarray, *, levels: int,
-               block_q: int = 128, block_n: int = 128, block_d: int = 512,
+               care: jnp.ndarray | None = None, block_q: int = 128,
+               block_n: int = 128, block_d: int = 512,
                interpret: bool = False) -> jnp.ndarray:
     """Mismatch-count matrix between ``queries`` (Q, D) and ``table`` (N, D).
 
     Inputs are int8 symbols in [0, levels); Q, N, D must be multiples of the
     block sizes (the ops wrapper pads).  Returns (Q, N) int32.
+
+    ``care`` is an optional (N, D) int8 don't-care plane tiled like
+    ``table``: positions where ``care == 0`` never count as mismatches
+    (ternary CAM cells).  All-care is bitwise-identical to ``care=None``
+    (see :func:`_accumulate`); the unmasked trace is unchanged.
     """
     qn, d = queries.shape
     tn, d2 = table.shape
     assert d == d2, (d, d2)
     assert qn % block_q == 0 and tn % block_n == 0 and d % block_d == 0, (
         (qn, tn, d), (block_q, block_n, block_d))
+    masked = care is not None
+    if masked:
+        assert care.shape == table.shape, (care.shape, table.shape)
     nk = d // block_d
 
     kernel = functools.partial(_cam_search_kernel, levels=levels, d_total=d,
-                               nk=nk)
+                               nk=nk, masked=masked)
+    in_specs = [
+        pl.BlockSpec((block_q, block_d), lambda i, j, k: (i, k)),
+        pl.BlockSpec((block_n, block_d), lambda i, j, k: (j, k)),
+    ]
+    operands = [queries, table]
+    if masked:
+        in_specs.append(pl.BlockSpec((block_n, block_d),
+                                     lambda i, j, k: (j, k)))
+        operands.append(care)
     return pl.pallas_call(
         kernel,
         grid=(qn // block_q, tn // block_n, nk),
-        in_specs=[
-            pl.BlockSpec((block_q, block_d), lambda i, j, k: (i, k)),
-            pl.BlockSpec((block_n, block_d), lambda i, j, k: (j, k)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_q, block_n), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((qn, tn), jnp.int32),
         scratch_shapes=[pltpu.VMEM((block_q, block_n), jnp.float32)],
         interpret=interpret,
-    )(queries, table)
+    )(*operands)
 
 
 # ---------------------------------------------------------------------------
@@ -136,10 +188,18 @@ def _topk_merge(best_d, best_i, cand_d, cand_i, k: int):
     return jnp.concatenate(out_d, axis=1), jnp.concatenate(out_i, axis=1)
 
 
-def _cam_search_topk_kernel(vr_ref, q_ref, t_ref, out_i_ref, out_d_ref,
-                            acc_ref, best_d_ref, best_i_ref, *, levels: int,
-                            d_total: int, k: int, block_n: int, nj: int,
-                            nk: int):
+def _cam_search_topk_kernel(vr_ref, *refs, levels: int, d_total: int, k: int,
+                            block_n: int, nj: int, nk: int, masked: bool,
+                            counted: bool):
+    it = iter(refs)
+    q_ref, t_ref = next(it), next(it)
+    c_ref = next(it) if masked else None
+    thr_ref = next(it) if counted else None
+    out_i_ref, out_d_ref = next(it), next(it)
+    out_c_ref = next(it) if counted else None
+    acc_ref, best_d_ref, best_i_ref = next(it), next(it), next(it)
+    cnt_ref = next(it) if counted else None
+
     j = pl.program_id(1)
     kk = pl.program_id(2)
 
@@ -147,6 +207,8 @@ def _cam_search_topk_kernel(vr_ref, q_ref, t_ref, out_i_ref, out_d_ref,
     def _init_best():
         best_d_ref[...] = jnp.full_like(best_d_ref, jnp.inf)
         best_i_ref[...] = jnp.full_like(best_i_ref, jnp.int32(_NO_ROW))
+        if counted:
+            cnt_ref[...] = jnp.zeros_like(cnt_ref)
 
     @pl.when(kk == 0)
     def _init_acc():
@@ -154,14 +216,8 @@ def _cam_search_topk_kernel(vr_ref, q_ref, t_ref, out_i_ref, out_d_ref,
 
     q = q_ref[...]  # (bq, bd) int8 symbols
     t = t_ref[...]  # (bn, bd) int8 symbols
-    acc = acc_ref[...]
-    for m in range(levels):
-        a = (q == m).astype(jnp.bfloat16)
-        b = (t == m).astype(jnp.bfloat16)
-        acc = acc + jax.lax.dot_general(
-            a, b, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)
-    acc_ref[...] = acc
+    c = None if c_ref is None else c_ref[...]  # (bn, bd) int8 care flags
+    acc_ref[...] = _accumulate(q, t, c, acc_ref[...], levels)
 
     # D accumulation for block j is complete: fold its bn candidates into the
     # running top-k.  The (bq, bn) distance block dies here, in VMEM.
@@ -169,18 +225,27 @@ def _cam_search_topk_kernel(vr_ref, q_ref, t_ref, out_i_ref, out_d_ref,
     def _merge():
         row = (j * block_n
                + jax.lax.broadcasted_iota(jnp.int32, (1, block_n), 1))
-        d = jnp.float32(d_total) - acc_ref[...]
+        acc = acc_ref[...]
+        d = acc if masked else jnp.float32(d_total) - acc
         cand_d = jnp.where(row < vr_ref[0], d, jnp.inf)   # dead/pad rows
         cand_i = jnp.broadcast_to(row, d.shape)
         best_d, best_i = _topk_merge(best_d_ref[...], best_i_ref[...],
                                      cand_d, cand_i, k)
         best_d_ref[...] = best_d
         best_i_ref[...] = best_i
+        if counted:
+            # Rows past valid_rows sit at +inf and a threshold is finite, so
+            # dead/pad rows can never inflate the count.
+            within = (cand_d <= thr_ref[...]).astype(jnp.int32)
+            cnt_ref[...] = cnt_ref[...] + jnp.sum(within, axis=1,
+                                                  keepdims=True)
 
     @pl.when((j == nj - 1) & (kk == nk - 1))
     def _finalize():
         out_i_ref[...] = best_i_ref[...]
         out_d_ref[...] = best_d_ref[...]
+        if counted:
+            out_c_ref[...] = cnt_ref[...]
 
 
 @functools.partial(jax.jit, static_argnames=("levels", "k", "block_q",
@@ -188,9 +253,10 @@ def _cam_search_topk_kernel(vr_ref, q_ref, t_ref, out_i_ref, out_d_ref,
                                              "interpret"))
 def cam_search_topk(queries: jnp.ndarray, table: jnp.ndarray,
                     valid_rows: jnp.ndarray, *, levels: int, k: int,
+                    care: jnp.ndarray | None = None,
+                    count_le: jnp.ndarray | None = None,
                     block_q: int = 128, block_n: int = 128,
-                    block_d: int = 512, interpret: bool = False
-                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+                    block_d: int = 512, interpret: bool = False):
     """Streaming top-k search: ((Q, k) int32 rows, (Q, k) f32 distances).
 
     Same inputs and tiling rules as :func:`cam_search`, plus a traced
@@ -199,6 +265,13 @@ def cam_search_topk(queries: jnp.ndarray, table: jnp.ndarray,
     slabs need no host-side masking.  Rows come back best-first, ascending
     (distance, row index) — bitwise ``lax.top_k`` over the dense masked
     matrix.  ``k`` must be <= N; HBM output is O(Q*k).
+
+    ``care`` is an optional (N, D) int8 don't-care plane (see
+    :func:`cam_search`).  ``count_le`` is an optional (Q, 1) f32 per-query
+    threshold: when given, a third (Q, 1) int32 output counts the live rows
+    at distance <= threshold — accumulated block-by-block in VMEM alongside
+    the running top-k, so multi-match ``match_count`` costs no extra pass
+    over the table.  Returns a 2-tuple without ``count_le``, a 3-tuple with.
     """
     qn, d = queries.shape
     tn, d2 = table.shape
@@ -206,33 +279,59 @@ def cam_search_topk(queries: jnp.ndarray, table: jnp.ndarray,
     assert qn % block_q == 0 and tn % block_n == 0 and d % block_d == 0, (
         (qn, tn, d), (block_q, block_n, block_d))
     assert 1 <= k <= tn, (k, tn)
+    masked = care is not None
+    counted = count_le is not None
+    if masked:
+        assert care.shape == table.shape, (care.shape, table.shape)
+    if counted:
+        assert count_le.shape == (qn, 1), (count_le.shape, qn)
     nj, nk = tn // block_n, d // block_d
 
     kernel = functools.partial(_cam_search_topk_kernel, levels=levels,
-                               d_total=d, k=k, block_n=block_n, nj=nj, nk=nk)
+                               d_total=d, k=k, block_n=block_n, nj=nj, nk=nk,
+                               masked=masked, counted=counted)
+    in_specs = [
+        pl.BlockSpec((block_q, block_d), lambda i, j, kk, vr: (i, kk)),
+        pl.BlockSpec((block_n, block_d), lambda i, j, kk, vr: (j, kk)),
+    ]
+    operands = [queries, table]
+    if masked:
+        in_specs.append(pl.BlockSpec((block_n, block_d),
+                                     lambda i, j, kk, vr: (j, kk)))
+        operands.append(care)
+    if counted:
+        in_specs.append(pl.BlockSpec((block_q, 1),
+                                     lambda i, j, kk, vr: (i, 0)))
+        operands.append(count_le)
+    out_specs = [
+        pl.BlockSpec((block_q, k), lambda i, j, kk, vr: (i, 0)),
+        pl.BlockSpec((block_q, k), lambda i, j, kk, vr: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((qn, k), jnp.int32),
+        jax.ShapeDtypeStruct((qn, k), jnp.float32),
+    ]
+    scratch_shapes = [
+        pltpu.VMEM((block_q, block_n), jnp.float32),
+        pltpu.VMEM((block_q, k), jnp.float32),
+        pltpu.VMEM((block_q, k), jnp.int32),
+    ]
+    if counted:
+        out_specs.append(pl.BlockSpec((block_q, 1),
+                                      lambda i, j, kk, vr: (i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((qn, 1), jnp.int32))
+        scratch_shapes.append(pltpu.VMEM((block_q, 1), jnp.int32))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(qn // block_q, nj, nk),
-        in_specs=[
-            pl.BlockSpec((block_q, block_d), lambda i, j, kk, vr: (i, kk)),
-            pl.BlockSpec((block_n, block_d), lambda i, j, kk, vr: (j, kk)),
-        ],
-        out_specs=[
-            pl.BlockSpec((block_q, k), lambda i, j, kk, vr: (i, 0)),
-            pl.BlockSpec((block_q, k), lambda i, j, kk, vr: (i, 0)),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((block_q, block_n), jnp.float32),
-            pltpu.VMEM((block_q, k), jnp.float32),
-            pltpu.VMEM((block_q, k), jnp.int32),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch_shapes,
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((qn, k), jnp.int32),
-            jax.ShapeDtypeStruct((qn, k), jnp.float32),
-        ],
+        out_shape=out_shape,
         interpret=interpret,
-    )(jnp.asarray(valid_rows, jnp.int32).reshape(1), queries, table)
+    )(jnp.asarray(valid_rows, jnp.int32).reshape(1), *operands)

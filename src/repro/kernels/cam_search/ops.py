@@ -34,6 +34,18 @@ natural order of ``lax.top_k`` over a dense matrix, the fused kernel's
 selection rule, and the order the sharded multi-bank merge in
 :mod:`repro.core.am` reproduces; a backend that breaks it will disagree
 bitwise with the others and with ``search_sharded``.
+
+Masked (ternary) tier
+---------------------
+Every helper accepts an optional keyword-only ``care`` plane, (N, D) 0/1
+flags aligned with ``table``: positions where ``care == 0`` are don't-care
+TCAM cells that never count as mismatches.  An all-ones plane is
+bitwise-identical to ``care=None`` on both tiers (same exact integers out of
+the kernel; see ``kernel._accumulate``), and ``care=None`` leaves today's
+unmasked trace untouched.  :func:`topk_fused` additionally takes
+``count_le`` — per-query distance thresholds — and then returns a third
+(Q,) int32 array counting live rows within threshold (the multi-match
+``match_count``), accumulated inside the same streaming pass.
 """
 
 from __future__ import annotations
@@ -62,12 +74,15 @@ def _pad_to(x: jnp.ndarray, axis: int, multiple: int, value) -> jnp.ndarray:
 
 @functools.partial(jax.jit, static_argnames=("bits", "interpret"))
 def mismatch_counts(queries: jnp.ndarray, table: jnp.ndarray, bits: int = 3,
-                    interpret: bool | None = None) -> jnp.ndarray:
+                    interpret: bool | None = None, *,
+                    care: jnp.ndarray | None = None) -> jnp.ndarray:
     """(Q, D) queries vs (N, D) stored codes -> (Q, N) int32 mismatch counts.
 
     Symbols in [0, 2**bits).  Pads Q/N/D up to block multiples; padded D
     positions hold the same sentinel on both sides (always match => no skew)
-    and padded rows/queries are sliced away.
+    and padded rows/queries are sliced away.  An optional ``care`` plane
+    (N, D) marks don't-care positions with 0 (never mismatches); its padded
+    positions hold 0, so padding stays skew-free on the masked path too.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -83,29 +98,42 @@ def mismatch_counts(queries: jnp.ndarray, table: jnp.ndarray, bits: int = 3,
 
     qp = _pad_to(_pad_to(q, 0, bq, 0), 1, bd, 0)
     tp = _pad_to(_pad_to(t, 0, bn, 0), 1, bd, 0)
-    out = _k.cam_search(qp, tp, levels=1 << bits, block_q=bq, block_n=bn,
-                        block_d=bd, interpret=interpret)
+    cp = None
+    if care is not None:
+        cp = _pad_to(_pad_to(jnp.asarray(care, jnp.int8), 0, bn, 0), 1, bd, 0)
+    out = _k.cam_search(qp, tp, levels=1 << bits, care=cp, block_q=bq,
+                        block_n=bn, block_d=bd, interpret=interpret)
     return out[:qn, :tn]
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "interpret"))
 def exact_match(queries: jnp.ndarray, table: jnp.ndarray, bits: int = 3,
-                interpret: bool | None = None) -> jnp.ndarray:
-    """(Q, N) bool exact word-match flags (the digital CAM output)."""
-    return mismatch_counts(queries, table, bits, interpret) == 0
+                interpret: bool | None = None, *,
+                care: jnp.ndarray | None = None) -> jnp.ndarray:
+    """(Q, N) bool exact word-match flags (the digital CAM output).
+
+    With a ``care`` plane this is the ternary-CAM match line: don't-care
+    positions are excluded, so a row matches iff every *cared* position
+    agrees (wildcard/prefix matching).
+    """
+    return mismatch_counts(queries, table, bits, interpret, care=care) == 0
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "interpret"))
 def best_row(queries: jnp.ndarray, table: jnp.ndarray, bits: int = 3,
-             interpret: bool | None = None) -> jnp.ndarray:
+             interpret: bool | None = None, *,
+             care: jnp.ndarray | None = None) -> jnp.ndarray:
     """(Q,) int32 nearest-row readout (analog ML-discharge ranking)."""
-    return jnp.argmin(mismatch_counts(queries, table, bits, interpret),
+    return jnp.argmin(mismatch_counts(queries, table, bits, interpret,
+                                      care=care),
                       axis=-1).astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "bits", "interpret"))
 def topk(queries: jnp.ndarray, table: jnp.ndarray, k: int = 1, bits: int = 3,
-         interpret: bool | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+         interpret: bool | None = None, *,
+         care: jnp.ndarray | None = None
+         ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """k nearest rows per query: ((Q, k) int32 indices, (Q, k) int32 counts).
 
     ``jax.lax.top_k`` over the negated mismatch matrix — rows ordered by
@@ -113,7 +141,7 @@ def topk(queries: jnp.ndarray, table: jnp.ndarray, k: int = 1, bits: int = 3,
     ordering the sharded multi-bank merge in :mod:`repro.core.am`
     reproduces).  ``k`` is clamped to the table size.
     """
-    mm = mismatch_counts(queries, table, bits, interpret)
+    mm = mismatch_counts(queries, table, bits, interpret, care=care)
     neg, idx = jax.lax.top_k(-mm, min(k, table.shape[0]))
     return idx.astype(jnp.int32), -neg
 
@@ -121,8 +149,9 @@ def topk(queries: jnp.ndarray, table: jnp.ndarray, k: int = 1, bits: int = 3,
 @functools.partial(jax.jit, static_argnames=("k", "bits", "interpret"))
 def topk_fused(queries: jnp.ndarray, table: jnp.ndarray, k: int = 1,
                bits: int = 3, valid_rows: jnp.ndarray | None = None,
-               interpret: bool | None = None
-               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+               interpret: bool | None = None, *,
+               care: jnp.ndarray | None = None,
+               count_le: jnp.ndarray | None = None):
     """Streaming top-k: ((Q, k) int32 rows, (Q, k) float32 distances).
 
     The fused capability tier: one :func:`~repro.kernels.cam_search.kernel.
@@ -137,6 +166,12 @@ def topk_fused(queries: jnp.ndarray, table: jnp.ndarray, k: int = 1,
     clamped to the table size.  Padded table rows rank strictly after every
     real row (+inf distance, higher index) and are therefore unreachable
     for k <= N.
+
+    ``care`` is the optional (N, D) don't-care plane (module docstring).
+    ``count_le`` — a per-query distance threshold, scalar or (Q,)/(Q, 1) —
+    switches on the in-kernel multi-match counter: the return value becomes
+    a 3-tuple whose third element is (Q,) int32, the number of live rows at
+    distance <= threshold per query.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -152,9 +187,21 @@ def topk_fused(queries: jnp.ndarray, table: jnp.ndarray, k: int = 1,
 
     qp = _pad_to(_pad_to(q, 0, bq, 0), 1, bd, 0)
     tp = _pad_to(_pad_to(t, 0, bn, 0), 1, bd, 0)
+    cp = None
+    if care is not None:
+        cp = _pad_to(_pad_to(jnp.asarray(care, jnp.int8), 0, bn, 0), 1, bd, 0)
+    thr = None
+    if count_le is not None:
+        thr = jnp.broadcast_to(
+            jnp.asarray(count_le, jnp.float32).reshape(-1, 1), (qn, 1))
+        thr = _pad_to(thr, 0, bq, 0.0)
     vr = jnp.asarray(tn if valid_rows is None else valid_rows, jnp.int32)
     vr = jnp.minimum(vr, tn)           # padded rows are never live
-    idx, dist = _k.cam_search_topk(qp, tp, vr, levels=1 << bits, k=k,
-                                   block_q=bq, block_n=bn, block_d=bd,
-                                   interpret=interpret)
-    return idx[:qn], dist[:qn]
+    out = _k.cam_search_topk(qp, tp, vr, levels=1 << bits, k=k, care=cp,
+                             count_le=thr, block_q=bq, block_n=bn,
+                             block_d=bd, interpret=interpret)
+    if count_le is None:
+        idx, dist = out
+        return idx[:qn], dist[:qn]
+    idx, dist, cnt = out
+    return idx[:qn], dist[:qn], cnt[:qn, 0]

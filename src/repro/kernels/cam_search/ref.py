@@ -1,4 +1,9 @@
-"""Pure-jnp oracles for the CAM-search kernels (dense and fused tiers)."""
+"""Pure-jnp oracles for the CAM-search kernels (dense and fused tiers).
+
+Both oracles accept the optional ternary ``care`` plane of the masked tier
+(positions with ``care == 0`` never count as mismatches); ``care=None``
+keeps the original unmasked trace byte-for-byte.
+"""
 
 from __future__ import annotations
 
@@ -9,15 +14,25 @@ import jax.numpy as jnp
 
 
 @jax.jit
-def mismatch_counts(queries: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
-    """(Q, D) x (N, D) int symbols -> (Q, N) int32 #differing positions."""
-    return jnp.sum(queries[:, None, :] != table[None, :, :], axis=-1,
-                   dtype=jnp.int32)
+def mismatch_counts(queries: jnp.ndarray, table: jnp.ndarray,
+                    care: jnp.ndarray | None = None) -> jnp.ndarray:
+    """(Q, D) x (N, D) int symbols -> (Q, N) int32 #differing positions.
+
+    With ``care`` (an (N, D) 0/1 plane aligned with ``table``), a position
+    only counts when it differs AND is cared about — the one extra AND of
+    the ternary-CAM contract.  An all-ones plane reproduces the unmasked
+    integers exactly.
+    """
+    diff = queries[:, None, :] != table[None, :, :]
+    if care is not None:
+        diff = diff & (care[None, :, :] != 0)
+    return jnp.sum(diff, axis=-1, dtype=jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
 def topk(queries: jnp.ndarray, table: jnp.ndarray, k: int = 1,
-         valid_rows: jnp.ndarray | None = None
+         valid_rows: jnp.ndarray | None = None,
+         care: jnp.ndarray | None = None
          ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Fused-tier oracle: ((Q, k) int32 rows, (Q, k) f32 distances).
 
@@ -26,7 +41,7 @@ def topk(queries: jnp.ndarray, table: jnp.ndarray, k: int = 1,
     the lowest row index) that :func:`repro.kernels.cam_search.ops.
     topk_fused` must reproduce bitwise.
     """
-    d = mismatch_counts(queries, table).astype(jnp.float32)
+    d = mismatch_counts(queries, table, care).astype(jnp.float32)
     n = table.shape[0]
     if valid_rows is not None:
         d = jnp.where(jnp.arange(n)[None, :] < valid_rows, d, jnp.inf)

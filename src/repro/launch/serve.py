@@ -39,7 +39,13 @@ CACHE_DIM = 128        # hypervector width of the response-cache key
 CACHE_BITS = 3
 
 
-def main():
+def parse_args(argv=None):
+    """Parse the serving driver's CLI flags (``argv=None`` -> ``sys.argv``).
+
+    Split out of :func:`main` so the flag surface is unit-testable without
+    booting an engine: ``tests/test_launch_serve.py`` drives this parser and
+    :func:`build_cache_service` directly.
+    """
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
     ap.add_argument("--smoke", action="store_true", default=True)
@@ -65,7 +71,41 @@ def main():
     ap.add_argument("--am-probes", type=int, default=1, metavar="P",
                     help="sets probed per indexed lookup (only with "
                          "--am-index)")
-    args = ap.parse_args()
+    return ap.parse_args(argv)
+
+
+def build_cache_service(args, mesh, *, start_driver=True):
+    """Build the AM response-cache service the parsed flags describe.
+
+    Returns ``None`` when ``--am-cache 0`` disabled the cache.  Otherwise:
+    a deadline-batched :class:`AMService` — sharded over ``mesh`` iff
+    ``--am-sharded``, merge topology from ``--am-merge`` — holding one
+    ``"responses"`` table (pallas backend, LRU at ``--am-cache`` rows),
+    routed through the IVF tier iff ``--am-index SETS`` with ``--am-probes``
+    probes.  ``start_driver=False`` skips the background driver so tests
+    can step the service deterministically.
+    """
+    if not args.am_cache:
+        return None
+    # deadline-batched: submits queue until the 5 ms flush_after expires;
+    # the background driver owns the deadline, so a half-full bucket
+    # never waits on another submit arriving.
+    svc = AMService(mesh=mesh if args.am_sharded else None,
+                    merge=args.am_merge,
+                    max_batch=max(64, args.requests),
+                    flush_after=0.005, time_fn=time.monotonic)
+    spec = (IndexSpec(sets=args.am_index, probes=args.am_probes)
+            if args.am_index else None)
+    svc.create_table("responses", width=CACHE_DIM, bits=CACHE_BITS,
+                     capacity=args.am_cache, policy="lru",
+                     backend="pallas", index=spec)
+    if start_driver:
+        svc.start_driver()
+    return svc
+
+
+def main(argv=None):
+    args = parse_args(argv)
 
     cfg = get_config(ALIASES.get(args.arch, args.arch), smoke=args.smoke)
     mesh = make_test_mesh()
@@ -80,21 +120,8 @@ def main():
             for _ in range(max(2, args.requests // 2))]
     workload = [pool[rng.integers(len(pool))] for _ in range(args.requests)]
 
-    svc = None
-    if args.am_cache:
-        # deadline-batched: submits queue until the 5 ms flush_after expires;
-        # the background driver owns the deadline, so a half-full bucket
-        # never waits on another submit arriving.
-        svc = AMService(mesh=mesh if args.am_sharded else None,
-                        merge=args.am_merge,
-                        max_batch=max(64, args.requests),
-                        flush_after=0.005, time_fn=time.monotonic)
-        spec = (IndexSpec(sets=args.am_index, probes=args.am_probes)
-                if args.am_index else None)
-        svc.create_table("responses", width=CACHE_DIM, bits=CACHE_BITS,
-                         capacity=args.am_cache, policy="lru",
-                         backend="pallas", index=spec)
-        svc.start_driver()
+    svc = build_cache_service(args, mesh)
+    if svc is not None:
         proj = hdc.token_key_projection(cfg.vocab_size, CACHE_DIM)
         keys = [np.asarray(hdc.prompt_key(proj, p, CACHE_BITS))
                 for p in workload]

@@ -80,6 +80,18 @@ Design — why this never compiles or syncs per request:
   ``stats()["index"]`` reports probe counts and candidate fractions.
   ``probes == sets`` is bitwise the flat search; fewer probes trade
   certified recall for O(S + probes * N/S) work per lookup.
+* **Ternary tables and multi-match lookups.**  ``create_table(...,
+  ternary=True)`` allocates a care-mask plane beside the code slab (a
+  masked-capable backend required); ``append(..., care=)`` writes per-row
+  don't-care patterns (omitted rows default to all-care, i.e. plain
+  exact-match rows), and compaction carries the care plane with its rows.
+  ``submit(..., matches=M)`` switches a lookup to TCAM multi-match
+  semantics — all rows within threshold in an M-wide (distance, row)-ordered
+  window plus exact ``match_count``/``overflow`` — through the same jitted
+  bucket dispatch (``matches`` joins the group signature), same padding
+  buckets, same compile accounting.  Indexed tables refuse ``matches=``
+  (the coarse pass prunes rows multi-match must see) and refuse
+  ``ternary`` (a wildcard row belongs to no single set).
 * **Eviction is part of the API.**  ``AMTable.meta`` carries (insert,
   last-hit) timestamps (:data:`am.META_INSERT` / :data:`am.META_LAST_HIT`).
   Exact hits update last-hit *inside* the compiled dispatch via
@@ -203,6 +215,7 @@ class SearchRequest:
     k: int = 1
     threshold: float | None = None
     backend: str | None = None     # None -> the table's default backend
+    matches: int | None = None     # multi-match window width (TCAM mode)
     submitted_at: float = 0.0
 
 
@@ -225,6 +238,8 @@ class SearchResponse:
     matched: np.ndarray            # (k,) bool — within the request threshold
     value: Any = None              # payload of the best row on an exact hit
     admitted: bool = True          # False: shed by admission control
+    match_count: int | None = None  # multi-match only: total matching rows
+    overflow: bool | None = None    # multi-match only: count > window width
 
     @property
     def hit(self) -> bool:
@@ -352,7 +367,9 @@ class _InFlightGroup:
     table: _TableState
     futs: list
     slot_of: list
-    arrays: tuple                  # (idx, dist, exact, matched) on device
+    arrays: tuple                  # (idx, dist, exact, matched, count,
+    #                                 overflow) on device; the last two are
+    #                                 None unless the group is multi-match
     new_meta: Any                  # post-touch meta, written back if fresh
     version: int                   # table.version at launch
     values: list                   # payload list as of launch
@@ -491,7 +508,8 @@ class AMService:
                      burst: float | None = None,
                      max_queue: int | None = None,
                      admission: str = "reject",
-                     index: IndexSpec | None = None) -> None:
+                     index: IndexSpec | None = None,
+                     ternary: bool = False) -> None:
         """Allocate an empty capacity-bounded table under ``name``.
 
         Admission control (all optional): ``qps_budget`` is a sustained
@@ -509,6 +527,13 @@ class AMService:
         with sub-linear work at ``probes < sets``.  Appends extend the
         index incrementally; evictions/deletes rebuild it (compaction
         renumbers rows).  ``stats()`` grows an ``"index"`` block.
+
+        ``ternary`` allocates a per-row care-mask plane alongside the code
+        slab (all-ones for rows appended without an explicit ``care=``, so
+        binary rows in a ternary table behave exactly like a plain table's).
+        Requires a backend with the ``"masked"`` capability tier and is
+        mutually exclusive with ``index`` (the coarse pass has no wildcard
+        semantics — a don't-care row belongs to no single set).
         """
         if name in self._tables:
             raise ValueError(f"table {name!r} already exists")
@@ -532,9 +557,21 @@ class AMService:
                     f"index sets ({index.sets}) exceeds table capacity "
                     f"({capacity}); every set needs at least one row slot")
         am.get_backend(backend)          # fail fast on unknown backends
-        table = am.make_table(jnp.zeros((capacity, width), jnp.int32),
-                              bits=bits, distance=distance,
-                              meta=am.serving_meta(capacity, 0.0))
+        if ternary:
+            if index is not None:
+                raise ValueError(
+                    "ternary tables cannot use the index tier: the "
+                    "set-associative coarse pass has no wildcard semantics")
+            if "masked" not in am.backend_capabilities(backend):
+                raise ValueError(
+                    f"backend {backend!r} lacks the 'masked' capability "
+                    "tier required for ternary tables")
+        table = am.make_table(
+            jnp.zeros((capacity, width), jnp.int32),
+            bits=bits, distance=distance,
+            meta=am.serving_meta(capacity, 0.0),
+            care_mask=(jnp.ones((capacity, width), jnp.int32)
+                       if ternary else None))
         if burst is None:
             burst = max(1.0, float(qps_budget)) if qps_budget else 1.0
         else:
@@ -579,7 +616,7 @@ class AMService:
             ) from None
 
     def append(self, name: str, codes, values=None, *,
-               now: float | None = None) -> None:
+               care=None, now: float | None = None) -> None:
         """Insert rows (evicting per policy first if capacity requires).
 
         ``values`` carries one host payload per appended row (any object);
@@ -587,6 +624,12 @@ class AMService:
         hits as ``SearchResponse.value``.  Appends overlap in-flight
         searches: dispatched groups snapshot the table at launch, so this
         never blocks on a pending readback.
+
+        ``care`` (ternary tables only) gives each appended row its
+        care-mask plane, same shape as ``codes``; omitted, ternary rows
+        default to all-care (plain exact-match rows).  Passing ``care``
+        to a non-ternary table raises — create the table with
+        ``ternary=True`` first.
         """
         codes = np.asarray(codes, np.int32)
         if codes.ndim == 1:
@@ -596,6 +639,18 @@ class AMService:
             if codes.ndim != 2 or codes.shape[1] != t.table.width:
                 raise ValueError(f"append codes shape {codes.shape} != "
                                  f"(m, {t.table.width})")
+            if care is not None and t.table.care is None:
+                raise ValueError(
+                    f"table {name!r} is not ternary; create it with "
+                    "ternary=True to append care masks")
+            if t.table.care is not None:
+                care = (np.ones_like(codes) if care is None
+                        else np.asarray(care, np.int32))
+                if care.ndim == 1:
+                    care = care[None]
+                if care.shape != codes.shape:
+                    raise ValueError(f"append care shape {care.shape} != "
+                                     f"codes shape {codes.shape}")
             m = codes.shape[0]
             if m > t.capacity:
                 raise TableFullError(
@@ -614,7 +669,12 @@ class AMService:
                 codes=jax.lax.dynamic_update_slice(
                     t.table.codes, jnp.asarray(codes), (t.n, 0)),
                 meta=jax.lax.dynamic_update_slice(
-                    t.table.meta, am.serving_meta(m, now), (t.n, 0)))
+                    t.table.meta, am.serving_meta(m, now), (t.n, 0)),
+                care=(t.table.care if t.table.care is None else
+                      jax.lax.dynamic_update_slice(
+                          t.table.care,
+                          jnp.asarray((care != 0).astype(np.int32)),
+                          (t.n, 0))))
             t.values.extend(values)
             t.n += m
             t.appends += m
@@ -695,6 +755,8 @@ class AMService:
     def _compact(self, t: _TableState, kill: np.ndarray) -> None:
         """Delete masked live rows and repack survivors at the slab front."""
         live = am.AMTable(codes=t.table.codes[:t.n], meta=t.table.meta[:t.n],
+                          care=(None if t.table.care is None
+                                else t.table.care[:t.n]),
                           bits=t.table.bits, distance=t.table.distance)
         live = am.delete(live, kill)               # the eviction-mask path
         keep = np.flatnonzero(~kill)
@@ -702,7 +764,10 @@ class AMService:
             t.table,
             codes=jnp.zeros_like(t.table.codes).at[:live.n_rows]
                      .set(live.codes),
-            meta=jnp.zeros_like(t.table.meta).at[:live.n_rows].set(live.meta))
+            meta=jnp.zeros_like(t.table.meta).at[:live.n_rows].set(live.meta),
+            care=(t.table.care if t.table.care is None else
+                  jnp.ones_like(t.table.care).at[:live.n_rows]
+                     .set(live.care)))
         t.values = [t.values[i] for i in keep]
         t.n = live.n_rows
         t.version += 1
@@ -749,13 +814,26 @@ class AMService:
 
     def submit(self, name: str, query, *, k: int = 1,
                threshold: float | None = None,
-               backend: str | None = None) -> PendingSearch:
+               backend: str | None = None,
+               matches: int | None = None) -> PendingSearch:
         """Queue one lookup; returns a handle whose ``result()`` blocks.
 
         Lookups against an empty table resolve immediately as misses —
         the cache-front pattern needs no special casing.  Admission control
         (when configured on the table) runs before anything queues.
+
+        ``matches=M`` switches this lookup to TCAM multi-match semantics:
+        the response carries *all* rows at distance <= ``threshold``
+        (``threshold=None`` — exact matches only) in an M-wide window
+        ordered by ascending (distance, row index), plus ``match_count``
+        and ``overflow``.  Mutually exclusive with ``k`` and unavailable on
+        indexed tables (the coarse pass prunes rows multi-match must see).
         """
+        if matches is not None:
+            if k != 1:
+                raise ValueError("pass either k= or matches=, not both")
+            if matches < 1:
+                raise ValueError(f"matches must be >= 1, got {matches}")
         if k < 1:
             raise ValueError(f"k must be >= 1, got {k}")
         query = np.asarray(query, np.int32)
@@ -768,6 +846,15 @@ class AMService:
                 if query.shape != (t.table.width,):
                     raise ValueError(
                         f"query shape {query.shape} != ({t.table.width},)")
+                if matches is not None and t.index_spec is not None:
+                    raise ValueError(
+                        f"table {name!r} uses the index tier; multi-match "
+                        "needs the full row scan (matches= is unavailable)")
+                if (t.table.care is not None and backend is not None
+                        and "masked" not in am.backend_capabilities(backend)):
+                    raise ValueError(
+                        f"backend {backend!r} lacks the 'masked' tier "
+                        f"required by ternary table {name!r}")
                 over = self._admission_verdict(t, self._now())
                 if over is None:
                     if t.qps_budget is not None:
@@ -778,7 +865,8 @@ class AMService:
                         k=min(k, t.capacity),
                         threshold=(None if threshold is None
                                    else float(threshold)),
-                        backend=backend or t.backend, submitted_at=now)
+                        backend=backend or t.backend, matches=matches,
+                        submitted_at=now)
                     self._next_rid += 1
                     fut = PendingSearch(self, req)
                     if t.n == 0:
@@ -814,7 +902,7 @@ class AMService:
                         k=min(k, t.capacity),
                         threshold=(None if threshold is None
                                    else float(threshold)),
-                        backend=backend or t.backend,
+                        backend=backend or t.backend, matches=matches,
                         submitted_at=self._now())
                     self._next_rid += 1
                     fut = PendingSearch(self, req)
@@ -842,21 +930,24 @@ class AMService:
 
     def lookup(self, name: str, query, *, k: int = 1,
                threshold: float | None = None,
-               backend: str | None = None) -> SearchResponse:
+               backend: str | None = None,
+               matches: int | None = None) -> SearchResponse:
         """Synchronous convenience: submit + flush in one call."""
         return self.submit(name, query, k=k, threshold=threshold,
-                           backend=backend).result()
+                           backend=backend, matches=matches).result()
 
     @staticmethod
     def _miss_response(req: SearchRequest, *,
                        admitted: bool = True) -> SearchResponse:
-        k = req.k
+        mm = req.matches is not None
+        k = req.matches if mm else req.k
         return SearchResponse(
             rid=req.rid, table=req.table,
             indices=np.full((k,), -1, np.int32),
             distances=np.full((k,), np.inf, np.float32),
             exact=np.zeros((k,), bool), matched=np.zeros((k,), bool),
-            admitted=admitted)
+            admitted=admitted,
+            match_count=0 if mm else None, overflow=False if mm else None)
 
     def _resolve_empty(self, t: _TableState, fut: PendingSearch) -> None:
         fut._resolve(self._miss_response(fut.request))
@@ -884,7 +975,8 @@ class AMService:
                 fut._resolve(self._miss_response(r))
                 continue
             t.queued -= 1
-            key = (r.table, r.k, r.backend, r.threshold is not None)
+            key = (r.table, r.k, r.backend, r.threshold is not None,
+                   r.matches)
             groups.setdefault(key, []).append(fut)
         return groups
 
@@ -985,9 +1077,9 @@ class AMService:
         """
         groups = self._take_pending()
         served = 0
-        for (name, k, backend, has_thr), futs in groups.items():
+        for (name, k, backend, has_thr, matches), futs in groups.items():
             self._launch_group(self._state(name), futs, k, backend, has_thr,
-                               now)
+                               matches, now)
             served += len(futs)
         if served:
             self.flushes += 1
@@ -995,7 +1087,7 @@ class AMService:
 
     def _launch_group(self, t: _TableState, futs: list[PendingSearch],
                       k: int, backend: str, has_thr: bool,
-                      now: float) -> _InFlightGroup:
+                      matches: int | None, now: float) -> _InFlightGroup:
         """Lock held: issue one compiled dispatch; no host sync happens here.
 
         Cross-request dedup: identical (query, threshold) rows dispatch
@@ -1026,15 +1118,18 @@ class AMService:
             tv[:q] = [fut.request.threshold for fut in uniq]
             thr = jnp.asarray(tv)
         indexed = t.index is not None
-        idx, dist, exact, matched, new_meta, frac = self._dispatch(
-            t.table, t.index, jnp.asarray(queries),
-            jnp.asarray(t.n, jnp.int32), jnp.asarray(q, jnp.int32), thr,
-            jnp.asarray(now, jnp.float32),
-            k=k, backend=backend, sharded=self._mesh is not None,
-            indexed=indexed,
-            probes=t.index_spec.probes if indexed else 0)
+        idx, dist, exact, matched, count, overflow, new_meta, frac = \
+            self._dispatch(
+                t.table, t.index, jnp.asarray(queries),
+                jnp.asarray(t.n, jnp.int32), jnp.asarray(q, jnp.int32), thr,
+                jnp.asarray(now, jnp.float32),
+                k=k, backend=backend, sharded=self._mesh is not None,
+                indexed=indexed,
+                probes=t.index_spec.probes if indexed else 0,
+                matches=matches)
         g = _InFlightGroup(table=t, futs=futs, slot_of=slot_of,
-                           arrays=(idx, dist, exact, matched),
+                           arrays=(idx, dist, exact, matched, count,
+                                   overflow),
                            new_meta=new_meta, version=t.version,
                            values=t.values, now=now, index_frac=frac)
         self._in_flight.append(g)
@@ -1073,7 +1168,7 @@ class AMService:
         the table version is unchanged since launch — a racing append or
         eviction wins and the stale touch is dropped.
         """
-        (idx, dist, exact, matched), frac = jax.device_get(
+        (idx, dist, exact, matched, count, overflow), frac = jax.device_get(
             (g.arrays, g.index_frac))
         with self._cv:
             t = g.table
@@ -1095,7 +1190,11 @@ class AMService:
                     rid=fut.request.rid, table=t.name, indices=idx[slot],
                     distances=dist[slot], exact=exact[slot],
                     matched=matched[slot],
-                    value=g.values[int(idx[slot, 0])] if hit else None))
+                    value=g.values[int(idx[slot, 0])] if hit else None,
+                    match_count=(None if count is None
+                                 else int(count[slot])),
+                    overflow=(None if overflow is None
+                              else bool(overflow[slot]))))
                 self._wait_samples.append(
                     done_at - fut.request.submitted_at)
             self._cv.notify_all()
@@ -1141,12 +1240,28 @@ class AMService:
 
         @partial(jax.jit,
                  static_argnames=("k", "backend", "sharded", "indexed",
-                                  "probes"))
+                                  "probes", "matches"))
         def dispatch(table, index, queries, n_valid, q_valid, thresholds,
-                     now, *, k, backend, sharded, indexed, probes):
+                     now, *, k, backend, sharded, indexed, probes,
+                     matches=None):
             thr = None if thresholds is None else thresholds[:, None]
-            frac = None
-            if indexed:
+            frac = count = overflow = None
+            if matches is not None:
+                # TCAM multi-match: every row at distance <= threshold in a
+                # fixed M-wide window (ascending (distance, row)), exact
+                # counts and overflow — ternary tables pass their care plane
+                # through am.search's masked tier untouched here
+                if sharded:
+                    res = am.search_sharded(
+                        table, queries, mesh=mesh, rules=rules,
+                        matches=matches, threshold=thr, backend=backend,
+                        valid_rows=n_valid, merge=merge)
+                else:
+                    res = am.search(table, queries, matches=matches,
+                                    threshold=thr, backend=backend,
+                                    valid_rows=n_valid)
+                count, overflow = res.match_count, res.overflow
+            elif indexed:
                 # the set-associative tier: coarse-rank centroids, fine
                 # search only the probed sets' slabs.  The index holds
                 # exactly the live rows, so no valid_rows is needed.
@@ -1172,8 +1287,11 @@ class AMService:
                                 backend=backend, valid_rows=n_valid)
             # LRU maintenance inside the compiled step: exact best-row hits
             # of real (non-padding) queries get their last-hit stamped
+            # (the multi-match priority slot plays best-row's role)
             q_live = jnp.arange(queries.shape[0]) < q_valid
-            hit_rows = jnp.where(q_live & res.exact[:, 0], res.best_row,
+            top = (res.priority_index if matches is not None
+                   else res.best_row)
+            hit_rows = jnp.where(q_live & res.exact[:, 0], top,
                                  table.n_rows)       # n_rows == OOB sentinel
             meta = am.touch(table, hit_rows, now).meta
             if rules is not None:
@@ -1181,16 +1299,17 @@ class AMService:
             idx = jnp.where(jnp.isfinite(res.distances), res.indices, -1)
             dist, exact, matched = res.distances, res.exact, res.matched
             kw = idx.shape[1]
-            if kw < k:
+            want = k if matches is None else matches
+            if kw < want:
                 # an indexed search clamps k to its total slab capacity,
                 # which can sit below a partially filled table's capacity;
                 # pad back out so the response contract width holds
-                pad = ((0, 0), (0, k - kw))
+                pad = ((0, 0), (0, want - kw))
                 idx = jnp.pad(idx, pad, constant_values=-1)
                 dist = jnp.pad(dist, pad, constant_values=jnp.inf)
                 exact = jnp.pad(exact, pad)
                 matched = jnp.pad(matched, pad)
-            return idx, dist, exact, matched, meta, frac
+            return idx, dist, exact, matched, count, overflow, meta, frac
 
         return dispatch
 

@@ -1,0 +1,33 @@
+"""Ternary-CAM workloads over the masked associative-search tier.
+
+The semantics layer above :mod:`repro.core.am`'s care-mask plane: build
+don't-care patterns from *meanings* (prefixes, value ranges) instead of raw
+0/1 planes, and run the classic TCAM workload — longest-prefix-match
+routing — through the ordinary ``am.search(..., matches=M)`` contract.
+
+* :mod:`repro.tcam.masks` — encode integers as multi-bit symbol words and
+  expand prefixes / value ranges into ``(code, care)`` ternary entries (the
+  complementary-FeFET analog-CAM range-matching angle, arXiv 2309.09165).
+* :mod:`repro.tcam.routing` — an LPM routing table stored as a masked
+  :class:`~repro.core.am.AMTable`, resolved by CAM priority (lowest row
+  index among exact masked matches, rows sorted longest-prefix-first).
+
+See ``docs/ARCHITECTURE.md`` "Layer 2.75 — tcam" for the contract and
+``examples/lpm_routing.py`` for a runnable end-to-end workload.
+"""
+
+from repro.tcam.masks import (  # noqa: F401
+    code_to_int,
+    int_to_code,
+    prefix_entries,
+    prefix_entry,
+    range_to_entries,
+)
+from repro.tcam.routing import (  # noqa: F401
+    Route,
+    RoutingTable,
+    build_routing_table,
+    encode_addresses,
+    lookup,
+    lpm_oracle,
+)

@@ -200,8 +200,8 @@ def test_search_k_above_fused_max_falls_back_to_dense():
 
 
 def test_backend_capabilities_registry():
-    assert am.backend_capabilities("pallas") == ("dense", "fused")
-    assert am.backend_capabilities("ref") == ("dense",)
+    assert am.backend_capabilities("pallas") == ("dense", "fused", "masked")
+    assert am.backend_capabilities("ref") == ("dense", "masked")
     assert am.backend_capabilities("analog") == ("dense",)
     with pytest.raises(ValueError):
         am.backend_capabilities("no_such_backend")

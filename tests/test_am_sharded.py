@@ -16,6 +16,11 @@ slices, for dense and fused backend tiers, and through the degenerate cases
 (1 bank, non-power-of-two bank counts, k larger than any bank's rows).
 Data-parallel query sharding (``Rules.am_queries_dp``) is exercised on a
 (data, model) mesh where the query count divides the dp width.
+
+Also covers the ternary tier over banks: all-care masked search must stay
+bitwise-identical to unmasked on both merges, and sharded multi-match
+(per-bank windows through the contract-3 sort, counts psum'd over the bank
+axis) must equal single-device multi-match including ``overflow``.
 """
 
 import os
@@ -86,7 +91,7 @@ SCRIPT = textwrap.dedent("""
     # fused tier per bank (pallas backend): the streaming in-kernel top-k +
     # per-bank valid_rows slice must stay bitwise-identical to the
     # single-device search across banks, distance modes, ties and masks
-    assert am.backend_capabilities("pallas") == ("dense", "fused")
+    assert am.backend_capabilities("pallas") == ("dense", "fused", "masked")
     tie_codes = jax.random.randint(jax.random.fold_in(key, 2), (37, 24), 0, 2)
     for mesh in meshes:
         for distance in ("hamming", "l1"):
@@ -152,6 +157,44 @@ SCRIPT = textwrap.dedent("""
     # odd Q (5) does not divide dp width 2 -> falls back to replication
     check(am.search_sharded(table, queries[:5], mesh=mesh_dp, k=3),
           am.search(table, queries[:5], k=3), "dp fallback")
+
+    # ----- ternary (masked) + multi-match over banks -----------------------
+    # all-care masked search must be bitwise-identical to the unmasked path
+    # on the sharded tier too (dense and fused backends, both merges), and
+    # sharded multi-match — candidates through the contract-3 two-key sort,
+    # match counts psum'd over banks — must equal single-device multi-match
+    # including overflow, on the tie-heavy table.
+    ones = jnp.ones_like(tie_codes)
+    rng_np = np.random.default_rng(7)
+    care = jnp.asarray(rng_np.integers(0, 2, tie_codes.shape))
+    t_plain = am.make_table(tie_codes, bits=3)
+    t_allcare = am.make_table(tie_codes, bits=3, care_mask=ones)
+    t_masked = am.make_table(tie_codes, bits=3, care_mask=care)
+    for mesh in meshes:
+        for backend in ("ref", "pallas"):
+            for merge in ("allgather", "tree"):
+                want = am.search(t_plain, queries, k=5, threshold=9,
+                                 backend=backend)
+                got = am.search_sharded(t_allcare, queries, mesh=mesh, k=5,
+                                        threshold=9, backend=backend,
+                                        merge=merge)
+                check(got, want, ("all-care", mesh.shape, backend, merge))
+                for tbl, thr, M in ((t_masked, 3.0, 6), (t_plain, 24.0, 2),
+                                    (t_masked, None, 4)):
+                    want = am.search(tbl, queries, matches=M, threshold=thr,
+                                     backend=backend)
+                    got = am.search_sharded(tbl, queries, mesh=mesh,
+                                            matches=M, threshold=thr,
+                                            backend=backend, merge=merge)
+                    for f in ("indices", "distances", "exact", "matched",
+                              "match_count", "overflow"):
+                        np.testing.assert_array_equal(
+                            np.asarray(getattr(got, f)),
+                            np.asarray(getattr(want, f)),
+                            err_msg=f"mm {mesh.shape} {backend} {merge} {f}")
+    # the M=2 / threshold=24 case must actually overflow somewhere
+    assert bool(np.asarray(am.search(t_plain, queries, matches=2,
+                                     threshold=24.0).overflow).any())
 
     # the auto decision table (docs/ARCHITECTURE.md merge-table)
     assert am.resolve_merge("auto", 8) == "allgather"

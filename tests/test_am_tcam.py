@@ -1,0 +1,301 @@
+"""Ternary (care-mask) tier + multi-match results of the ``am`` API.
+
+The two contract extensions the tcam layer rides on:
+
+* **Care plane** — a per-row 0/1 don't-care mask: masked mismatch counting
+  is ``sum(care & (q != t))``, threaded through the dense tier AND the
+  fused streaming kernel.  The load-bearing invariant is that an all-care
+  mask is bitwise-identical to no mask at all (indices AND distances, both
+  backends) — the masked formulation accumulates mismatches directly
+  instead of ``D - matches``, and those must be the same exact integers.
+* **Multi-match** — ``am.search(..., matches=M)``: all rows at distance
+  <= threshold in a fixed M-wide window ordered by ascending (distance,
+  row index), with exact ``match_count`` and ``overflow``, priority entry
+  in slot 0.  Checked against a pure-numpy oracle on tie-heavy tables.
+
+Plus the storage contract: ``make_table``/``write``/``append``/``delete``
+carry the care plane row-for-row, presence mismatches raise, and backends
+without the ``"masked"`` capability refuse ternary tables.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import am
+
+
+def _case(n, q, d, *, levels=8, seed=0, care_p=0.5):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, levels, size=(n, d))
+    queries = rng.integers(0, levels, size=(q, d))
+    care = (rng.random((n, d)) < care_p).astype(np.int64)
+    return codes, queries, care
+
+
+def _mm_oracle(codes, queries, care, thr, m):
+    """Fixed-width multi-match reference: stable (distance, row) order."""
+    diff = queries[:, None, :] != codes[None, :, :]
+    if care is not None:
+        diff = diff & (care[None] != 0)
+    d = diff.sum(-1).astype(np.float64)
+    thr = np.broadcast_to(np.asarray(thr, np.float64), (len(queries),))
+    idx = np.full((len(queries), m), -1, np.int64)
+    dist = np.full((len(queries), m), np.inf)
+    count = np.zeros(len(queries), np.int64)
+    for qi in range(len(queries)):
+        hits = np.flatnonzero(d[qi] <= thr[qi])
+        hits = hits[np.argsort(d[qi][hits], kind="stable")]
+        count[qi] = len(hits)
+        w = hits[:m]
+        idx[qi, :len(w)] = w
+        dist[qi, :len(w)] = d[qi][w]
+    return idx, dist, count, count > m
+
+
+# ---------------------------------------------------------------------------
+# all-care == unmasked, bitwise (the tentpole acceptance gate)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 40), q=st.integers(1, 8), d=st.integers(1, 40),
+       k=st.integers(1, 8), backend=st.sampled_from(("ref", "pallas")),
+       distance=st.sampled_from(("hamming", "l1")),
+       seed=st.integers(0, 2**31 - 1))
+def test_allcare_bitwise_identical_to_unmasked(n, q, d, k, backend, distance,
+                                               seed):
+    codes, queries, _ = _case(n, q, d, seed=seed)
+    plain = am.make_table(codes, bits=3, distance=distance)
+    allcare = am.make_table(codes, bits=3, distance=distance,
+                            care_mask=np.ones_like(codes))
+    want = am.search(plain, queries, k=k, threshold=4, backend=backend)
+    got = am.search(allcare, queries, k=k, threshold=4, backend=backend)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_allcare_bitwise_on_tie_heavy_table():
+    """Binary cells, tiny D: nearly every rank decision is a tie — any
+    drift between the masked and unmasked accumulation orders would
+    surface as swapped indices here."""
+    rng = np.random.default_rng(2)
+    codes = rng.integers(0, 2, size=(64, 4)) * 7
+    queries = rng.integers(0, 2, size=(12, 4)) * 7
+    for backend in ("ref", "pallas"):
+        want = am.search(am.make_table(codes, bits=3), queries, k=10,
+                         backend=backend)
+        got = am.search(
+            am.make_table(codes, bits=3, care_mask=np.ones_like(codes)),
+            queries, k=10, backend=backend)
+        np.testing.assert_array_equal(np.asarray(got.indices),
+                                      np.asarray(want.indices))
+        np.testing.assert_array_equal(np.asarray(got.distances),
+                                      np.asarray(want.distances))
+
+
+# ---------------------------------------------------------------------------
+# masked distances == the masked numpy oracle, dense and fused tiers
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 40), q=st.integers(1, 8), d=st.integers(1, 40),
+       k=st.integers(1, 8), backend=st.sampled_from(("ref", "pallas")),
+       seed=st.integers(0, 2**31 - 1))
+def test_masked_search_matches_oracle(n, q, d, k, backend, seed):
+    codes, queries, care = _case(n, q, d, seed=seed)
+    t = am.make_table(codes, bits=3, care_mask=care)
+    got = am.search(t, queries, k=k, backend=backend)
+    diff = (queries[:, None, :] != codes[None, :, :]) & (care[None] != 0)
+    d_ref = diff.sum(-1).astype(np.float32)
+    neg, idx = jax.lax.top_k(-jnp.asarray(d_ref), min(k, n))
+    np.testing.assert_array_equal(np.asarray(got.indices), np.asarray(idx))
+    np.testing.assert_array_equal(np.asarray(got.distances), np.asarray(-neg))
+
+
+def test_masked_l1_distance_scales_care_per_symbol():
+    """L1 mode thermometer-expands each symbol to 2**bits - 1 rungs; a
+    masked-out symbol must contribute 0 whatever the level difference."""
+    codes = np.array([[0, 7], [3, 3]])
+    care = np.array([[1, 0], [0, 1]])
+    t = am.make_table(codes, bits=3, distance="l1", care_mask=care)
+    q = np.array([[7, 0]])
+    for backend in ("ref", "pallas"):
+        got = am.search(t, q, k=2, backend=backend)
+        # row 0: |7-0| on cared symbol 0 = 7; row 1: |0-3| on symbol 1 = 3
+        np.testing.assert_array_equal(np.asarray(got.indices), [[1, 0]])
+        np.testing.assert_array_equal(np.asarray(got.distances), [[3.0, 7.0]])
+
+
+def test_masked_valid_rows_and_jit_cache():
+    """care + valid_rows compose, and vr stays traced (one executable)."""
+    codes, queries, care = _case(32, 5, 12, seed=3)
+    t = am.make_table(codes, bits=3, care_mask=care)
+    f = jax.jit(lambda tt, qq, vr: am.search(tt, qq, k=4, valid_rows=vr,
+                                             backend="pallas"))
+    for vr in (7, 20, 32):
+        got = f(t, queries, jnp.int32(vr))
+        want = am.search(t, queries, k=4, valid_rows=jnp.int32(vr),
+                         backend="ref")
+        np.testing.assert_array_equal(np.asarray(got.indices),
+                                      np.asarray(want.indices))
+        np.testing.assert_array_equal(np.asarray(got.distances),
+                                      np.asarray(want.distances))
+    assert f._cache_size() == 1
+
+
+def test_unmasked_backend_rejects_ternary_table():
+    codes, _, care = _case(8, 1, 6)
+    t = am.make_table(codes, bits=3, care_mask=care)
+    with pytest.raises(ValueError, match="masked"):
+        am.search(t, codes[0], k=1, backend="analog")
+    # raw dense callables are dense-only plugins: also refused
+    fn = lambda q, c, bits, distance: jnp.zeros((q.shape[0], c.shape[0]))
+    with pytest.raises(ValueError, match="masked"):
+        am.search(t, codes[0], k=1, backend=fn)
+
+
+# ---------------------------------------------------------------------------
+# multi-match vs the numpy oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 40), q=st.integers(1, 8), m=st.integers(1, 10),
+       thr=st.integers(0, 6), masked=st.booleans(),
+       backend=st.sampled_from(("ref", "pallas")),
+       seed=st.integers(0, 2**31 - 1))
+def test_multimatch_matches_oracle(n, q, m, thr, masked, backend, seed):
+    """Tie-heavy tables (binary cells, d=4): counts, overflow, window
+    contents and the (distance, row) priority ordering, masked and not."""
+    codes, queries, care = _case(n, q, 4, levels=2, seed=seed)
+    t = am.make_table(codes, bits=3, care_mask=care if masked else None)
+    r = am.search(t, queries, matches=m, threshold=float(thr),
+                  backend=backend)
+    wi, wd, wc, wo = _mm_oracle(codes, queries, care if masked else None,
+                                float(thr), m)
+    np.testing.assert_array_equal(np.asarray(r.match_count), wc)
+    np.testing.assert_array_equal(np.asarray(r.overflow), wo)
+    np.testing.assert_array_equal(np.asarray(r.indices), wi)
+    np.testing.assert_array_equal(np.asarray(r.distances), wd)
+    np.testing.assert_array_equal(np.asarray(r.matched), wi >= 0)
+
+
+def test_multimatch_exact_only_and_flags():
+    """threshold=None counts exact (distance 0) matches only; the derived
+    flags expose the classic CAM hit taxonomy."""
+    codes = np.array([[1, 2], [1, 2], [3, 4], [5, 5]])
+    t = am.make_table(codes, bits=3)
+    r = am.search(t, np.array([[1, 2], [3, 4], [0, 0]]), matches=3)
+    np.testing.assert_array_equal(np.asarray(r.match_count), [2, 1, 0])
+    np.testing.assert_array_equal(np.asarray(r.single_match),
+                                  [False, True, False])
+    np.testing.assert_array_equal(np.asarray(r.multiple_match),
+                                  [True, False, False])
+    np.testing.assert_array_equal(np.asarray(r.priority_index), [0, 2, -1])
+    assert np.isinf(np.asarray(r.priority_distance)[2])
+    np.testing.assert_array_equal(np.asarray(r.exact),
+                                  np.asarray(r.matched))   # thr=None: equal
+
+
+def test_multimatch_overflow_keeps_priority_prefix():
+    """M smaller than the match count: the window holds the M best
+    (distance, row) entries — truncation never displaces the priority."""
+    codes = np.zeros((10, 3), np.int64)            # every row matches q=0
+    t = am.make_table(codes, bits=3)
+    r = am.search(t, np.zeros((1, 3)), matches=4, threshold=0.0)
+    assert int(np.asarray(r.match_count)[0]) == 10
+    assert bool(np.asarray(r.overflow)[0])
+    np.testing.assert_array_equal(np.asarray(r.indices), [[0, 1, 2, 3]])
+
+
+def test_multimatch_per_query_threshold_and_valid_rows():
+    codes, queries, _ = _case(24, 4, 8, seed=9)
+    t = am.make_table(codes, bits=3)
+    thr = np.array([0.0, 2.0, 4.0, 8.0])
+    r = am.search(t, queries, matches=6, threshold=thr, valid_rows=10)
+    wi, wd, wc, wo = _mm_oracle(codes[:10], queries, None, thr, 6)
+    np.testing.assert_array_equal(np.asarray(r.match_count), wc)
+    np.testing.assert_array_equal(np.asarray(r.indices), wi)
+    np.testing.assert_array_equal(np.asarray(r.distances), wd)
+
+
+def test_multimatch_fused_equals_dense_beyond_fused_k_max():
+    """matches > FUSED_K_MAX falls back to the dense count path on the
+    pallas backend — still the oracle answer."""
+    m = am.FUSED_K_MAX + 5
+    codes, queries, care = _case(m + 20, 3, 10, seed=4)
+    t = am.make_table(codes, bits=3, care_mask=care)
+    got = am.search(t, queries, matches=m, threshold=5.0, backend="pallas")
+    want = am.search(t, queries, matches=m, threshold=5.0, backend="ref")
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_multimatch_squeeze_single_query():
+    codes, _, _ = _case(8, 1, 6, seed=1)
+    t = am.make_table(codes, bits=3)
+    r = am.search(t, codes[2], matches=3)
+    assert np.asarray(r.indices).shape == (3,)
+    assert np.asarray(r.match_count).shape == ()
+    assert int(np.asarray(r.priority_index)) == 2
+
+
+def test_multimatch_argument_validation():
+    codes, _, _ = _case(8, 1, 6)
+    t = am.make_table(codes, bits=3)
+    with pytest.raises(ValueError, match="not both"):
+        am.search(t, codes[0], k=2, matches=3)
+    with pytest.raises(ValueError, match="matches must be >= 1"):
+        am.search(t, codes[0], matches=0)
+
+
+# ---------------------------------------------------------------------------
+# storage contract: the care plane through the table lifecycle
+# ---------------------------------------------------------------------------
+
+def test_make_table_care_validation():
+    codes, _, care = _case(8, 1, 6)
+    t = am.make_table(codes, bits=3, care_mask=care)
+    np.testing.assert_array_equal(np.asarray(t.care), care != 0)
+    with pytest.raises(ValueError):
+        am.make_table(codes, bits=3, care_mask=care[:4])    # shape mismatch
+
+
+def test_append_and_delete_carry_care_rows():
+    codes, _, care = _case(8, 1, 6, seed=5)
+    t = am.make_table(codes[:5], bits=3, care_mask=care[:5])
+    t = am.append(t, codes[5:], care_mask=care[5:])
+    np.testing.assert_array_equal(np.asarray(t.care), care != 0)
+    t2 = am.delete(t, np.array([1, 3]))
+    keep = np.delete(np.arange(8), [1, 3])
+    np.testing.assert_array_equal(np.asarray(t2.codes), codes[keep])
+    np.testing.assert_array_equal(np.asarray(t2.care), care[keep] != 0)
+
+
+def test_append_care_presence_must_match():
+    codes, _, care = _case(8, 1, 6)
+    ternary = am.make_table(codes[:4], bits=3, care_mask=care[:4])
+    plain = am.make_table(codes[:4], bits=3)
+    with pytest.raises(ValueError, match="care_mask"):
+        am.append(ternary, codes[4:])
+    with pytest.raises(ValueError, match="care_mask"):
+        am.append(plain, codes[4:], care_mask=care[4:])
+
+
+def test_table_with_care_is_a_pytree():
+    """jit with the ternary table as an argument: one trace, care plane
+    threaded as a leaf; None-care tables produce a different treedef (and
+    therefore their own trace) rather than a crash."""
+    codes, queries, care = _case(16, 3, 8, seed=7)
+    f = jax.jit(lambda t, q: am.search(t, q, k=2, backend="pallas"))
+    t1 = am.make_table(codes, bits=3, care_mask=care)
+    t2 = am.make_table(codes, bits=3)
+    got1, got2 = f(t1, queries), f(t2, queries)
+    want1 = am.search(t1, queries, k=2, backend="ref")
+    np.testing.assert_array_equal(np.asarray(got1.indices),
+                                  np.asarray(want1.indices))
+    leaves = jax.tree_util.tree_leaves(t1)
+    assert len(leaves) == len(jax.tree_util.tree_leaves(t2)) + 1

@@ -1,0 +1,69 @@
+"""The bench regression gate (``scripts/check_bench_regression.py``).
+
+Pure-function tests for :func:`compare`: identical reports pass, recall
+drops and candidate-fraction growth beyond tolerance fail, wall-clock
+changes never fail, and structural drift (missing probe point, changed
+geometry) fails with an actionable message.
+"""
+
+import copy
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "scripts"))
+
+from check_bench_regression import FRAC_GROWTH, RECALL_DROP, compare  # noqa: E402
+
+BASE = {
+    "sets": 32, "k": 10, "n": 2048, "queries": 64,
+    "probes": {
+        "1": {"candidate_fraction": 0.035, "recall_at_k": 0.76,
+              "us_per_call": 1900.0},
+        "4": {"candidate_fraction": 0.13, "recall_at_k": 0.94,
+              "us_per_call": 7600.0},
+    },
+}
+
+
+def test_identical_reports_pass():
+    assert compare(BASE, copy.deepcopy(BASE)) == []
+
+
+def test_wallclock_changes_are_not_gated():
+    fresh = copy.deepcopy(BASE)
+    fresh["probes"]["4"]["us_per_call"] *= 100
+    assert compare(BASE, fresh) == []
+
+
+def test_small_recall_wobble_within_tolerance():
+    fresh = copy.deepcopy(BASE)
+    fresh["probes"]["4"]["recall_at_k"] -= RECALL_DROP / 2
+    assert compare(BASE, fresh) == []
+
+
+def test_recall_drop_beyond_tolerance_fails():
+    fresh = copy.deepcopy(BASE)
+    fresh["probes"]["4"]["recall_at_k"] -= RECALL_DROP * 2
+    errs = compare(BASE, fresh)
+    assert len(errs) == 1 and "recall_at_k regressed" in errs[0]
+
+
+def test_candidate_fraction_growth_fails():
+    fresh = copy.deepcopy(BASE)
+    fresh["probes"]["1"]["candidate_fraction"] *= FRAC_GROWTH * 1.2
+    errs = compare(BASE, fresh)
+    assert len(errs) == 1 and "candidate_fraction grew" in errs[0]
+
+
+def test_missing_probe_point_fails():
+    fresh = copy.deepcopy(BASE)
+    del fresh["probes"]["4"]
+    errs = compare(BASE, fresh)
+    assert len(errs) == 1 and "missing from fresh run" in errs[0]
+
+
+def test_geometry_drift_fails():
+    fresh = copy.deepcopy(BASE)
+    fresh["sets"] = 64
+    errs = compare(BASE, fresh)
+    assert any("geometry drift: sets" in e for e in errs)

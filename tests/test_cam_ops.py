@@ -1,0 +1,148 @@
+"""Direct property tests for the kernel-wrapper helpers in ``cam_search.ops``.
+
+:func:`exact_match`, :func:`best_row`, :func:`topk`, and :func:`topk_fused`
+were previously exercised only transitively through ``repro.core.am``; these
+tests pin their contracts straight against a numpy oracle — exact integer
+mismatch counts, argmin/lowest-row-index tie-breaks, fused == dense bitwise
+— on both the unmasked and the masked (``care=``) tier, across padded and
+unpadded shapes.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.cam_search import ops
+
+
+def _case(seed, n, q, d, levels=8, care_p=None):
+    rng = np.random.default_rng(seed)
+    table = rng.integers(0, levels, (n, d)).astype(np.int32)
+    queries = rng.integers(0, levels, (q, d)).astype(np.int32)
+    care = None
+    if care_p is not None:
+        care = (rng.random((n, d)) < care_p).astype(np.int32)
+    return queries, table, care
+
+
+def _oracle_counts(queries, table, care):
+    mm = (queries[:, None, :] != table[None, :, :]).astype(np.int64)
+    if care is not None:
+        mm = mm * care[None, :, :]
+    return mm.sum(-1)
+
+
+def _oracle_topk(counts, k):
+    """Ascending (count, row-index) — numpy stable argsort on the count."""
+    idx = np.argsort(counts, axis=-1, kind="stable")[:, :k]
+    return idx, np.take_along_axis(counts, idx, axis=-1)
+
+
+SHAPES = st.sampled_from([(5, 3, 4), (16, 8, 12), (70, 9, 33), (130, 65, 17)])
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), shape=SHAPES,
+       masked=st.booleans())
+def test_exact_match_flags(seed, shape, masked):
+    n, q, d = shape
+    queries, table, care = _case(seed, n, q, d,
+                                 care_p=0.5 if masked else None)
+    got = np.asarray(ops.exact_match(queries, table, bits=3, care=care))
+    want = _oracle_counts(queries, table, care) == 0
+    np.testing.assert_array_equal(got, want)
+
+
+def test_exact_match_is_the_ternary_match_line():
+    """A row matches iff every *cared* symbol agrees — don't-care positions
+    are wildcards even when the stored symbol disagrees."""
+    table = np.array([[1, 2, 3], [1, 2, 3]], np.int32)
+    care = np.array([[1, 1, 0], [1, 1, 1]], np.int32)
+    got = np.asarray(ops.exact_match(np.array([[1, 2, 7]], np.int32),
+                                     table, bits=3, care=care))
+    np.testing.assert_array_equal(got, [[True, False]])
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), shape=SHAPES,
+       masked=st.booleans())
+def test_best_row_argmin_with_lowest_index_ties(seed, shape, masked):
+    n, q, d = shape
+    # levels=2 makes distance ties common, stressing the tie-break
+    queries, table, care = _case(seed, n, q, d, levels=2,
+                                 care_p=0.5 if masked else None)
+    got = np.asarray(ops.best_row(queries, table, bits=1, care=care))
+    want = _oracle_counts(queries, table, care).argmin(-1)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), shape=SHAPES,
+       k=st.integers(1, 6), masked=st.booleans())
+def test_topk_matches_oracle_with_tiebreaks(seed, shape, k, masked):
+    n, q, d = shape
+    queries, table, care = _case(seed, n, q, d, levels=2,
+                                 care_p=0.5 if masked else None)
+    idx, cnt = ops.topk(queries, table, k=k, bits=1, care=care)
+    kn = min(k, n)
+    oi, oc = _oracle_topk(_oracle_counts(queries, table, care), kn)
+    np.testing.assert_array_equal(np.asarray(idx), oi)
+    np.testing.assert_array_equal(np.asarray(cnt), oc)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), shape=SHAPES,
+       k=st.integers(1, 6), masked=st.booleans())
+def test_topk_fused_bitwise_equals_dense(seed, shape, k, masked):
+    n, q, d = shape
+    queries, table, care = _case(seed, n, q, d, levels=2,
+                                 care_p=0.5 if masked else None)
+    di, dc = ops.topk(queries, table, k=k, bits=1, care=care)
+    fi, fd = ops.topk_fused(queries, table, k=k, bits=1, care=care)
+    np.testing.assert_array_equal(np.asarray(fi), np.asarray(di))
+    np.testing.assert_array_equal(np.asarray(fd),
+                                  np.asarray(dc).astype(np.float32))
+
+
+def test_topk_fused_valid_rows_masks_tail():
+    queries, table, care = _case(0, 12, 4, 6, care_p=0.5)
+    vr = 7
+    fi, fd = ops.topk_fused(queries, table, k=12, bits=3, valid_rows=vr,
+                            care=care)
+    oi, oc = _oracle_topk(_oracle_counts(queries, table[:vr], care[:vr]), vr)
+    np.testing.assert_array_equal(np.asarray(fi)[:, :vr], oi)
+    np.testing.assert_array_equal(np.asarray(fd)[:, :vr],
+                                  oc.astype(np.float32))
+    assert np.isinf(np.asarray(fd)[:, vr:]).all()   # dead slab rows at +inf
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), masked=st.booleans(),
+       thr=st.integers(0, 6))
+def test_topk_fused_count_le_is_exact(seed, masked, thr):
+    queries, table, care = _case(seed, 20, 6, 9,
+                                 care_p=0.5 if masked else None)
+    fi, fd, cnt = ops.topk_fused(queries, table, k=3, bits=3, care=care,
+                                 count_le=float(thr))
+    counts = _oracle_counts(queries, table, care)
+    np.testing.assert_array_equal(np.asarray(cnt), (counts <= thr).sum(-1))
+
+
+def test_count_le_accepts_per_query_thresholds():
+    queries, table, care = _case(1, 10, 3, 5, care_p=0.5)
+    thr = np.array([0.0, 2.0, 5.0], np.float32)
+    _, _, cnt = ops.topk_fused(queries, table, k=2, bits=3, care=care,
+                               count_le=thr)
+    counts = _oracle_counts(queries, table, care)
+    np.testing.assert_array_equal(np.asarray(cnt),
+                                  (counts <= thr[:, None]).sum(-1))
+
+
+def test_all_ones_care_bitwise_identical_to_none():
+    queries, table, _ = _case(2, 40, 7, 11)
+    ones = np.ones_like(table)
+    for fn, kw in ((ops.exact_match, {}), (ops.best_row, {}),
+                   (ops.topk, {"k": 3}), (ops.topk_fused, {"k": 3})):
+        a = fn(queries, table, bits=3, care=None, **kw)
+        b = fn(queries, table, bits=3, care=ones, **kw)
+        for x, y in zip(np.atleast_1d(a), np.atleast_1d(b)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

@@ -203,6 +203,70 @@ def test_index_contract_table_matches_code():
 
 
 # ---------------------------------------------------------------------------
+# the tcam entry-construction contract table (layer 2.75)
+# ---------------------------------------------------------------------------
+
+def test_tcam_contract_table_matches_code():
+    """Re-verify each documented row of the tcam coverage table: entry
+    counts and exact match-set coverage, enumerated over a whole small
+    value space (width=3, bits=2 -> 64 values)."""
+    from repro.tcam import masks
+    rows = _table_rows(_arch_text(), "tcam-table")
+    ctors = [row[0] for row in rows]
+    assert any("prefix_entry" in c for c in ctors)
+    assert any("prefix_entries" in c for c in ctors)
+    assert any("range_to_entries" in c for c in ctors)
+
+    width, bits = 3, 2
+    total = width * bits
+
+    def match_set(entries):
+        out = set()
+        for code, care in entries:
+            for v in range(1 << total):
+                q = masks.int_to_code(v, width=width, bits=bits)
+                if np.all((q == code) | (care == 0)):
+                    out.add(v)
+        return out
+
+    # row 1: aligned prefix -> exactly one entry, exact prefix coverage
+    for p in range(0, total + 1, bits):
+        entries = masks.prefix_entries(0b101010, p, width=width, bits=bits)
+        assert len(entries) == 1
+        host = total - p
+        base = (0b101010 >> host) << host
+        assert match_set(entries) == set(range(base, base + (1 << host)))
+
+    # row 2: sub-symbol prefix -> <= 2**(bits-1) entries, same coverage
+    for p in (1, 3, 5):
+        entries = masks.prefix_entries(0b101010, p, width=width, bits=bits)
+        assert 1 <= len(entries) <= 1 << (bits - 1)
+        host = total - p
+        base = (0b101010 >> host) << host
+        assert match_set(entries) == set(range(base, base + (1 << host)))
+
+    # row 3: range cover -> exact [lo, hi], bounded expansion
+    lo, hi = 11, 52
+    entries = masks.range_to_entries(lo, hi, width=width, bits=bits)
+    assert match_set(entries) == set(range(lo, hi + 1))
+    assert len(entries) <= 2 * width * ((1 << bits) - 1)
+
+
+def test_tcam_priority_readout_documented_and_real():
+    """The section's LPM claim: lowest row index among exact ternary
+    matches is the longest prefix, read via priority_index."""
+    from repro import tcam
+    assert re.search(r"Layer 2\.75 — tcam", _arch_text()), (
+        "docs/ARCHITECTURE.md must carry the Layer 2.75 tcam section")
+    routes = [tcam.Route(0b1010, 2, 1), tcam.Route(0b1000, 1, 2),
+              tcam.Route(0, 0, 3)]
+    rt = tcam.build_routing_table(routes, width=2, bits=2)
+    hops, res = tcam.lookup(rt, [0b1011], matches=4)
+    assert int(np.asarray(hops)[0]) == 1          # /2 beats /1 beats /0
+    assert int(np.asarray(res.match_count)[0]) == 3
+
+
+# ---------------------------------------------------------------------------
 # the serving-driver contract (contract 4)
 # ---------------------------------------------------------------------------
 

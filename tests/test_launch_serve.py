@@ -1,0 +1,123 @@
+"""Flag plumbing of the serving driver (``repro.launch.serve``).
+
+The driver's CLI knobs — ``--am-cache``, ``--am-sharded``, ``--am-merge``,
+``--am-index``/``--am-probes`` — configure the AM response-cache service
+before any engine boots, and a typo'd wiring (index spec dropped, merge not
+forwarded, driver not started) only surfaces as silently different serving
+behaviour.  These tests drive :func:`repro.launch.serve.parse_args` and
+:func:`repro.launch.serve.build_cache_service` directly:
+
+* defaults: parse with no argv, service built local (unsharded), flat scan
+  (no index spec), driver running;
+* ``--am-cache 0`` disables the cache entirely (``None`` service);
+* ``--am-index``/``--am-probes`` land in the table's ``IndexSpec`` (sets,
+  probes, lazy build state through ``stats()["index"]``);
+* ``--am-sharded``/``--am-merge`` reach the service's mesh/merge wiring and
+  its compiled dispatch still resolves lookups end to end;
+* driver lifecycle: ``build_cache_service`` starts a background driver that
+  resolves a submit without an explicit flush, and ``close()`` drains it.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.launch import serve as launch_serve
+from repro.launch.mesh import make_test_mesh
+
+
+def _mk(argv):
+    return launch_serve.parse_args(argv)
+
+
+def test_parse_defaults():
+    args = _mk([])
+    assert args.am_cache == 8
+    assert args.am_sharded is False
+    assert args.am_merge == "auto"
+    assert args.am_index == 0 and args.am_probes == 1
+    assert args.smoke is True
+
+
+def test_parse_flags_roundtrip():
+    args = _mk(["--am-cache", "32", "--am-sharded", "--am-merge", "tree",
+                "--am-index", "4", "--am-probes", "2", "--full"])
+    assert args.am_cache == 32
+    assert args.am_sharded is True
+    assert args.am_merge == "tree"
+    assert args.am_index == 4 and args.am_probes == 2
+    assert args.smoke is False
+
+
+def test_parse_rejects_unknown_merge():
+    with pytest.raises(SystemExit):
+        _mk(["--am-merge", "ring"])
+
+
+def test_cache_disabled_builds_no_service():
+    args = _mk(["--am-cache", "0"])
+    assert launch_serve.build_cache_service(args, None) is None
+
+
+def test_default_service_is_local_flat():
+    args = _mk([])
+    svc = launch_serve.build_cache_service(args, make_test_mesh(),
+                                           start_driver=False)
+    try:
+        s = svc.stats()
+        assert s["sharded"] is False
+        assert s["merge"] == "auto"
+        ts = s["tables"]["responses"]
+        assert ts["capacity"] == 8
+        assert ts["backend"] == "pallas"
+        assert ts["index"] is None          # flat scan, no IVF spec
+    finally:
+        svc.close()
+
+
+def test_index_flags_reach_the_index_spec():
+    args = _mk(["--am-cache", "64", "--am-index", "4", "--am-probes", "2"])
+    svc = launch_serve.build_cache_service(args, make_test_mesh(),
+                                           start_driver=False)
+    try:
+        ix = svc.stats("responses")["index"]
+        assert ix["sets"] == 4 and ix["probes"] == 2
+        assert ix["built"] is False         # lazy: empty table, no build yet
+    finally:
+        svc.close()
+
+
+def test_sharded_and_merge_flags_reach_dispatch():
+    """--am-sharded routes dispatch through the mesh with the chosen merge,
+    and a real lookup still resolves (exact hit on a stored key)."""
+    mesh = make_test_mesh()
+    args = _mk(["--am-cache", "16", "--am-sharded", "--am-merge",
+                "allgather"])
+    svc = launch_serve.build_cache_service(args, mesh, start_driver=False)
+    try:
+        s = svc.stats()
+        assert s["sharded"] is True and s["merge"] == "allgather"
+        key = jax.random.randint(jax.random.PRNGKey(0),
+                                 (launch_serve.CACHE_DIM,), 0, 8)
+        svc.append("responses", np.asarray(key), values=["payload"])
+        resp = svc.lookup("responses", np.asarray(key))
+        assert resp.hit and resp.value == "payload"
+    finally:
+        svc.close()
+
+
+def test_driver_started_and_drains():
+    """The built service runs a background driver: a submit resolves with
+    no explicit flush, and close() stops the driver cleanly."""
+    args = _mk(["--am-cache", "4"])
+    svc = launch_serve.build_cache_service(args, make_test_mesh())
+    try:
+        drv = svc._driver
+        assert drv is not None and drv.is_alive()
+        key = np.zeros((launch_serve.CACHE_DIM,), np.int32)
+        svc.append("responses", key, values=["v"])
+        resp = svc.submit("responses", key).result(timeout=30.0)
+        assert resp.hit and resp.value == "v"
+    finally:
+        svc.close()
+    assert svc._driver is None

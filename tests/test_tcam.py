@@ -1,0 +1,210 @@
+"""The tcam semantics layer: prefix/range mask construction + LPM routing.
+
+``repro.tcam.masks`` turns integer meanings into ternary entries; the
+exhaustive property here is *coverage*: an entry set built for a prefix or
+a value range must match (masked distance 0) exactly the values it denotes
+— no more, no fewer — enumerated over the whole value space on small
+geometries.  ``repro.tcam.routing`` then must resolve longest-prefix-match
+by CAM priority alone (rows sorted longest-prefix-first, lowest matching
+row index wins), agreeing with the pure-python ``lpm_oracle`` everywhere,
+first-added winning among equal-length prefixes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import tcam
+from repro.core import am
+from repro.tcam import masks
+
+
+def _matches(entry, value, width, bits):
+    code, care = entry
+    q = masks.int_to_code(value, width=width, bits=bits)
+    return bool(np.all((q == code) | (care == 0)))
+
+
+def _match_set(entries, width, bits):
+    return {v for v in range(1 << (width * bits))
+            if any(_matches(e, v, width, bits) for e in entries)}
+
+
+# ---------------------------------------------------------------------------
+# masks: encoding + exact coverage
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(width=st.integers(1, 6), bits=st.integers(1, 4),
+       seed=st.integers(0, 2**31 - 1))
+def test_int_code_roundtrip(width, bits, seed):
+    rng = np.random.default_rng(seed)
+    for v in rng.integers(0, 1 << (width * bits), 10).tolist():
+        code = masks.int_to_code(v, width=width, bits=bits)
+        assert code.shape == (width,)
+        assert masks.code_to_int(code, bits=bits) == v
+
+
+def test_encoding_is_big_endian():
+    np.testing.assert_array_equal(
+        masks.int_to_code(0xAB, width=4, bits=2), [2, 2, 2, 3])
+    assert masks.code_to_int([2, 2, 2, 3], bits=2) == 0xAB
+
+
+def test_encoding_validation():
+    with pytest.raises(ValueError, match="out of range"):
+        masks.int_to_code(1 << 8, width=4, bits=2)
+    with pytest.raises(ValueError, match="out of range"):
+        masks.code_to_int([4, 0], bits=2)
+    with pytest.raises(ValueError, match="width"):
+        masks.int_to_code(0, width=0, bits=2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(width=st.integers(1, 4), bits=st.integers(1, 3),
+       seed=st.integers(0, 2**31 - 1))
+def test_range_cover_is_exact(width, bits, seed):
+    """range_to_entries matches exactly [lo, hi], enumerated exhaustively."""
+    rng = np.random.default_rng(seed)
+    space = 1 << (width * bits)
+    lo, hi = sorted(rng.integers(0, space, 2).tolist())
+    entries = masks.range_to_entries(lo, hi, width=width, bits=bits)
+    assert _match_set(entries, width, bits) == set(range(lo, hi + 1))
+    # the classic TCAM bound on the expansion size
+    assert len(entries) <= 2 * width * ((1 << bits) - 1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(width=st.integers(1, 4), bits=st.integers(1, 3),
+       p_raw=st.integers(0, 1 << 12), v_raw=st.integers(0, 1 << 12))
+def test_prefix_entries_cover_exactly(width, bits, p_raw, v_raw):
+    """Every prefix length — symbol-aligned and sub-symbol — covers exactly
+    its 2**(total - p) aligned values."""
+    total = width * bits
+    p = p_raw % (total + 1)
+    v = v_raw % (1 << total)
+    entries = masks.prefix_entries(v, p, width=width, bits=bits)
+    host = total - p
+    base = (v >> host) << host
+    assert _match_set(entries, width, bits) == set(range(base,
+                                                         base + (1 << host)))
+    if p % bits == 0:
+        assert len(entries) == 1
+    else:
+        assert len(entries) <= 1 << (bits - 1)
+
+
+def test_prefix_entry_symbol_alignment_contract():
+    code, care = masks.prefix_entry(0xAB, 4, width=4, bits=2)
+    np.testing.assert_array_equal(code, [2, 2, 0, 0])   # low bits canonical
+    np.testing.assert_array_equal(care, [1, 1, 0, 0])
+    with pytest.raises(ValueError, match="symbol-aligned"):
+        masks.prefix_entry(0xAB, 3, width=4, bits=2)
+    with pytest.raises(ValueError, match="prefix_bits"):
+        masks.prefix_entry(0, 9, width=4, bits=2)
+
+
+def test_range_validation():
+    with pytest.raises(ValueError, match="empty"):
+        masks.range_to_entries(5, 4, width=4, bits=2)
+    with pytest.raises(ValueError, match="out of range"):
+        masks.range_to_entries(0, 1 << 8, width=4, bits=2)
+
+
+def test_entries_searchable_through_am():
+    """The (code, care) pairs drive a real masked search: distance 0 on
+    covered values, > 0 otherwise."""
+    entries = masks.range_to_entries(10, 53, width=3, bits=2)
+    codes = np.stack([c for c, _ in entries])
+    cares = np.stack([c for _, c in entries])
+    t = am.make_table(codes, bits=2, care_mask=cares)
+    for v in range(64):
+        q = masks.int_to_code(v, width=3, bits=2)
+        r = am.search(t, q, matches=len(entries))
+        assert bool(np.asarray(r.match_count) > 0) == (10 <= v <= 53), v
+
+
+# ---------------------------------------------------------------------------
+# routing: LPM by CAM priority == the pure-python oracle
+# ---------------------------------------------------------------------------
+
+ROUTES = [
+    tcam.Route(0b10100000, 3, 1),
+    tcam.Route(0b10110000, 4, 2),
+    tcam.Route(0b10110000, 4, 9),      # duplicate: first-added must win
+    tcam.Route(0b00000000, 1, 3),
+    tcam.Route(0b11000000, 2, 4),
+    tcam.Route(0, 0, 7),               # default route as a rule
+    tcam.Route(0b10111100, 7, 5),      # sub-symbol for 2-bit cells
+]
+
+
+@pytest.mark.parametrize("width,bits", [(4, 2), (8, 1), (2, 4)])
+def test_lookup_agrees_with_oracle_exhaustively(width, bits):
+    rt = tcam.build_routing_table(ROUTES, width=width, bits=bits,
+                                  default_hop=-1)
+    addrs = np.arange(256)
+    hops, res = tcam.lookup(rt, addrs, matches=8)
+    want = [tcam.lpm_oracle(ROUTES, a, width=width, bits=bits,
+                            default_hop=-1) for a in addrs.tolist()]
+    assert np.asarray(hops).tolist() == want
+    assert bool(np.asarray(res.matched)[:, 0].all())   # rule 0/0 covers all
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_routes=st.integers(1, 24))
+def test_random_routing_tables_match_oracle(seed, n_routes):
+    rng = np.random.default_rng(seed)
+    width, bits = 4, 2
+    total = width * bits
+    routes = [tcam.Route(int(rng.integers(0, 1 << total)),
+                         int(rng.integers(0, total + 1)),
+                         i) for i in range(n_routes)]
+    rt = tcam.build_routing_table(routes, width=width, bits=bits,
+                                  default_hop=-99)
+    addrs = rng.integers(0, 1 << total, 64)
+    hops, _ = tcam.lookup(rt, addrs, matches=16)
+    want = [tcam.lpm_oracle(routes, a, width=width, bits=bits,
+                            default_hop=-99) for a in addrs.tolist()]
+    assert np.asarray(hops).tolist() == want
+
+
+def test_no_match_returns_default_hop():
+    rt = tcam.build_routing_table([tcam.Route(0b11110000, 4, 1)],
+                                  width=4, bits=2, default_hop=-5)
+    hops, res = tcam.lookup(rt, [0, 0b11110001], matches=4)
+    assert np.asarray(hops).tolist() == [-5, 1]
+    assert not bool(np.asarray(res.matched)[0].any())
+    assert int(np.asarray(res.match_count)[0]) == 0
+
+
+def test_rows_sorted_longest_prefix_first():
+    rt = tcam.build_routing_table(ROUTES, width=4, bits=2)
+    lens = np.asarray(rt.prefix_lens)
+    assert (np.diff(lens) <= 0).all()
+    # priority slot of a fully covered address is the longest prefix's row
+    hops, res = tcam.lookup(rt, [0b10110101], matches=8)
+    pi = int(np.asarray(res.priority_index)[0])
+    assert int(lens[pi]) == max(
+        r.prefix_bits for r in ROUTES
+        if (0b10110101 >> (8 - r.prefix_bits)) == (r.value >>
+                                                   (8 - r.prefix_bits)))
+
+
+def test_overflow_still_resolves_correct_hop():
+    """matches window smaller than the match count: the hop (priority
+    entry) survives truncation, overflow is flagged."""
+    rt = tcam.build_routing_table(ROUTES, width=4, bits=2)
+    hops, res = tcam.lookup(rt, [0b10110101], matches=2)
+    assert bool(np.asarray(res.overflow)[0])
+    assert int(np.asarray(hops)[0]) == tcam.lpm_oracle(
+        ROUTES, 0b10110101, width=4, bits=2)
+
+
+def test_build_validation():
+    with pytest.raises(ValueError, match="at least one"):
+        tcam.build_routing_table([], width=4, bits=2)
+    # plain triples work in place of Route instances
+    rt = tcam.build_routing_table([(0, 0, 42)], width=4, bits=2)
+    hops, _ = tcam.lookup(rt, [5], matches=1)
+    assert int(np.asarray(hops)[0]) == 42

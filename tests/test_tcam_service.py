@@ -1,0 +1,236 @@
+"""Ternary tables and multi-match lookups through the serving layer.
+
+The AMService passthrough under test: ``create_table(ternary=True)``
+allocates a care plane (all-care by default), ``append(..., care=)``
+carries per-row masks through eviction/compaction row-aligned with the
+codes, and ``submit(matches=M)``/``lookup(matches=M)`` dispatch the
+multi-match search path and surface ``match_count``/``overflow`` on the
+response.  Results must stay bitwise-identical to direct ``am.search``
+on the live rows, with the same one-compilation-per-signature accounting
+as the plain top-k path.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import am
+from repro.serve.am_service import AMService
+
+WIDTH = 6
+BITS = 3
+
+
+def _svc(capacity=32, ternary=True, backend="ref", **kw) -> AMService:
+    svc = AMService(**kw)
+    svc.create_table("t", width=WIDTH, bits=BITS, capacity=capacity,
+                     policy="lru", backend=backend, ternary=ternary)
+    return svc
+
+
+def _codes(rng, n):
+    return rng.integers(0, 8, (n, WIDTH)).astype(np.int32)
+
+
+def _care(rng, n):
+    return rng.integers(0, 2, (n, WIDTH)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# ternary storage lifecycle
+# ---------------------------------------------------------------------------
+
+def test_ternary_append_defaults_to_all_care():
+    """Omitted care on a ternary table means 'match every symbol' — the
+    lookup behaves exactly like the same table created non-ternary."""
+    rng = np.random.default_rng(0)
+    codes = _codes(rng, 8)
+    tern, plain = _svc(), _svc(ternary=False)
+    tern.append("t", codes)
+    plain.append("t", codes)
+    q = _codes(rng, 1)[0]
+    a, b = tern.lookup("t", q), plain.lookup("t", q)
+    np.testing.assert_array_equal(a.indices, b.indices)
+    np.testing.assert_array_equal(a.distances, b.distances)
+    np.testing.assert_array_equal(a.exact, b.exact)
+
+
+def test_masked_rows_wildcard_dont_care_symbols():
+    svc = _svc()
+    svc.append("t", np.array([[1, 2, 3, 4, 5, 6]], np.int32),
+               care=np.array([[1, 1, 0, 0, 0, 0]], np.int32))
+    # query agrees only on the two cared symbols -> exact hit
+    resp = svc.lookup("t", np.array([1, 2, 7, 7, 7, 7], np.int32))
+    assert resp.hit and resp.distances[0] == 0.0
+
+
+def test_care_plane_survives_delete_and_compaction():
+    """Row/care alignment must survive LRU-hole compaction: delete rows,
+    force a compact via append, and check masked semantics per survivor."""
+    rng = np.random.default_rng(1)
+    codes = _codes(rng, 10)
+    care = _care(rng, 10)
+    care[:, 0] = 1                          # keep at least one cared symbol
+    svc = _svc(capacity=10)
+    svc.append("t", codes, values=[f"v{i}" for i in range(10)], care=care)
+    assert svc.delete("t", np.array([1, 4, 7])) == 3  # compacts in place
+    svc.append("t", (codes[:3] + 1) % 8, care=care[:3])
+    for i in (0, 2, 3, 5, 6, 8, 9):
+        q = np.where(care[i] != 0, codes[i], 7).astype(np.int32)
+        resp = svc.lookup("t", q)
+        assert resp.hit and resp.value == f"v{i}", i
+
+
+def test_ternary_validation():
+    rng = np.random.default_rng(2)
+    svc = _svc(ternary=False)
+    with pytest.raises(ValueError, match="not ternary"):
+        svc.append("t", _codes(rng, 2), care=_care(rng, 2))
+    with pytest.raises(ValueError, match="masked"):
+        AMService().create_table("a", width=WIDTH, bits=BITS, capacity=4,
+                                 backend="analog", ternary=True)
+    with pytest.raises(ValueError, match="index tier"):
+        from repro.serve import IndexSpec
+        AMService().create_table("i", width=WIDTH, bits=BITS, capacity=64,
+                                 index=IndexSpec(sets=4, probes=1),
+                                 ternary=True)
+    t = _svc()
+    with pytest.raises(ValueError, match="care shape"):
+        t.append("t", _codes(rng, 2), care=_care(rng, 3))
+
+
+# ---------------------------------------------------------------------------
+# multi-match dispatch
+# ---------------------------------------------------------------------------
+
+def test_multimatch_bitwise_identical_to_direct_search():
+    rng = np.random.default_rng(3)
+    codes = _codes(rng, 16)
+    care = _care(rng, 16)
+    svc = _svc(capacity=16)
+    svc.append("t", codes, care=care)
+    ref = am.make_table(codes, bits=BITS, care_mask=care)
+    for q in _codes(rng, 4):
+        resp = svc.lookup("t", q, matches=5)
+        want = am.search(ref, q, matches=5, backend="ref")
+        np.testing.assert_array_equal(resp.indices, np.asarray(want.indices))
+        np.testing.assert_array_equal(resp.distances,
+                                      np.asarray(want.distances))
+        assert resp.match_count == int(want.match_count)
+        assert resp.overflow == bool(want.overflow)
+
+
+def test_multimatch_counts_and_overflow():
+    svc = _svc(capacity=8)
+    row = np.full((1, WIDTH), 3, np.int32)
+    svc.append("t", np.repeat(row, 6, axis=0))       # 6 identical rows
+    resp = svc.lookup("t", row[0], matches=4)
+    assert resp.match_count == 6 and resp.overflow is True
+    assert resp.indices.tolist() == [0, 1, 2, 3]     # priority prefix
+    resp = svc.lookup("t", row[0] + 1, matches=4)
+    assert resp.match_count == 0 and resp.overflow is False
+    assert not resp.hit
+
+
+def test_multimatch_on_plain_topk_table():
+    """matches= works on non-ternary tables too (multi-match is about the
+    result shape, not the storage)."""
+    rng = np.random.default_rng(4)
+    codes = _codes(rng, 8)
+    svc = _svc(ternary=False)
+    svc.append("t", codes, values=list(range(8)))
+    resp = svc.lookup("t", codes[5], matches=3)
+    assert resp.indices[0] == 5 and resp.value == 5
+    assert resp.match_count >= 1
+
+
+def test_plain_topk_responses_leave_multimatch_fields_none():
+    rng = np.random.default_rng(5)
+    svc = _svc()
+    svc.append("t", _codes(rng, 4))
+    resp = svc.lookup("t", _codes(rng, 1)[0], k=2)
+    assert resp.match_count is None and resp.overflow is None
+
+
+def test_multimatch_miss_on_empty_table():
+    svc = _svc()
+    resp = svc.lookup("t", np.zeros(WIDTH, np.int32), matches=3)
+    assert not resp.hit
+    assert resp.match_count == 0 and resp.overflow is False
+    assert resp.indices.tolist() == [-1, -1, -1]
+
+
+def test_submit_validation():
+    rng = np.random.default_rng(6)
+    svc = _svc()
+    svc.append("t", _codes(rng, 2))
+    q = _codes(rng, 1)[0]
+    with pytest.raises(ValueError, match="not both"):
+        svc.lookup("t", q, k=2, matches=3)
+    with pytest.raises(ValueError, match="matches must be >= 1"):
+        svc.lookup("t", q, matches=0)
+    with pytest.raises(ValueError, match="masked"):
+        svc.lookup("t", q, matches=2, backend="analog")
+
+    from repro.serve import IndexSpec
+    ix = AMService()
+    ix.create_table("i", width=WIDTH, bits=BITS, capacity=64,
+                    index=IndexSpec(sets=4, probes=1))
+    ix.append("i", _codes(rng, 8))
+    with pytest.raises(ValueError, match="index tier"):
+        ix.lookup("i", q, matches=2)
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration: grouping, compile accounting, driver
+# ---------------------------------------------------------------------------
+
+def test_multimatch_groups_separately_from_topk():
+    """One flush with mixed k= and matches= requests fans out into separate
+    dispatch groups, each resolved correctly."""
+    rng = np.random.default_rng(7)
+    codes = _codes(rng, 8)
+    svc = _svc()
+    svc.append("t", codes, values=list(range(8)))
+    f_top = svc.submit("t", codes[1], k=2)
+    f_mm = svc.submit("t", codes[2], matches=4)
+    svc.flush()
+    assert f_top.done and f_mm.done
+    top, mm = f_top.result(), f_mm.result()
+    assert top.match_count is None and top.indices[0] == 1
+    assert mm.match_count >= 1 and mm.indices[0] == 2
+    assert mm.value == 2
+
+
+def test_one_compilation_per_matches_signature():
+    rng = np.random.default_rng(8)
+    svc = _svc()
+    svc.append("t", _codes(rng, 8))
+
+    def flush_n(n, **kw):
+        for q in _codes(rng, n):
+            svc.submit("t", q, **kw)
+        svc.flush()
+
+    flush_n(3, matches=4)                          # compile
+    c0 = svc.stats()["compilations"]
+    flush_n(4, matches=4)                          # same bucket -> cached
+    assert svc.stats()["compilations"] == c0
+    flush_n(4, matches=6)                          # new matches -> new compile
+    assert svc.stats()["compilations"] == c0 + 1
+    flush_n(4, k=1)                                # plain top-k -> new compile
+    assert svc.stats()["compilations"] == c0 + 2
+
+
+def test_background_driver_resolves_multimatch():
+    rng = np.random.default_rng(9)
+    codes = _codes(rng, 4)
+    import time
+    svc = _svc(flush_after=0.005, time_fn=time.monotonic)
+    svc.append("t", codes, care=np.ones_like(codes))
+    svc.start_driver()
+    try:
+        resp = svc.submit("t", codes[0], matches=2).result(timeout=30.0)
+        assert resp.hit and resp.indices[0] == 0
+        assert resp.match_count >= 1
+    finally:
+        svc.close()
