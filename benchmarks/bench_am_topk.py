@@ -16,23 +16,49 @@ reports, per shape:
     plus the shared input bytes;
   * the output-traffic ratio dense/fused ~= N*4 / (k*8), linear in N/k.
 
+The k-sweep (k = 8 .. 256) covers the merge-network claim behind the
+``FUSED_K_MAX = 256`` ceiling: per N-block the ``"argmin"`` network costs
+O(k*(k+bn)) vector ops (the historical k <= 64 cap) while the ``"bitonic"``
+compare-exchange network costs O((k+bn) * log^2(k+bn)).  Both are measured
+two ways: wall-clock per k for dense / fused-argmin / fused-bitonic, and a
+*deterministic* per-block op count — ``len(jax.make_jaxpr(merge).eqns)`` on
+the exact helper the kernel unrolls — whose growth across the sweep is the
+O(log^2 k)-vs-O(k) law itself.  (Smoke skips argmin wall-clock above k=64:
+the quadratic unroll also makes XLA *compile* time quadratic, which is the
+point.)
+
 The merge-topology sweep (``--banks-sweep`` for just this part) covers the
-second architectural claim, ``search_sharded``'s cross-bank candidate
-reduction: per-device merge traffic is O(k*banks) for the flat all-gather
-but O(k*log banks) for the hierarchical tree merge
+third architectural claim, ``search_sharded``'s cross-bank candidate
+reduction: per-device merge traffic is O(Q*k*banks) for the flat all-gather,
+O(Q*k*log banks) for the hierarchical tree merge, and O(Q*k) — independent
+of the bank count — for the chunked ring reduce-scatter
 (``docs/ARCHITECTURE.md`` contract 3).  Traffic comes from
 ``am.merge_traffic_bytes`` — derived via ``jax.eval_shape`` over the same
 candidate-list helpers the shard_map body exchanges — and, where the host
-has enough (fake) devices, the sweep also wall-clocks both strategies on a
-real mesh and asserts them bitwise-identical to single-device ``am.search``.
+has enough (fake) devices, the sweep also wall-clocks all three strategies
+on a real mesh and asserts them bitwise-identical to single-device
+``am.search``.
 
-``--smoke`` (the CI benchmark job) shrinks both sweeps and asserts:
+Every deterministic column (op counts, traffic bytes, the ``auto``
+resolution, ``FUSED_K_MAX``) lands in ``BENCH_topk.json`` next to the CSV
+lines; ``scripts/check_bench_regression.py`` diffs it against the committed
+baseline in CI (wall-clock is reported, never gated).  The committed
+baseline is a ``--smoke`` run — regenerate it with ``--smoke`` in the same
+PR whenever the sweep geometry changes.
 
-  * dense == fused bitwise, and fused output traffic independent of N
-    (the "never materialises (Q, N)" check);
-  * tree == allgather == single-device bitwise on an 8-bank mesh;
-  * tree merge traffic grows with ceil(log2(banks)) while allgather grows
-    with (banks - 1) — the O(k*log banks) acceptance bound.
+``--smoke`` (the CI benchmark job) shrinks the sweeps and asserts:
+
+  * dense == fused bitwise at every swept k — including k = 256, above the
+    old argmin ceiling — and fused output traffic independent of N;
+  * argmin per-block op count grows ~linearly over k = 8 -> 256 while
+    bitonic stays polylog-flat and is strictly cheaper at k = 256;
+  * ``am.search`` at k = 256 dispatches the fused tier (no silent dense
+    fallback: ``am.fused_fallbacks()`` stays 0);
+  * tree == allgather == ring == single-device bitwise on the meshes the
+    runner can fake;
+  * tree merge traffic grows with ceil(log2(banks)), allgather with
+    (banks - 1), and the ring's banks-normalised traffic is *constant* —
+    the O(Q*k) acceptance bound.
 
   PYTHONPATH=src:. python benchmarks/bench_am_topk.py
   PYTHONPATH=src:. python benchmarks/bench_am_topk.py --smoke
@@ -42,6 +68,7 @@ real mesh and asserts them bitwise-identical to single-device ``am.search``.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 
 # 8 fake CPU devices so the merge sweep can build real multi-bank meshes;
@@ -58,9 +85,16 @@ import numpy as np
 
 from benchmarks.common import emit, time_call
 from repro.core import am
+from repro.kernels.cam_search import kernel as cam_kernel
 from repro.kernels.cam_search import ops as cam_ops
 
 BITS = 3
+#: the k grid for the merge-network sweep; the top end IS am.FUSED_K_MAX.
+K_SWEEP = (8, 16, 32, 64, 128, 256)
+#: smoke skips argmin wall-clock above this k — the O(k*(k+bn)) unroll
+#: makes XLA compile time quadratic in k, which is exactly the pathology
+#: the bitonic network removes (full runs measure it anyway).
+ARGMIN_WALL_MAX_SMOKE = 64
 
 
 def dense_topk(queries, table, k):
@@ -82,6 +116,27 @@ def output_bytes(fn, *args) -> int:
     shapes = jax.eval_shape(fn, *args)
     return sum(int(np.prod(s.shape)) * s.dtype.itemsize
                for s in jax.tree_util.tree_leaves(shapes))
+
+
+def merge_eqn_counts(k: int, *, bn: int = 128, bq: int = 8):
+    """(argmin, bitonic) per-block op counts at a given k, deterministically.
+
+    Counts the jaxpr equations of the exact merge helpers the fused kernel
+    unrolls once per N-block — abstract evaluation only, nothing runs.  This
+    is the cost-accounting side of the O(log^2 k)-vs-O(k) growth law: the
+    argmin network is k rounds over a (bq, k + bn) row, the bitonic network
+    is log^2-many compare-exchange stages whose count is dominated by the
+    fixed-bn candidate sort.
+    """
+    def count(fn):
+        args = (jax.ShapeDtypeStruct((bq, k), jnp.float32),
+                jax.ShapeDtypeStruct((bq, k), jnp.int32),
+                jax.ShapeDtypeStruct((bq, bn), jnp.float32),
+                jax.ShapeDtypeStruct((bq, bn), jnp.int32))
+        jaxpr = jax.make_jaxpr(lambda a, b, c, d: fn(a, b, c, d, k))(*args)
+        return len(jaxpr.jaxpr.eqns)
+    return (count(cam_kernel._MERGE_FNS["argmin"]),
+            count(cam_kernel._MERGE_FNS["bitonic"]))
 
 
 def run(smoke: bool = False, *, d: int = 64) -> None:
@@ -127,9 +182,84 @@ def run(smoke: bool = False, *, d: int = 64) -> None:
              f"out_traffic_ratio={ratio:.0f}x")
 
 
-def run_merge_sweep(smoke: bool = False, *, d: int = 24) -> None:
-    """Tree vs allgather: per-device merge traffic + (where possible) wall."""
-    q, k, n = (8, 4, 512) if smoke else (16, 8, 4096)
+def run_k_sweep(smoke: bool, report: dict, *, d: int = 64) -> None:
+    """k = 8..256: dense vs fused-argmin vs fused-bitonic + the op-count law.
+
+    Op counts are recorded for the full :data:`K_SWEEP` in both modes (they
+    are free — abstract evaluation only) so the committed baseline is
+    independent of which ks were wall-clocked.
+    """
+    q, n = (16, 2048) if smoke else (64, 8192)
+    iters = 3 if smoke else 10
+    wall_ks = (8, 64, 256) if smoke else K_SWEEP
+    rng = np.random.default_rng(0)
+    queries = jnp.asarray(rng.integers(0, 8, (q, d)), jnp.int32)
+    table = jnp.asarray(rng.integers(0, 8, (n, d)), jnp.int32)
+
+    for k in K_SWEEP:
+        eqns_argmin, eqns_bitonic = merge_eqn_counts(k)
+        report["ksweep"][str(k)] = {"eqns_argmin": eqns_argmin,
+                                    "eqns_bitonic": eqns_bitonic}
+
+    if smoke:
+        # the O(log^2 k)-vs-O(k) growth law: argmin's per-block op count
+        # scales ~linearly over 8 -> 256 (measured ~31x) while bitonic stays
+        # polylog-flat (dominated by the fixed bn=128 candidate sort), and
+        # bitonic is strictly cheaper at the new k = 256 ceiling.
+        ks = report["ksweep"]
+        r_argmin = ks["256"]["eqns_argmin"] / ks["8"]["eqns_argmin"]
+        r_bitonic = ks["256"]["eqns_bitonic"] / ks["8"]["eqns_bitonic"]
+        assert r_argmin >= 16, r_argmin
+        assert r_bitonic <= 4, r_bitonic
+        assert ks["256"]["eqns_bitonic"] < ks["256"]["eqns_argmin"], ks["256"]
+
+    for k in wall_ks:
+        f_dense = jax.jit(lambda qq, tt, k=k: dense_topk(qq, tt, k))
+        f_bit = jax.jit(lambda qq, tt, k=k: cam_ops.topk_fused(
+            qq, tt, k=k, bits=BITS, merge_alg="bitonic"))
+        dense_us = time_call(f_dense, queries, table, iters=iters)
+        bitonic_us = time_call(f_bit, queries, table, iters=iters)
+        entry = report["ksweep"][str(k)]
+        derived = (f"dense_us={dense_us:.1f};bitonic_us={bitonic_us:.1f};"
+                   f"eqns_argmin={entry['eqns_argmin']};"
+                   f"eqns_bitonic={entry['eqns_bitonic']}")
+        f_arg = None
+        if not smoke or k <= ARGMIN_WALL_MAX_SMOKE:
+            f_arg = jax.jit(lambda qq, tt, k=k: cam_ops.topk_fused(
+                qq, tt, k=k, bits=BITS, merge_alg="argmin"))
+            argmin_us = time_call(f_arg, queries, table, iters=iters)
+            derived += f";argmin_us={argmin_us:.1f}"
+        else:
+            derived += ";argmin_us=skipped"
+
+        if smoke:
+            # bitwise across the whole band, incl. k = 256 > the old cap
+            gi, gd = jax.device_get(f_bit(queries, table))
+            wi, wd = jax.device_get(f_dense(queries, table))
+            np.testing.assert_array_equal(gi, wi)
+            np.testing.assert_array_equal(gd, wd)
+            if f_arg is not None:
+                ai, ad = jax.device_get(f_arg(queries, table))
+                np.testing.assert_array_equal(ai, wi)
+                np.testing.assert_array_equal(ad, wd)
+
+        emit(f"am_topk_ksweep_q{q}_n{n}_k{k}", bitonic_us, derived)
+
+    # the ceiling end to end: am.search at k = max(K_SWEEP) must take the
+    # fused tier, not the silent dense fallback the counter now surfaces
+    assert am.FUSED_K_MAX >= max(K_SWEEP), am.FUSED_K_MAX
+    am.reset_fused_fallbacks()
+    t = am.make_table(table, bits=BITS)
+    jax.block_until_ready(
+        am.search(t, queries, k=max(K_SWEEP), backend="pallas").indices)
+    assert am.fused_fallbacks() == 0, am.fused_fallbacks()
+
+
+def run_merge_sweep(smoke: bool, report: dict, *, d: int = 24) -> None:
+    """Tree vs allgather vs ring: per-device merge traffic + (where possible)
+    wall-clock; smoke Q is a multiple of every bank count so the ring's
+    query chunks never pad (the flat-traffic bound needs Q >= banks)."""
+    q, k, n = (64, 8, 512) if smoke else (16, 8, 4096)
     banks_sweep = (2, 4, 8, 16, 32, 64) if smoke else (2, 4, 8, 16, 32, 64,
                                                        128, 256)
     iters = 3 if smoke else 10
@@ -138,19 +268,26 @@ def run_merge_sweep(smoke: bool = False, *, d: int = 24) -> None:
     queries = jnp.asarray(rng.integers(0, 8, (q, d)), jnp.int32)
     table = am.make_table(codes, bits=BITS)
     n_dev = len(jax.devices())
+    report["merge_geometry"] = {"q": q, "k": k, "n": n}
 
     traffic = {}
     for banks in banks_sweep:
         tree_b = am.merge_traffic_bytes(banks, q, k, merge="tree", n_rows=n)
         ag_b = am.merge_traffic_bytes(banks, q, k, merge="allgather",
                                       n_rows=n)
-        traffic[banks] = (tree_b, ag_b)
+        ring_b = am.merge_traffic_bytes(banks, q, k, merge="ring", n_rows=n)
+        traffic[banks] = (tree_b, ag_b, ring_b)
+        auto = am.resolve_merge("auto", banks, k)
+        report["merge"][str(banks)] = {
+            "tree_bytes": tree_b, "allgather_bytes": ag_b,
+            "ring_bytes": ring_b, "auto": auto}
         derived = (f"tree_bytes={tree_b};allgather_bytes={ag_b};"
+                   f"ring_bytes={ring_b};"
                    f"tree_saving={ag_b / tree_b:.1f}x;"
-                   f"auto={am.resolve_merge('auto', banks)}")
+                   f"ring_saving={ag_b / ring_b:.1f}x;auto={auto}")
         wall = 0.0
         if banks <= n_dev:
-            # a real mesh exists on this host: wall-clock both strategies
+            # a real mesh exists on this host: wall-clock all strategies
             # (CPU collectives — the architectural signal is the traffic)
             mesh = jax.sharding.Mesh(np.array(jax.devices()[:banks]),
                                      ("model",))
@@ -158,30 +295,45 @@ def run_merge_sweep(smoke: bool = False, *, d: int = 24) -> None:
                 t, qq, mesh=mesh, k=k, merge="tree").indices)
             f_ag = jax.jit(lambda t, qq: am.search_sharded(
                 t, qq, mesh=mesh, k=k, merge="allgather").indices)
+            f_ring = jax.jit(lambda t, qq: am.search_sharded(
+                t, qq, mesh=mesh, k=k, merge="ring").indices)
             wall = time_call(f_tree, table, queries, iters=iters)
             ag_us = time_call(f_ag, table, queries, iters=iters)
-            derived += f";tree_us={wall:.1f};allgather_us={ag_us:.1f}"
-            ti, ai = jax.device_get((f_tree(table, queries),
-                                     f_ag(table, queries)))
+            ring_us = time_call(f_ring, table, queries, iters=iters)
+            derived += (f";tree_us={wall:.1f};allgather_us={ag_us:.1f};"
+                        f"ring_us={ring_us:.1f}")
+            ti, ai, ri = jax.device_get((f_tree(table, queries),
+                                         f_ag(table, queries),
+                                         f_ring(table, queries)))
             wi = jax.device_get(am.search(table, queries, k=k).indices)
             np.testing.assert_array_equal(ti, wi)
             np.testing.assert_array_equal(ai, wi)
+            np.testing.assert_array_equal(ri, wi)
         emit(f"am_merge_banks{banks}_q{q}_k{k}", wall, derived)
 
     if smoke:
-        # the acceptance bound: tree traffic is O(k * log banks) — it must
-        # grow with ceil(log2(banks)), not with (banks - 1) like allgather
+        # the acceptance bounds: tree traffic is O(Q*k*log banks) — it must
+        # grow with ceil(log2(banks)), allgather with (banks - 1), and the
+        # ring's banks-normalised traffic must be CONSTANT at 2*Q*k*8 (the
+        # reduce-scatter forwards each query chunk 2*(banks-1) times, and
+        # chunk = Q/banks, so the product is independent of the bank count)
         per_round = q * k * 8                     # (Q, k) f32+i32 pair
         for banks in banks_sweep:
-            tree_b, ag_b = traffic[banks]
+            tree_b, ag_b, ring_b = traffic[banks]
             rounds = (banks - 1).bit_length()
+            chunk = -(-q // banks)
             assert tree_b == rounds * per_round, (banks, tree_b, rounds)
             assert ag_b == (banks - 1) * per_round, (banks, ag_b)
+            assert ring_b == 2 * (banks - 1) * chunk * k * 8, (banks, ring_b)
         t_ratio = traffic[64][0] / traffic[4][0]
         a_ratio = traffic[64][1] / traffic[4][1]
         assert t_ratio == 3.0, t_ratio           # log2(64)/log2(4)
         assert a_ratio == 21.0, a_ratio          # 63/3
+        flat = {b * traffic[b][2] // (b - 1) for b in banks_sweep}
+        assert flat == {2 * per_round}, flat     # ring: O(Q*k), banks-free
         assert traffic[64][0] < traffic[64][1]   # tree wins where it matters
+        for banks in (8, 16, 32, 64):
+            assert traffic[banks][2] < traffic[banks][0], (banks, traffic)
 
 
 if __name__ == "__main__":
@@ -189,10 +341,17 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sweeps + bitwise/traffic assertions (CI)")
     ap.add_argument("--banks-sweep", action="store_true",
-                    help="run only the merge-topology (tree vs allgather) "
-                         "sweep")
+                    help="run only the merge-topology (tree vs allgather vs "
+                         "ring) sweep")
     args = ap.parse_args()
     print("name,us_per_call,derived")
+    report = {"bits": BITS, "fused_k_max": am.FUSED_K_MAX,
+              "ksweep": {}, "merge": {}, "merge_geometry": {}}
     if not args.banks_sweep:
         run(smoke=args.smoke)
-    run_merge_sweep(smoke=args.smoke)
+        run_k_sweep(args.smoke, report)
+    run_merge_sweep(args.smoke, report)
+    with open("BENCH_topk.json", "w") as fh:
+        json.dump(report, fh, indent=2, sort_keys=True)
+    print(f"wrote BENCH_topk.json ({len(report['ksweep'])} k points, "
+          f"{len(report['merge'])} bank counts)", flush=True)

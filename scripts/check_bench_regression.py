@@ -1,31 +1,46 @@
-"""Bench regression gate: fresh BENCH_index.json vs the committed baseline.
+"""Bench regression gate: fresh bench reports vs the committed baselines.
 
-``benchmarks/bench_am_index.py --smoke`` overwrites ``BENCH_index.json`` with
-the run it just measured; until now CI only *re-measured* and uploaded the
-artifact, so a silent recall or candidate-fraction regression sailed through
-as long as the run's own absolute gates held.  This script closes the loop:
-it diffs a freshly produced report against the baseline committed in git and
+The ``--smoke`` benches overwrite their JSON reports in place
+(``benchmarks/bench_am_index.py`` -> ``BENCH_index.json``,
+``benchmarks/bench_am_topk.py`` -> ``BENCH_topk.json``); until now CI only
+*re-measured* and uploaded the artifacts, so a silent recall,
+candidate-fraction, op-count or merge-traffic regression sailed through as
+long as the run's own absolute gates held.  This script closes the loop: it
+diffs freshly produced reports against the baselines committed in git and
 fails when quality drops beyond tolerance.
 
 Quality metrics are deterministic on the pinned seed, so tolerances are
-tight; wall-clock (``us_per_call``) is runner-dependent and is deliberately
-NOT gated — a perf report, not a perf gate.
+tight; wall-clock (``us_per_call``, ``*_us``) is runner-dependent and is
+deliberately NOT gated — a perf report, not a perf gate.
 
-Tolerances (per probe point present in BOTH reports):
+Index tolerances (per probe point present in BOTH reports):
   * ``recall_at_k``          may drop at most ``RECALL_DROP`` (0.02) absolute;
   * ``candidate_fraction``   may grow at most ``FRAC_GROWTH`` (1.10) relative
     (scanning more rows for the same probes = the index got coarser).
 
-Structural drift — a probe point or top-level geometry key (sets, k, n,
-queries) present in the baseline but missing or changed in the fresh run —
-also fails: geometry changes must land with a regenerated committed baseline
-in the same PR.
+Top-k gates (everything deterministic — abstract evaluation, no timing):
+  * ``fused_k_max`` must not drop below the baseline ceiling;
+  * per-block merge-network op counts (``eqns_argmin``/``eqns_bitonic`` per
+    swept k) may grow at most ``EQN_GROWTH`` (1.10) relative — the
+    O(log^2 k) claim can't silently decay into O(k);
+  * per-bank-count merge traffic bytes (tree / allgather / ring) and the
+    ``merge="auto"`` resolution must match the baseline exactly.
 
-Usage (CI stashes the committed baseline before the bench overwrites it):
+Structural drift — a probe point, k point, bank count or geometry key
+present in the baseline but missing or changed in the fresh run — also
+fails: geometry changes must land with a regenerated committed baseline in
+the same PR.
+
+Usage (CI stashes the committed baselines before the benches overwrite
+them; either gate may be run alone):
     cp BENCH_index.json /tmp/BENCH_index.baseline.json
+    cp BENCH_topk.json /tmp/BENCH_topk.baseline.json
+    python benchmarks/bench_am_topk.py --smoke
     python benchmarks/bench_am_index.py --smoke
     python scripts/check_bench_regression.py \
-        --baseline /tmp/BENCH_index.baseline.json --fresh BENCH_index.json
+        --baseline /tmp/BENCH_index.baseline.json --fresh BENCH_index.json \
+        --topk-baseline /tmp/BENCH_topk.baseline.json \
+        --topk-fresh BENCH_topk.json
 
 Stdlib-only, exit status 0/1.
 """
@@ -36,7 +51,9 @@ import sys
 
 RECALL_DROP = 0.02       # absolute recall@k drop allowed per probe point
 FRAC_GROWTH = 1.10       # relative candidate-fraction growth allowed
+EQN_GROWTH = 1.10        # relative merge-network op-count growth allowed
 GEOMETRY_KEYS = ("sets", "k", "n", "queries")
+TRAFFIC_KEYS = ("tree_bytes", "allgather_bytes", "ring_bytes", "auto")
 
 
 def compare(baseline: dict, fresh: dict) -> list[str]:
@@ -71,27 +88,92 @@ def compare(baseline: dict, fresh: dict) -> list[str]:
     return errors
 
 
+def compare_topk(baseline: dict, fresh: dict) -> list[str]:
+    """Regressions between two BENCH_topk.json reports (empty = ok)."""
+    errors = []
+    if fresh.get("fused_k_max", 0) < baseline.get("fused_k_max", 0):
+        errors.append(
+            f"fused_k_max dropped {baseline.get('fused_k_max')!r} -> "
+            f"{fresh.get('fused_k_max')!r} (the fused-tier ceiling must "
+            "not regress)")
+    for key in ("bits", "merge_geometry"):
+        if baseline.get(key) != fresh.get(key):
+            errors.append(
+                f"geometry drift: {key} baseline={baseline.get(key)!r} "
+                f"fresh={fresh.get(key)!r} (regenerate the committed "
+                "baseline in the same PR)")
+    for k, base in sorted(baseline.get("ksweep", {}).items(),
+                          key=lambda kv: int(kv[0])):
+        cur = fresh.get("ksweep", {}).get(k)
+        if cur is None:
+            errors.append(f"k point k={k} missing from fresh run")
+            continue
+        for field in ("eqns_argmin", "eqns_bitonic"):
+            if base[field] <= 0:
+                continue
+            growth = cur[field] / base[field]
+            if growth > EQN_GROWTH:
+                errors.append(
+                    f"k={k}: {field} grew {base[field]} -> {cur[field]} "
+                    f"({growth:.2f}x > {EQN_GROWTH}x)")
+    for banks, base in sorted(baseline.get("merge", {}).items(),
+                              key=lambda kv: int(kv[0])):
+        cur = fresh.get("merge", {}).get(banks)
+        if cur is None:
+            errors.append(f"bank count banks={banks} missing from fresh run")
+            continue
+        for field in TRAFFIC_KEYS:
+            if base.get(field) != cur.get(field):
+                errors.append(
+                    f"banks={banks}: {field} drifted "
+                    f"{base.get(field)!r} -> {cur.get(field)!r} (merge "
+                    "traffic and auto resolution are deterministic — "
+                    "regenerate the committed baseline in the same PR)")
+    return errors
+
+
 def main(argv=None) -> int:
     """CLI entry point; returns the process exit status."""
     ap = argparse.ArgumentParser()
-    ap.add_argument("--baseline", required=True,
+    ap.add_argument("--baseline",
                     help="committed BENCH_index.json (stash before the "
                          "bench overwrites it)")
     ap.add_argument("--fresh", default="BENCH_index.json",
-                    help="report written by the bench run under test")
+                    help="index report written by the bench run under test")
+    ap.add_argument("--topk-baseline",
+                    help="committed BENCH_topk.json (stash before the "
+                         "bench overwrites it)")
+    ap.add_argument("--topk-fresh", default="BENCH_topk.json",
+                    help="top-k report written by the bench run under test")
     args = ap.parse_args(argv)
-    with open(args.baseline) as fh:
-        baseline = json.load(fh)
-    with open(args.fresh) as fh:
-        fresh = json.load(fh)
-    errors = compare(baseline, fresh)
+    if not args.baseline and not args.topk_baseline:
+        ap.error("at least one of --baseline / --topk-baseline is required")
+    errors = []
+    if args.baseline:
+        with open(args.baseline) as fh:
+            baseline = json.load(fh)
+        with open(args.fresh) as fh:
+            fresh = json.load(fh)
+        errors += compare(baseline, fresh)
+        if not errors:
+            n = len(baseline.get("probes", {}))
+            print(f"index bench gate: {n} probe points within tolerance "
+                  f"(recall drop <= {RECALL_DROP}, frac growth <= "
+                  f"{FRAC_GROWTH}x)")
+    if args.topk_baseline:
+        with open(args.topk_baseline) as fh:
+            baseline = json.load(fh)
+        with open(args.topk_fresh) as fh:
+            fresh = json.load(fh)
+        topk_errors = compare_topk(baseline, fresh)
+        errors += topk_errors
+        if not topk_errors:
+            print(f"topk bench gate: {len(baseline.get('ksweep', {}))} k "
+                  f"points (op-count growth <= {EQN_GROWTH}x), "
+                  f"{len(baseline.get('merge', {}))} bank counts bitwise, "
+                  f"fused_k_max >= {baseline.get('fused_k_max')}")
     for e in errors:
         print(f"REGRESSION: {e}")
-    if not errors:
-        n = len(baseline.get("probes", {}))
-        print(f"bench regression gate: {n} probe points within tolerance "
-              f"(recall drop <= {RECALL_DROP}, frac growth <= "
-              f"{FRAC_GROWTH}x)")
     return 1 if errors else 0
 
 

@@ -58,8 +58,8 @@ window, priority (lowest (distance, index)) entry first, with an exact
 
 Merge topologies (``search_sharded``'s cross-bank candidate reduction)
 ----------------------------------------------------------------------
-Per-bank top-k candidate lists are reduced to the global top-k by one of two
-strategies, selected by the ``merge=`` argument:
+Per-bank top-k candidate lists are reduced to the global top-k by one of
+three strategies, selected by the ``merge=`` argument:
 
 * ``"allgather"`` — every bank broadcasts its (Q, k_local) candidate pair to
   every other bank, then re-ranks locally.  One collective round; per-device
@@ -68,10 +68,16 @@ strategies, selected by the ``merge=`` argument:
   k-way lexicographic (distance, global-row-index) merge, each round keeping
   only the running top-k.  Per-device traffic O(Q * k * log banks) — flat
   per bank as the array scales out, the paper's scalability claim.
-* ``"auto"``      — ``"tree"`` when the mesh's ``model`` axis is at least
-  :data:`TREE_MERGE_MIN_BANKS` wide, else ``"allgather"``.
+* ``"ring"``      — a reduce-scatter over query chunks (banks-1 ``ppermute``
+  rounds, each bank folding its candidates into a rotating Q/banks chunk)
+  plus one chunk-sized all-gather.  Per-device traffic O(Q * k),
+  independent of bank count — bandwidth-optimal, the right topology when
+  k >> banks — at 2*(banks-1) rounds of latency.
+* ``"auto"``      — ``"allgather"`` below :data:`TREE_MERGE_MIN_BANKS`
+  banks; at or above it, ``"ring"`` when ``k >=``
+  :data:`RING_MERGE_MIN_K_PER_BANK` ``* banks``, else ``"tree"``.
 
-Both strategies are bitwise-identical to single-device :func:`search` —
+All strategies are bitwise-identical to single-device :func:`search` —
 the lexicographic merge preserves the (distance, row index) tie-break
 exactly — so the choice is purely a traffic/latency trade.
 
@@ -340,12 +346,48 @@ BackendFn = Callable[[jnp.ndarray, jnp.ndarray, int, str], jnp.ndarray]
 #: ties (including +inf masked rows) to the lowest row index.
 FusedBackendFn = Callable[..., tuple[jnp.ndarray, jnp.ndarray]]
 
-#: Largest ``k`` routed to a backend's fused tier.  The streaming kernels
-#: unroll a k-round selection per table block, so huge k would trade the
-#: O(Q*N) -> O(Q*k) memory win for compile-time/VPU pain; beyond this the
-#: dense tier + ``lax.top_k`` is the right tool anyway (k ~ N).  Both tiers
-#: are bitwise-identical, so the cutover is invisible.
-FUSED_K_MAX = 64
+#: Largest ``k`` routed to a backend's fused tier.  The streaming kernel's
+#: per-block fold is a bitonic merge network — O(log^2(k + bn))
+#: compare-exchange stages, not the k sequential argmin rounds that once
+#: capped this at 64 — so the ceiling now sits where the (bq, k) running
+#: state stops paying for itself in VMEM; beyond it the dense tier +
+#: ``lax.top_k`` is the right tool anyway (k ~ N).  Both tiers are
+#: bitwise-identical, so the cutover is invisible in results — but not in
+#: cost, so crossings are counted (see :func:`fused_fallbacks`).
+FUSED_K_MAX = 256
+
+# Count of times a fused-capable backend was forced onto the dense O(Q*N)
+# path because k (or the match window) exceeded FUSED_K_MAX.  The dispatch
+# is static (k and FUSED_K_MAX are Python ints), so the counter ticks at
+# trace time: once per compiled signature under jit, once per call when
+# eager.  Either way a nonzero reading means the fused ceiling is being
+# crossed somewhere — previously this downgrade was silent and showed up
+# only as a slowdown.
+_fused_fallback_count = 0
+
+
+def _note_fused_fallback() -> None:
+    global _fused_fallback_count
+    _fused_fallback_count += 1
+
+
+def fused_fallbacks() -> int:
+    """How often a fused-capable backend fell back to the dense tier.
+
+    Counts dispatch decisions in :func:`search` / :func:`search_sharded`
+    where the backend registers a fused tier but ``k`` (or ``matches``)
+    exceeds :data:`FUSED_K_MAX` — the silent O(Q*k) -> O(Q*N) downgrade
+    this counter makes observable.  Ticks at trace time (see the note on
+    ``_fused_fallback_count``); :class:`repro.serve.am_service.AMService`
+    additionally counts per *request group* in ``stats()``.
+    """
+    return _fused_fallback_count
+
+
+def reset_fused_fallbacks() -> None:
+    """Zero the :func:`fused_fallbacks` counter (test/bench isolation)."""
+    global _fused_fallback_count
+    _fused_fallback_count = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -428,6 +470,12 @@ def backend_capabilities(name: str) -> tuple[str, ...]:
     Always starts with ``"dense"``; ``"fused"`` when a fused top-k tier is
     registered as well, ``"masked"`` when the backend accepts ternary care
     planes (``docs/ARCHITECTURE.md`` backend table — machine-checked).
+
+    A ``"fused"`` capability only engages for ``k <= FUSED_K_MAX``; beyond
+    that ``search``/``search_sharded`` silently run the dense tier
+    (bitwise-identical, asymptotically slower).  :func:`fused_fallbacks`
+    counts those downgrades, and serving exposes them per request group as
+    ``AMService.stats()["fused_fallbacks"]``.
     """
     return _get_entry(name).capabilities
 
@@ -842,6 +890,9 @@ def search(table: AMTable, queries, *, k: int = 1,
                 queries, table.codes, table.bits, table.distance, k=m_eff,
                 valid_rows=valid_rows, count_le=thr_q, **ckw)
         else:
+            if be.fused is not None and be.fused_count \
+                    and m_eff > FUSED_K_MAX:
+                _note_fused_fallback()
             d = be.dense(queries, table.codes, table.bits, table.distance,
                          **ckw).astype(jnp.float32)
             if valid_rows is not None:
@@ -858,6 +909,8 @@ def search(table: AMTable, queries, *, k: int = 1,
         idx, dist = be.fused(queries, table.codes, table.bits, table.distance,
                              k=k, valid_rows=valid_rows, **ckw)
         return _finalize(idx, dist, threshold, squeeze)
+    if be.fused is not None and k > FUSED_K_MAX:
+        _note_fused_fallback()
     d = be.dense(queries, table.codes, table.bits, table.distance, **ckw)
     d = d.astype(jnp.float32)
     if valid_rows is not None:
@@ -872,15 +925,24 @@ def search(table: AMTable, queries, *, k: int = 1,
 # ---------------------------------------------------------------------------
 
 #: Cross-bank merge strategies ``search_sharded`` accepts.
-MERGE_STRATEGIES = ("auto", "allgather", "tree")
+MERGE_STRATEGIES = ("auto", "allgather", "tree", "ring")
 
-#: ``merge="auto"`` picks the tree merge at and above this ``model``-axis
-#: width.  Below it the flat all-gather's single collective round beats the
-#: tree's log2(banks) round latency; above it the all-gather's O(k * banks)
-#: per-device traffic dominates (ROADMAP: flat merge stops scaling past
-#: ~16-way meshes).  ``docs/ARCHITECTURE.md`` holds the decision table;
-#: ``tests/test_docs_contract.py`` keeps the two in sync.
+#: ``merge="auto"`` picks a collective merge (tree or ring) at and above
+#: this ``model``-axis width.  Below it the flat all-gather's single
+#: collective round beats any multi-round schedule's latency; above it the
+#: all-gather's O(k * banks) per-device traffic dominates (ROADMAP: flat
+#: merge stops scaling past ~16-way meshes).  ``docs/ARCHITECTURE.md``
+#: holds the decision table; ``tests/test_docs_contract.py`` keeps the two
+#: in sync.
 TREE_MERGE_MIN_BANKS = 16
+
+#: ``merge="auto"`` upgrades tree -> ring when ``k >= this * n_banks``.
+#: The ring's per-device traffic is O(Q * k) independent of bank count
+#: versus the tree's O(Q * k * log banks), but it pays 2*(banks - 1)
+#: ppermute/all-gather rounds versus ceil(log2(banks)) + 1 — so it only
+#: wins when the per-round payload is large enough that bandwidth, not
+#: round latency, dominates, i.e. k >> banks.
+RING_MERGE_MIN_K_PER_BANK = 4
 
 #: Row-index sentinel for candidate-list padding and duplicate masking; sorts
 #: after every real row index (and after +inf-masked real rows at equal
@@ -888,23 +950,28 @@ TREE_MERGE_MIN_BANKS = 16
 _IDX_SENTINEL = np.iinfo(np.int32).max
 
 
-def resolve_merge(merge: str, n_banks: int) -> str:
+def resolve_merge(merge: str, n_banks: int, k: int = 1) -> str:
     """Resolve a ``merge=`` argument to a concrete strategy.
 
     Args:
-      merge: ``"auto"``, ``"allgather"`` or ``"tree"``.
+      merge: ``"auto"``, ``"allgather"``, ``"tree"`` or ``"ring"``.
       n_banks: width of the mesh axis the table is banked over.
+      k: the top-k (or match window) width the merge will carry; only
+        consulted by ``"auto"``, which upgrades tree -> ring in the
+        bandwidth-bound regime ``k >= RING_MERGE_MIN_K_PER_BANK * n_banks``.
 
     Returns:
-      ``"allgather"`` or ``"tree"`` (``"auto"`` resolves by
-      :data:`TREE_MERGE_MIN_BANKS`).
+      ``"allgather"``, ``"tree"`` or ``"ring"`` (``"auto"`` resolves by
+      :data:`TREE_MERGE_MIN_BANKS` then :data:`RING_MERGE_MIN_K_PER_BANK`).
     """
     if merge not in MERGE_STRATEGIES:
         raise ValueError(
             f"unknown merge {merge!r}; expected one of {MERGE_STRATEGIES}")
     if merge != "auto":
         return merge
-    return "tree" if n_banks >= TREE_MERGE_MIN_BANKS else "allgather"
+    if n_banks < TREE_MERGE_MIN_BANKS:
+        return "allgather"
+    return "ring" if k >= RING_MERGE_MIN_K_PER_BANK * n_banks else "tree"
 
 
 def _pad_candidates(dist: jnp.ndarray, idx: jnp.ndarray,
@@ -973,13 +1040,56 @@ def _merge_bank_candidates(dist_local: jnp.ndarray, idx_local: jnp.ndarray, *,
       axis: the mesh axis name the table is banked over.
       n_banks: width of that axis.
       k: global top-k to keep (the exchanged lists are padded to it).
-      strategy: ``"tree"`` or ``"allgather"`` (resolve ``"auto"`` first via
-        :func:`resolve_merge`).
+      strategy: ``"tree"``, ``"allgather"`` or ``"ring"`` (resolve
+        ``"auto"`` first via :func:`resolve_merge`).
 
     Returns:
       ``(indices, distances)`` — the (Q, k) global top-k, replicated across
       the axis, ordered by ascending (distance, global row index).
     """
+    if strategy == "ring":
+        # Reduce-scatter over query chunks: the Q queries split into
+        # n_banks chunks of ceil(Q/banks); in round r bank p forwards the
+        # partially-merged chunk it accumulated last round and folds its
+        # own local candidates into the chunk arriving from bank p-1.
+        # After banks-1 rounds bank p holds chunk (p+1) % banks fully
+        # merged (every bank's candidates folded in exactly once — no
+        # duplicates, so the pairwise merge's dedup only ever fires on
+        # sentinels), and one chunk-sized all-gather rebuilds the
+        # replicated (Q, k) result.  Per-device traffic is
+        # 2 * (banks-1) * (Q/banks) * k entries ~= O(Q * k), independent
+        # of bank count — the bandwidth-optimal schedule for k >> banks —
+        # at the price of 2*(banks-1) rounds of latency.
+        dist_c, idx_c = _pad_candidates(dist_local, idx_local, k)
+        q = dist_c.shape[0]
+        chunk = -(-q // n_banks)
+        pad_q = chunk * n_banks - q
+        if pad_q:
+            dist_c = jnp.pad(dist_c, ((0, pad_q), (0, 0)),
+                             constant_values=jnp.inf)
+            idx_c = jnp.pad(idx_c, ((0, pad_q), (0, 0)),
+                            constant_values=_IDX_SENTINEL)
+        p = jax.lax.axis_index(axis)
+
+        def _local_chunk(c):
+            return (jax.lax.dynamic_slice_in_dim(dist_c, c * chunk, chunk),
+                    jax.lax.dynamic_slice_in_dim(idx_c, c * chunk, chunk))
+
+        perm = [(i, (i + 1) % n_banks) for i in range(n_banks)]
+        acc_d, acc_i = _local_chunk(p)
+        for r in range(n_banks - 1):
+            acc_d = jax.lax.ppermute(acc_d, axis, perm)
+            acc_i = jax.lax.ppermute(acc_i, axis, perm)
+            ld, li = _local_chunk((p - r - 1) % n_banks)
+            acc_d, acc_i = _lex_merge_topk(acc_d, acc_i, ld, li, k)
+        # bank p finished chunk (p+1) % banks: gathered[j] is chunk j+1,
+        # so rolling by one restores query order before the un-pad.
+        gd = jax.lax.all_gather(acc_d, axis)
+        gi = jax.lax.all_gather(acc_i, axis)
+        gd = jnp.roll(gd, 1, axis=0).reshape(chunk * n_banks, k)[:q]
+        gi = jnp.roll(gi, 1, axis=0).reshape(chunk * n_banks, k)[:q]
+        return gi, gd
+
     if strategy == "tree":
         # Recursive doubling: round r receives the running top-k of the
         # bank 2**r places down-ring and folds it in with the pairwise
@@ -1037,9 +1147,9 @@ def merge_traffic_bytes(n_banks: int, q: int, k: int, *, merge: str = "auto",
     """
     if n_banks < 1:
         raise ValueError(f"n_banks must be >= 1, got {n_banks}")
-    strategy = resolve_merge(merge, n_banks)
     n_rows = n_banks * max(1, k) if n_rows is None else n_rows
     k_eff = min(k, n_rows)
+    strategy = resolve_merge(merge, n_banks, k_eff)
     local_n = -(-n_rows // n_banks)
     k_local = min(k_eff, local_n)
     local = (jax.ShapeDtypeStruct((q, k_local), jnp.float32),
@@ -1052,11 +1162,19 @@ def merge_traffic_bytes(n_banks: int, q: int, k: int, *, merge: str = "auto",
     if strategy == "allgather":
         # every other bank's (Q, k_local) pair lands on this device
         return (n_banks - 1) * _nbytes(local)
+    padded = jax.eval_shape(functools.partial(_pad_candidates, k=k_eff),
+                            *local)
+    if strategy == "ring":
+        # reduce-scatter + all-gather, both moving one (ceil(Q/banks),
+        # k_eff) chunk pair per round for banks-1 rounds each: ~2*Q*k_eff
+        # entries received per device, independent of the bank count.
+        chunk = -(-q // n_banks)
+        payload = tuple(jax.ShapeDtypeStruct((chunk, a.shape[1]), a.dtype)
+                        for a in padded)
+        return 2 * (n_banks - 1) * _nbytes(payload)
     # tree: one padded (Q, k_eff) pair per recursive-doubling round
-    payload = jax.eval_shape(functools.partial(_pad_candidates, k=k_eff),
-                             *local)
     rounds = (n_banks - 1).bit_length()        # == ceil(log2(n_banks))
-    return rounds * _nbytes(payload)
+    return rounds * _nbytes(padded)
 
 
 def search_sharded(table: AMTable, queries, *, mesh, rules=None, k: int = 1,
@@ -1088,9 +1206,14 @@ def search_sharded(table: AMTable, queries, *, mesh, rules=None, k: int = 1,
       merge: cross-bank candidate reduction — ``"allgather"`` (one tiled
         all-gather round, O(k * banks) per-device traffic), ``"tree"``
         (ceil(log2(banks)) ``ppermute`` rounds of pairwise lexicographic
-        merge, O(k * log banks) traffic), or ``"auto"`` (tree at >=
-        :data:`TREE_MERGE_MIN_BANKS` banks).  Any bank count works with
-        either strategy, including 1 and non-powers-of-two.
+        merge, O(k * log banks) traffic), ``"ring"`` (a banks-round
+        reduce-scatter over query chunks plus one chunk all-gather,
+        O(Q * k) traffic independent of bank count — the bandwidth-optimal
+        schedule for k >> banks), or ``"auto"`` (allgather below
+        :data:`TREE_MERGE_MIN_BANKS` banks, then ring when ``k >=``
+        :data:`RING_MERGE_MIN_K_PER_BANK` ``* banks``, else tree).  Any
+        bank count works with every strategy, including 1 and
+        non-powers-of-two.
       matches: multi-match mode, :func:`search` semantics.  Per-bank
         fixed-width candidate windows ride the very same contract-3 merge as
         top-k; per-bank within-threshold counts are ``psum``-reduced over
@@ -1140,7 +1263,6 @@ def search_sharded(table: AMTable, queries, *, mesh, rules=None, k: int = 1,
     rules = rules or dist_specs.make_rules(mesh, "tp")
     axis = rules.tp
     n_banks = mesh.shape[axis]
-    strategy = resolve_merge(merge, n_banks)
     queries, squeeze = _prep_queries(table, queries)
     be = _resolve_backend(backend)
     if table.care is not None:
@@ -1149,6 +1271,7 @@ def search_sharded(table: AMTable, queries, *, mesh, rules=None, k: int = 1,
 
     n = table.n_rows
     k_eff = min(matches if matches is not None else k, n)
+    strategy = resolve_merge(merge, n_banks, k_eff)
     pad = (-n) % n_banks
     codes = jnp.pad(table.codes, ((0, pad), (0, 0)))
     # padded care rows are all-don't-care (0), but like padded codes rows
@@ -1160,6 +1283,9 @@ def search_sharded(table: AMTable, queries, *, mesh, rules=None, k: int = 1,
     vr = jnp.asarray(n if valid_rows is None else valid_rows, jnp.int32)
     use_fused = (be.fused is not None and 1 <= k_local <= FUSED_K_MAX
                  and (matches is None or be.fused_count))
+    if (be.fused is not None and k_local > FUSED_K_MAX
+            and (matches is None or be.fused_count)):
+        _note_fused_fallback()
     thr_q = (None if matches is None
              else _match_threshold(threshold, queries.shape[0]))
 

@@ -508,10 +508,10 @@ def search_sharded(index: IVFIndex, queries, *, mesh, rules=None, k: int = 1,
     pass runs replicated (an (S, D) table is ~rows/sets smaller than the
     data), and each bank fine-scores only the probed sets it owns — dead
     probes contribute (+inf, sentinel) candidates.  Per-bank candidate lists
-    then reduce through the *same* tree / all-gather merge as the flat
-    ``am.search_sharded`` (:func:`am._merge_bank_candidates`), so the result
-    is bitwise-identical to single-device :func:`search` for every merge
-    strategy and bank count.
+    then reduce through the *same* tree / ring / all-gather merge as the
+    flat ``am.search_sharded`` (:func:`am._merge_bank_candidates`), so the
+    result is bitwise-identical to single-device :func:`search` for every
+    merge strategy and bank count.
 
     Args:
       index: the set-associative index.
@@ -524,7 +524,7 @@ def search_sharded(index: IVFIndex, queries, *, mesh, rules=None, k: int = 1,
       rules: optional :class:`repro.dist.specs.Rules`; defaults to
         ``make_rules(mesh, "tp")``.
       merge: cross-bank reduction, ``am.search_sharded`` semantics
-        (``"allgather"`` | ``"tree"`` | ``"auto"``).
+        (``"allgather"`` | ``"tree"`` | ``"ring"`` | ``"auto"``).
 
     Returns:
       :class:`IVFSearchResult`, bitwise-identical to :func:`search`.
@@ -537,13 +537,13 @@ def search_sharded(index: IVFIndex, queries, *, mesh, rules=None, k: int = 1,
     rules = rules or dist_specs.make_rules(mesh, "tp")
     axis = rules.tp
     n_banks = mesh.shape[axis]
-    strategy = am.resolve_merge(merge, n_banks)
     be = am._resolve_backend(backend)
     ct = index.centroid_table()
     queries, squeeze = am._prep_queries(ct, queries)
     bits, distance = index.bits, index.distance
     s_n, cap = index.sets, index.set_capacity
     k_eff = min(k, s_n * cap)
+    strategy = am.resolve_merge(merge, n_banks, k_eff)
 
     probed, _, bound = _coarse(index, queries, probes)
 

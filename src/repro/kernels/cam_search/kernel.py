@@ -30,6 +30,12 @@ Two kernels share that tiling:
   O(Q*N) to O(Q*k).  A prefetched ``valid_rows`` scalar masks dead slab
   rows in-kernel (distance +inf), and ties are broken by lowest global row
   index — bitwise the ordering of ``lax.top_k`` over the dense matrix.
+  The per-block fold is an in-register **bitonic merge network**
+  (:func:`_bitonic_topk_merge`): O(log^2(k+bn)) compare-exchange stages
+  built from reshape/min/max/where only — no ``sort``/``top_k`` primitives
+  — which is what lets the fused tier reach k = 256
+  (``am.FUSED_K_MAX``) instead of the k = 64 the original k-round argmin
+  selection (kept as ``merge_alg="argmin"``) could afford.
 
 Both kernels optionally take a per-row **care plane** (ternary/don't-care
 cells, the FeCAM TCAM mode): masked search accumulates mismatches directly as
@@ -162,16 +168,26 @@ def cam_search(queries: jnp.ndarray, table: jnp.ndarray, *, levels: int,
 _NO_ROW = 2**31 - 1
 
 
+#: Merge networks ``cam_search_topk`` can fold candidates with.  The default
+#: ``"bitonic"`` is O(log^2(k+bn)) compare-exchange stages per block;
+#: ``"argmin"`` is the original k-sequential-round selection, kept callable
+#: as the semantic oracle and the benchmark baseline
+#: (``benchmarks/bench_am_topk.py`` k-sweep).
+MERGE_ALGS = ("bitonic", "argmin")
+
+
 def _topk_merge(best_d, best_i, cand_d, cand_i, k: int):
     """Fold (bq, bn) candidates into the sorted (bq, k) running top-k.
 
-    Pure function of its arguments, shared by the kernel and (transitively,
-    through identical semantics) the :mod:`.ref` oracle.  Selection is k
-    rounds of lexicographic argmin over (distance, row index): the minimum
-    distance is extracted first, and among equal distances the lowest row
-    index wins — including +inf ties, which is exactly how ``lax.top_k``
-    over a dense masked matrix orders dead rows.  Built from min/where/iota
-    only (no sort/top_k primitives), so it lowers on the VPU.
+    The ``"argmin"`` merge network: selection is k rounds of lexicographic
+    argmin over (distance, row index) — the minimum distance is extracted
+    first, and among equal distances the lowest row index wins — including
+    +inf ties, which is exactly how ``lax.top_k`` over a dense masked
+    matrix orders dead rows.  Built from min/where/iota only (no
+    sort/top_k primitives), so it lowers on the VPU.  O(k*(k+bn)) vector
+    ops per block — the historical ceiling that capped the fused tier at
+    k <= 64; it survives as the bitwise oracle for
+    :func:`_bitonic_topk_merge` and the benchmark baseline.
     """
     comb_d = jnp.concatenate([best_d, cand_d], axis=1)
     comb_i = jnp.concatenate([best_i, cand_i], axis=1)
@@ -188,9 +204,141 @@ def _topk_merge(best_d, best_i, cand_d, cand_i, k: int):
     return jnp.concatenate(out_d, axis=1), jnp.concatenate(out_i, axis=1)
 
 
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, n - 1).bit_length()
+
+
+def _lex_lt(d_a, i_a, d_b, i_b):
+    """Strict two-key less-than: (d_a, i_a) < (d_b, i_b) lexicographically.
+
+    The Contract-2 order — ascending distance, ascending row index among
+    equal distances (+inf masked rows included; the +inf/`_NO_ROW` sentinel
+    pair is the lexicographic maximum, so sentinels can never displace a
+    genuine candidate).
+    """
+    return (d_a < d_b) | ((d_a == d_b) & (i_a < i_b))
+
+
+def _compare_exchange(d, i, j: int, asc):
+    """One bitonic compare-exchange step at pair distance ``j``.
+
+    Pairs element ``x`` with ``x ^ j`` along the last axis via a reshape to
+    (..., L/(2j), 2, j) — no gathers, so the step is a handful of
+    min/max/where ops the VPU lowers directly.  ``asc`` is a (L/(2j),) bool
+    choosing each pair-block's direction (True = ascending).  Elements are
+    (distance, row-index) pairs under the :func:`_lex_lt` total order; equal
+    pairs are never swapped either way, so the network is deterministic and
+    order-stable on sentinel plateaus.
+    """
+    bq, ln = d.shape
+    d4 = d.reshape(bq, ln // (2 * j), 2, j)
+    i4 = i.reshape(bq, ln // (2 * j), 2, j)
+    d_lo, d_hi = d4[:, :, 0, :], d4[:, :, 1, :]
+    i_lo, i_hi = i4[:, :, 0, :], i4[:, :, 1, :]
+    hi_first = _lex_lt(d_hi, i_hi, d_lo, i_lo)
+    lo_first = _lex_lt(d_lo, i_lo, d_hi, i_hi)
+    swap = jnp.where(asc[None, :, None], hi_first, lo_first)
+    nd = jnp.stack([jnp.where(swap, d_hi, d_lo),
+                    jnp.where(swap, d_lo, d_hi)], axis=2)
+    ni = jnp.stack([jnp.where(swap, i_hi, i_lo),
+                    jnp.where(swap, i_lo, i_hi)], axis=2)
+    return nd.reshape(bq, ln), ni.reshape(bq, ln)
+
+
+def _bitonic_sort(d, i):
+    """Full in-register bitonic sort of (bq, L) pairs, L a power of two.
+
+    Ascending (distance, row index) — the classic network: stage ``size``
+    builds sorted runs of that length, alternating direction per
+    ``size``-block so adjacent runs form bitonic sequences for the next
+    stage.  O(log^2 L) compare-exchange steps, each a constant number of
+    vector ops.
+    """
+    ln = d.shape[1]
+    size = 2
+    while size <= ln:
+        j = size // 2
+        while j >= 1:
+            nb = ln // (2 * j)
+            asc = ((jnp.arange(nb) * 2 * j) & size) == 0
+            d, i = _compare_exchange(d, i, j, asc)
+            j //= 2
+        size *= 2
+    return d, i
+
+
+def _bitonic_merge_sorted(d, i):
+    """Bitonic-merge a (bq, L) bitonic sequence into ascending order.
+
+    ``L`` must be a power of two; the input rises then falls under the
+    :func:`_lex_lt` order (any rotation of that also works — the standard
+    bitonic-merge guarantee).  log2(L) compare-exchange steps.
+    """
+    ln = d.shape[1]
+    j = ln // 2
+    while j >= 1:
+        asc = jnp.ones((ln // (2 * j),), bool)
+        d, i = _compare_exchange(d, i, j, asc)
+        j //= 2
+    return d, i
+
+
+def _bitonic_topk_merge(best_d, best_i, cand_d, cand_i, k: int):
+    """Fold (bq, bn) candidates into the sorted (bq, k) running top-k.
+
+    The ``"bitonic"`` merge network — same contract as :func:`_topk_merge`
+    (ascending (distance, row index), +inf/`_NO_ROW` sentinel slots rank
+    last, bitwise ``lax.top_k`` order) in O(log^2(k+bn)) compare-exchange
+    stages instead of k sequential argmin rounds:
+
+    1. bitonic-sort the (bq, bn) candidate block once (candidates arrive in
+       row order, not distance order);
+    2. concatenate the already-sorted running top-k, a sentinel plateau
+       padding the total length to a power of two, and the *reversed*
+       candidate block — ascending, plateau, descending: a bitonic
+       sequence;
+    3. one bitonic merge, then keep the first k columns.
+
+    The running top-k is sorted by construction (the kernel initialises it
+    to all-sentinel and this function returns sorted output), so the
+    invariant holds inductively across N blocks.  ``best_d`` may have any
+    width >= k and ``cand`` any width >= 1 — non-powers-of-two are padded
+    with (+inf, `_NO_ROW`) internally, which sort strictly after every
+    genuine candidate (including +inf-masked real rows, whose indices are
+    < `_NO_ROW`).
+    """
+    bq, bn = cand_d.shape
+    pad_c = _next_pow2(bn) - bn
+    if pad_c:
+        cand_d = jnp.concatenate(
+            [cand_d, jnp.full((bq, pad_c), jnp.inf, cand_d.dtype)], axis=1)
+        cand_i = jnp.concatenate(
+            [cand_i, jnp.full((bq, pad_c), jnp.int32(_NO_ROW), cand_i.dtype)],
+            axis=1)
+    cand_d, cand_i = _bitonic_sort(cand_d, cand_i)
+
+    kb = best_d.shape[1]
+    ln = _next_pow2(kb + cand_d.shape[1])
+    pad_m = ln - kb - cand_d.shape[1]
+    seq_d = [best_d]
+    seq_i = [best_i]
+    if pad_m:
+        seq_d.append(jnp.full((bq, pad_m), jnp.inf, best_d.dtype))
+        seq_i.append(jnp.full((bq, pad_m), jnp.int32(_NO_ROW), best_i.dtype))
+    seq_d.append(cand_d[:, ::-1])
+    seq_i.append(cand_i[:, ::-1])
+    out_d, out_i = _bitonic_merge_sorted(jnp.concatenate(seq_d, axis=1),
+                                         jnp.concatenate(seq_i, axis=1))
+    return out_d[:, :k], out_i[:, :k]
+
+
+#: name -> merge-network implementation (see :data:`MERGE_ALGS`).
+_MERGE_FNS = {"bitonic": _bitonic_topk_merge, "argmin": _topk_merge}
+
+
 def _cam_search_topk_kernel(vr_ref, *refs, levels: int, d_total: int, k: int,
                             block_n: int, nj: int, nk: int, masked: bool,
-                            counted: bool):
+                            counted: bool, merge_alg: str):
     it = iter(refs)
     q_ref, t_ref = next(it), next(it)
     c_ref = next(it) if masked else None
@@ -229,8 +377,8 @@ def _cam_search_topk_kernel(vr_ref, *refs, levels: int, d_total: int, k: int,
         d = acc if masked else jnp.float32(d_total) - acc
         cand_d = jnp.where(row < vr_ref[0], d, jnp.inf)   # dead/pad rows
         cand_i = jnp.broadcast_to(row, d.shape)
-        best_d, best_i = _topk_merge(best_d_ref[...], best_i_ref[...],
-                                     cand_d, cand_i, k)
+        best_d, best_i = _MERGE_FNS[merge_alg](
+            best_d_ref[...], best_i_ref[...], cand_d, cand_i, k)
         best_d_ref[...] = best_d
         best_i_ref[...] = best_i
         if counted:
@@ -250,13 +398,14 @@ def _cam_search_topk_kernel(vr_ref, *refs, levels: int, d_total: int, k: int,
 
 @functools.partial(jax.jit, static_argnames=("levels", "k", "block_q",
                                              "block_n", "block_d",
-                                             "interpret"))
+                                             "interpret", "merge_alg"))
 def cam_search_topk(queries: jnp.ndarray, table: jnp.ndarray,
                     valid_rows: jnp.ndarray, *, levels: int, k: int,
                     care: jnp.ndarray | None = None,
                     count_le: jnp.ndarray | None = None,
                     block_q: int = 128, block_n: int = 128,
-                    block_d: int = 512, interpret: bool = False):
+                    block_d: int = 512, interpret: bool = False,
+                    merge_alg: str = "bitonic"):
     """Streaming top-k search: ((Q, k) int32 rows, (Q, k) f32 distances).
 
     Same inputs and tiling rules as :func:`cam_search`, plus a traced
@@ -272,6 +421,11 @@ def cam_search_topk(queries: jnp.ndarray, table: jnp.ndarray,
     at distance <= threshold — accumulated block-by-block in VMEM alongside
     the running top-k, so multi-match ``match_count`` costs no extra pass
     over the table.  Returns a 2-tuple without ``count_le``, a 3-tuple with.
+
+    ``merge_alg`` picks the per-block merge network (:data:`MERGE_ALGS`):
+    ``"bitonic"`` (default, O(log^2(k+bn)) compare-exchange stages) or
+    ``"argmin"`` (the original k-round selection, kept as oracle/baseline).
+    Both are bitwise-identical by construction; only the op count differs.
     """
     qn, d = queries.shape
     tn, d2 = table.shape
@@ -279,6 +433,10 @@ def cam_search_topk(queries: jnp.ndarray, table: jnp.ndarray,
     assert qn % block_q == 0 and tn % block_n == 0 and d % block_d == 0, (
         (qn, tn, d), (block_q, block_n, block_d))
     assert 1 <= k <= tn, (k, tn)
+    assert merge_alg in MERGE_ALGS, (merge_alg, MERGE_ALGS)
+    assert block_n & (block_n - 1) == 0, (
+        f"block_n must be a power of two for the merge network, "
+        f"got {block_n}")
     masked = care is not None
     counted = count_le is not None
     if masked:
@@ -289,7 +447,8 @@ def cam_search_topk(queries: jnp.ndarray, table: jnp.ndarray,
 
     kernel = functools.partial(_cam_search_topk_kernel, levels=levels,
                                d_total=d, k=k, block_n=block_n, nj=nj, nk=nk,
-                               masked=masked, counted=counted)
+                               masked=masked, counted=counted,
+                               merge_alg=merge_alg)
     in_specs = [
         pl.BlockSpec((block_q, block_d), lambda i, j, kk, vr: (i, kk)),
         pl.BlockSpec((block_n, block_d), lambda i, j, kk, vr: (j, kk)),

@@ -146,12 +146,14 @@ def topk(queries: jnp.ndarray, table: jnp.ndarray, k: int = 1, bits: int = 3,
     return idx.astype(jnp.int32), -neg
 
 
-@functools.partial(jax.jit, static_argnames=("k", "bits", "interpret"))
+@functools.partial(jax.jit, static_argnames=("k", "bits", "interpret",
+                                             "merge_alg"))
 def topk_fused(queries: jnp.ndarray, table: jnp.ndarray, k: int = 1,
                bits: int = 3, valid_rows: jnp.ndarray | None = None,
                interpret: bool | None = None, *,
                care: jnp.ndarray | None = None,
-               count_le: jnp.ndarray | None = None):
+               count_le: jnp.ndarray | None = None,
+               merge_alg: str = "bitonic"):
     """Streaming top-k: ((Q, k) int32 rows, (Q, k) float32 distances).
 
     The fused capability tier: one :func:`~repro.kernels.cam_search.kernel.
@@ -171,7 +173,10 @@ def topk_fused(queries: jnp.ndarray, table: jnp.ndarray, k: int = 1,
     ``count_le`` — a per-query distance threshold, scalar or (Q,)/(Q, 1) —
     switches on the in-kernel multi-match counter: the return value becomes
     a 3-tuple whose third element is (Q,) int32, the number of live rows at
-    distance <= threshold per query.
+    distance <= threshold per query.  ``merge_alg`` selects the in-kernel
+    per-block merge network (``"bitonic"``, the O(log^2(k+bn)) default, or
+    the original ``"argmin"`` k-round selection — bitwise-identical, kept
+    for benchmarking; see ``kernel.MERGE_ALGS``).
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -199,7 +204,8 @@ def topk_fused(queries: jnp.ndarray, table: jnp.ndarray, k: int = 1,
     vr = jnp.minimum(vr, tn)           # padded rows are never live
     out = _k.cam_search_topk(qp, tp, vr, levels=1 << bits, k=k, care=cp,
                              count_le=thr, block_q=bq, block_n=bn,
-                             block_d=bd, interpret=interpret)
+                             block_d=bd, interpret=interpret,
+                             merge_alg=merge_alg)
     if count_le is None:
         idx, dist = out
         return idx[:qn], dist[:qn]

@@ -59,7 +59,8 @@ def parse_args(argv=None):
     ap.add_argument("--am-sharded", action="store_true",
                     help="route the AM cache through am.search_sharded on "
                          "the serving mesh (rows banked over `model`)")
-    ap.add_argument("--am-merge", choices=("auto", "allgather", "tree"),
+    ap.add_argument("--am-merge",
+                    choices=("auto", "allgather", "tree", "ring"),
                     default="auto",
                     help="cross-bank candidate merge topology for the "
                          "sharded AM cache (see docs/ARCHITECTURE.md)")

@@ -106,7 +106,8 @@ Design — why this never compiles or syncs per request:
   ``Rules.am_queries_dp()`` when the bucket divides the mesh's data axes,
   meta kept replicated per ``Rules.am_meta()`` — with identical results.
   The ``merge=`` knob picks the cross-bank candidate reduction
-  (``"allgather"`` | ``"tree"`` | ``"auto"``, see ``am.search_sharded``);
+  (``"allgather"`` | ``"tree"`` | ``"ring"`` | ``"auto"``, see
+  ``am.search_sharded``);
   it is baked into the service's compiled dispatch, so switching topology
   never changes the dispatch signature or the compile accounting.
 
@@ -404,8 +405,8 @@ class AMService:
       rules: optional :class:`repro.dist.specs.Rules`; defaults to
         ``make_rules(mesh, "tp")`` when a mesh is given.
       merge: cross-bank merge strategy forwarded to ``am.search_sharded``
-        (``"auto"`` | ``"allgather"`` | ``"tree"``); only meaningful with a
-        mesh.
+        (``"auto"`` | ``"allgather"`` | ``"tree"`` | ``"ring"``); only
+        meaningful with a mesh.
       max_batch: queued lookups that trigger an automatic flush.
       flush_after: deadline in clock units — the queue is dispatched when
         the oldest queued request has waited at least this long.  As an
@@ -460,6 +461,7 @@ class AMService:
         self.readbacks = 0
         self.dispatched = 0            # requests routed through a dispatch
         self.dedup_hits = 0            # of those, resolved from a shared row
+        self.fused_fallbacks = 0       # groups dense-downgraded by k ceiling
         self._dispatch = self._build_dispatch()
 
     # -- clock ---------------------------------------------------------------
@@ -1108,6 +1110,17 @@ class AMService:
         q = len(uniq)
         self.dispatched += len(futs)
         self.dedup_hits += len(futs) - q
+        # Host-side mirror of am.fused_fallbacks(): the compiled dispatch
+        # silently takes the dense O(Q*N) path when the request's window
+        # exceeds am.FUSED_K_MAX even though the backend has a fused tier.
+        # The trace-time counter in am only ticks once per compile; this one
+        # ticks per launched group, so saturation is visible in stats().
+        be = am._resolve_backend(t.backend)
+        k_eff = min(matches if matches is not None else k,
+                    t.table.n_rows)
+        if (be.fused is not None and k_eff > am.FUSED_K_MAX
+                and (matches is None or be.fused_count)):
+            self.fused_fallbacks += 1
         qb = _next_pow2(q)
         queries = np.zeros((qb, t.table.width), np.int32)
         for i, fut in enumerate(uniq):
@@ -1360,6 +1373,7 @@ class AMService:
                 "readbacks": self.readbacks,
                 "dedup_hits": self.dedup_hits,
                 "dedup_rate": self.dedup_hits / max(1, self.dispatched),
+                "fused_fallbacks": self.fused_fallbacks,
                 "compilations": int(cache_size()) if cache_size else -1,
                 "sharded": self._mesh is not None,
                 "merge": self._merge,

@@ -510,9 +510,9 @@ def test_sharded_placement_matches_local():
     assert sharded.stats("t")["rows"] <= 32
     # the merge knob is validated at construction, not at dispatch time
     try:
-        AMService(merge="ring")
+        AMService(merge="mesh")
     except ValueError as e:
-        assert "ring" in str(e)
+        assert "mesh" in str(e)
     else:
         raise AssertionError("AMService accepted an unknown merge strategy")
 

@@ -8,12 +8,13 @@ indices, distances, and threshold flags — on both an 8-wide pure-``model``
 mesh and the (pod, data, model) production mesh, for both distance modes and
 a row count that does not divide the bank count.
 
-Covers BOTH merge topologies of ``docs/ARCHITECTURE.md`` contract 3: the
-flat all-gather and the hierarchical tree merge must be bitwise-identical to
-each other and to the single-device path — on tie-heavy tables (the
-(distance, row-index) ordering guarantee), with per-bank ``valid_rows``
-slices, for dense and fused backend tiers, and through the degenerate cases
-(1 bank, non-power-of-two bank counts, k larger than any bank's rows).
+Covers ALL THREE merge topologies of ``docs/ARCHITECTURE.md`` contract 3:
+the flat all-gather, the hierarchical tree merge and the chunked ring
+reduce-scatter must be bitwise-identical to each other and to the
+single-device path — on tie-heavy tables (the (distance, row-index)
+ordering guarantee), with per-bank ``valid_rows`` slices, for dense and
+fused backend tiers, and through the degenerate cases (1 bank,
+non-power-of-two bank counts, k larger than any bank's rows).
 Data-parallel query sharding (``Rules.am_queries_dp``) is exercised on a
 (data, model) mesh where the query count divides the dp width.
 
@@ -105,8 +106,8 @@ SCRIPT = textwrap.dedent("""
                                         valid_rows=vr)
                 check(got, want, (mesh.shape, distance, vr))
 
-    # ----- tree merge == allgather merge == single-device, bitwise --------
-    # (docs/ARCHITECTURE.md contract 3: both topologies preserve contract 2's
+    # ----- tree == allgather == ring == single-device, bitwise ------------
+    # (docs/ARCHITECTURE.md contract 3: every topology preserves contract 2's
     # (distance, row-index) ordering — tie-heavy tables and per-bank
     # valid_rows slices are the cases that would expose an ordering drift,
     # for both the dense and the fused backend tier)
@@ -116,23 +117,26 @@ SCRIPT = textwrap.dedent("""
                 table = am.make_table(cs, bits=3, distance="l1")
                 want = am.search(table, queries, k=5, threshold=9,
                                  backend=backend, valid_rows=vr)
-                for merge in ("allgather", "tree"):
+                for merge in ("allgather", "tree", "ring"):
                     got = am.search_sharded(table, queries, mesh=mesh, k=5,
                                             threshold=9, backend=backend,
                                             valid_rows=vr, merge=merge)
                     check(got, want, (mesh.shape, backend, vr, merge))
 
-    # tree-merge degenerate cases (ref backend keeps this cheap):
+    # collective-merge degenerate cases (ref backend keeps this cheap):
     # 1 bank: zero ppermute rounds, the local top-k IS the global result
     table = am.make_table(codes, bits=3)
     mesh1 = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("model",))
-    check(am.search_sharded(table, queries, mesh=mesh1, k=5, merge="tree"),
-          am.search(table, queries, k=5), "1 bank")
+    for merge in ("tree", "ring"):
+        check(am.search_sharded(table, queries, mesh=mesh1, k=5, merge=merge),
+              am.search(table, queries, k=5), f"1 bank {merge}")
 
     # non-power-of-two banks: recursive-doubling coverage wraps, so the
-    # merge's duplicate masking is load-bearing; k=20 > any bank's 7 rows
+    # merge's duplicate masking is load-bearing; k=20 > any bank's 7 rows.
+    # The ring's query chunking (ceil(6/6)=1-row chunks, Q=6 == banks) and
+    # its re-ordering roll are exercised here too.
     mesh6 = jax.sharding.Mesh(np.array(jax.devices()[:6]), ("model",))
-    for merge in ("allgather", "tree"):
+    for merge in ("allgather", "tree", "ring"):
         for k in (5, 20, 37):
             check(am.search_sharded(table, queries, mesh=mesh6, k=k,
                                     merge=merge),
@@ -150,7 +154,7 @@ SCRIPT = textwrap.dedent("""
     mesh_dp = jax.make_mesh((2, 4), ("data", "model"))
     rules = specs.make_rules(mesh_dp, "tp")
     assert rules.dp == ("data",)
-    for merge in ("allgather", "tree"):
+    for merge in ("allgather", "tree", "ring"):
         check(am.search_sharded(table, queries, mesh=mesh_dp, rules=rules,
                                 k=5, threshold=9, merge=merge),
               am.search(table, queries, k=5, threshold=9), f"dp {merge}")
@@ -196,15 +200,32 @@ SCRIPT = textwrap.dedent("""
     assert bool(np.asarray(am.search(t_plain, queries, matches=2,
                                      threshold=24.0).overflow).any())
 
-    # the auto decision table (docs/ARCHITECTURE.md merge-table)
+    # ring multi-match + masked: the per-bank windows ride the ring's
+    # chunked reduce-scatter and counts still psum exactly
+    want = am.search(t_masked, queries, matches=6, threshold=3.0,
+                     backend="pallas")
+    got = am.search_sharded(t_masked, queries, mesh=meshes[0], matches=6,
+                            threshold=3.0, backend="pallas", merge="ring")
+    for f in ("indices", "distances", "match_count", "overflow"):
+        np.testing.assert_array_equal(np.asarray(getattr(got, f)),
+                                      np.asarray(getattr(want, f)),
+                                      err_msg=f"mm ring {f}")
+
+    # the auto decision table (docs/ARCHITECTURE.md merge-table): allgather
+    # on narrow meshes, then tree vs ring split by the k-per-bank threshold
     assert am.resolve_merge("auto", 8) == "allgather"
+    assert am.resolve_merge("auto", 8, 1000) == "allgather"
     assert am.resolve_merge("auto", am.TREE_MERGE_MIN_BANKS) == "tree"
+    wide = am.TREE_MERGE_MIN_BANKS
+    cut = am.RING_MERGE_MIN_K_PER_BANK * wide
+    assert am.resolve_merge("auto", wide, cut - 1) == "tree"
+    assert am.resolve_merge("auto", wide, cut) == "ring"
     print("AM_SHARDED_OK")
 """)
 
 
 def test_sharded_search_matches_single_device():
     out = subprocess.run([sys.executable, "-c", SCRIPT], cwd=REPO_ROOT,
-                         capture_output=True, text=True, timeout=500)
+                         capture_output=True, text=True, timeout=560)
     assert "AM_SHARDED_OK" in out.stdout, (out.stdout[-500:],
                                            out.stderr[-2000:])

@@ -1,9 +1,12 @@
 """The bench regression gate (``scripts/check_bench_regression.py``).
 
-Pure-function tests for :func:`compare`: identical reports pass, recall
-drops and candidate-fraction growth beyond tolerance fail, wall-clock
-changes never fail, and structural drift (missing probe point, changed
-geometry) fails with an actionable message.
+Pure-function tests for :func:`compare` (BENCH_index.json) and
+:func:`compare_topk` (BENCH_topk.json): identical reports pass, recall
+drops / candidate-fraction growth / merge-network op-count growth beyond
+tolerance fail, a ``fused_k_max`` drop or any merge-traffic / auto drift
+fails, wall-clock changes never fail, and structural drift (missing probe
+point, k point or bank count, changed geometry) fails with an actionable
+message.
 """
 
 import copy
@@ -12,7 +15,8 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "scripts"))
 
-from check_bench_regression import FRAC_GROWTH, RECALL_DROP, compare  # noqa: E402
+from check_bench_regression import (  # noqa: E402
+    EQN_GROWTH, FRAC_GROWTH, RECALL_DROP, compare, compare_topk)
 
 BASE = {
     "sets": 32, "k": 10, "n": 2048, "queries": 64,
@@ -67,3 +71,91 @@ def test_geometry_drift_fails():
     fresh["sets"] = 64
     errs = compare(BASE, fresh)
     assert any("geometry drift: sets" in e for e in errs)
+
+
+TOPK_BASE = {
+    "bits": 3,
+    "fused_k_max": 256,
+    "merge_geometry": {"q": 64, "k": 8, "n": 512},
+    "ksweep": {
+        "8": {"eqns_argmin": 92, "eqns_bitonic": 1380,
+              "dense_us": 9000.0, "bitonic_us": 15000.0},
+        "256": {"eqns_argmin": 2852, "eqns_bitonic": 1415,
+                "dense_us": 7000.0, "bitonic_us": 12000.0},
+    },
+    "merge": {
+        "8": {"tree_bytes": 12288, "allgather_bytes": 28672,
+              "ring_bytes": 7168, "auto": "allgather"},
+        "64": {"tree_bytes": 24576, "allgather_bytes": 258048,
+               "ring_bytes": 8064, "auto": "tree"},
+    },
+}
+
+
+def test_topk_identical_reports_pass():
+    assert compare_topk(TOPK_BASE, copy.deepcopy(TOPK_BASE)) == []
+
+
+def test_topk_wallclock_changes_are_not_gated():
+    fresh = copy.deepcopy(TOPK_BASE)
+    fresh["ksweep"]["256"]["bitonic_us"] *= 100
+    assert compare_topk(TOPK_BASE, fresh) == []
+
+
+def test_topk_fused_k_max_drop_fails_raise_passes():
+    fresh = copy.deepcopy(TOPK_BASE)
+    fresh["fused_k_max"] = 64
+    errs = compare_topk(TOPK_BASE, fresh)
+    assert len(errs) == 1 and "fused_k_max dropped" in errs[0]
+    fresh["fused_k_max"] = 512
+    assert compare_topk(TOPK_BASE, fresh) == []
+
+
+def test_topk_eqn_wobble_within_tolerance():
+    fresh = copy.deepcopy(TOPK_BASE)
+    fresh["ksweep"]["256"]["eqns_bitonic"] = int(
+        TOPK_BASE["ksweep"]["256"]["eqns_bitonic"] * (1 + (EQN_GROWTH - 1) / 2))
+    assert compare_topk(TOPK_BASE, fresh) == []
+
+
+def test_topk_eqn_growth_beyond_tolerance_fails():
+    fresh = copy.deepcopy(TOPK_BASE)
+    fresh["ksweep"]["256"]["eqns_bitonic"] = int(
+        TOPK_BASE["ksweep"]["256"]["eqns_bitonic"] * EQN_GROWTH * 1.2)
+    errs = compare_topk(TOPK_BASE, fresh)
+    assert len(errs) == 1 and "eqns_bitonic grew" in errs[0]
+
+
+def test_topk_missing_k_point_fails():
+    fresh = copy.deepcopy(TOPK_BASE)
+    del fresh["ksweep"]["256"]
+    errs = compare_topk(TOPK_BASE, fresh)
+    assert len(errs) == 1 and "k point k=256 missing" in errs[0]
+
+
+def test_topk_traffic_drift_fails():
+    fresh = copy.deepcopy(TOPK_BASE)
+    fresh["merge"]["64"]["ring_bytes"] += 8
+    errs = compare_topk(TOPK_BASE, fresh)
+    assert len(errs) == 1 and "ring_bytes drifted" in errs[0]
+
+
+def test_topk_auto_drift_fails():
+    fresh = copy.deepcopy(TOPK_BASE)
+    fresh["merge"]["64"]["auto"] = "ring"
+    errs = compare_topk(TOPK_BASE, fresh)
+    assert len(errs) == 1 and "auto drifted" in errs[0]
+
+
+def test_topk_missing_bank_count_fails():
+    fresh = copy.deepcopy(TOPK_BASE)
+    del fresh["merge"]["8"]
+    errs = compare_topk(TOPK_BASE, fresh)
+    assert len(errs) == 1 and "banks=8 missing" in errs[0]
+
+
+def test_topk_geometry_drift_fails():
+    fresh = copy.deepcopy(TOPK_BASE)
+    fresh["merge_geometry"] = {"q": 16, "k": 8, "n": 4096}
+    errs = compare_topk(TOPK_BASE, fresh)
+    assert any("geometry drift: merge_geometry" in e for e in errs)

@@ -7,8 +7,9 @@ The architecture page carries three machine-checkable artefacts:
   ``am.backend_capabilities()``;
 * the ``FUSED_K_MAX`` cutover constant quoted in contract 1;
 * the merge-topology decision table between the ``merge-table`` markers —
-  its threshold must equal ``am.TREE_MERGE_MIN_BANKS`` and its strategy
-  column must match what ``am.resolve_merge("auto", width)`` actually does;
+  its thresholds must equal ``am.TREE_MERGE_MIN_BANKS`` /
+  ``am.RING_MERGE_MIN_K_PER_BANK`` and its strategy column must match what
+  ``am.resolve_merge("auto", width, k)`` actually does;
 * the index-tier contract table between the ``index-table`` markers —
   each documented regime (``probes = sets`` bitwise-exact with
   ``recall_proxy`` 1.0; ``probes < sets`` with a certified recall lower
@@ -85,23 +86,44 @@ def test_fused_k_max_documented():
 
 def test_merge_decision_table_matches_resolve_merge():
     rows = _table_rows(_arch_text(), "merge-table")
-    assert len(rows) == 2, "merge decision table should have two regimes"
+    assert len(rows) == 3, "merge decision table should have three regimes"
     parsed = []
-    for cond, strategy in rows:
-        m = re.match(r"(<|>=)\s*(\d+)", cond)
-        assert m, f"unparseable width condition {cond!r}"
-        parsed.append((m.group(1), int(m.group(2)),
+    for width_cond, k_cond, strategy in rows:
+        m = re.match(r"(<|>=)\s*(\d+)", width_cond)
+        assert m, f"unparseable width condition {width_cond!r}"
+        k_cond = k_cond.strip().strip("`")
+        if k_cond != "any":
+            km = re.match(r"k\s*(<|>=)\s*(\d+)\s*[·*]\s*banks", k_cond)
+            assert km, f"unparseable k condition {k_cond!r}"
+            k_cond = (km.group(1), int(km.group(2)))
+        parsed.append((m.group(1), int(m.group(2)), k_cond,
                        strategy.strip().strip("`")))
-    thresholds = {t for _, t, _ in parsed}
-    assert thresholds == {am.TREE_MERGE_MIN_BANKS}, (
-        f"documented threshold(s) {thresholds} != am.TREE_MERGE_MIN_BANKS="
-        f"{am.TREE_MERGE_MIN_BANKS}")
-    for op, thr, strategy in parsed:
-        widths = (1, max(1, thr - 1)) if op == "<" else (thr, 4 * thr)
+
+    width_thresholds = {t for _, t, _, _ in parsed}
+    assert width_thresholds == {am.TREE_MERGE_MIN_BANKS}, (
+        f"documented width threshold(s) {width_thresholds} != "
+        f"am.TREE_MERGE_MIN_BANKS={am.TREE_MERGE_MIN_BANKS}")
+    k_factors = {kc[1] for _, _, kc, _ in parsed if kc != "any"}
+    assert k_factors == {am.RING_MERGE_MIN_K_PER_BANK}, (
+        f"documented k-per-bank factor(s) {k_factors} != "
+        f"am.RING_MERGE_MIN_K_PER_BANK={am.RING_MERGE_MIN_K_PER_BANK}")
+
+    # replay each documented regime against resolve_merge on sample points
+    for w_op, w_thr, k_cond, strategy in parsed:
+        widths = (1, max(1, w_thr - 1)) if w_op == "<" else (w_thr, 4 * w_thr)
         for w in widths:
-            assert am.resolve_merge("auto", w) == strategy, (
-                f"auto at width {w}: doc says {strategy!r}, code says "
-                f"{am.resolve_merge('auto', w)!r}")
+            if k_cond == "any":
+                ks = (1, 10 * am.RING_MERGE_MIN_K_PER_BANK * w)
+            elif k_cond[0] == "<":
+                ks = (1, k_cond[1] * w - 1)
+            else:
+                ks = (k_cond[1] * w, 10 * k_cond[1] * w)
+            for k in ks:
+                assert am.resolve_merge("auto", w, k) == strategy, (
+                    f"auto at width {w}, k {k}: doc says {strategy!r}, "
+                    f"code says {am.resolve_merge('auto', w, k)!r}")
+    # the default k (top-1) never selects the ring
+    assert am.resolve_merge("auto", am.TREE_MERGE_MIN_BANKS) == "tree"
 
 
 # ---------------------------------------------------------------------------
@@ -114,23 +136,38 @@ def test_merge_traffic_is_log_in_banks():
     for banks in (1, 2, 3, 4, 6, 16, 64, 256):
         tree = am.merge_traffic_bytes(banks, q, k, merge="tree")
         flat = am.merge_traffic_bytes(banks, q, k, merge="allgather")
+        ring = am.merge_traffic_bytes(banks, q, k, merge="ring")
         assert tree == (banks - 1).bit_length() * per_round, (banks, tree)
         assert flat == (banks - 1) * per_round, (banks, flat)
-    # beyond the documented threshold the tree strictly wins
+        # ring: 2*(banks-1) rounds of one ceil(Q/banks)-query chunk each
+        chunk = -(-q // banks)
+        assert ring == 2 * (banks - 1) * chunk * k * 8, (banks, ring)
+    # beyond the documented threshold the tree strictly wins over flat
     for banks in (16, 64, 256):
         assert (am.merge_traffic_bytes(banks, q, k, merge="tree")
                 < am.merge_traffic_bytes(banks, q, k, merge="allgather"))
-    # "auto" resolves through the same decision table
+    # the ring's traffic is flat in the bank count once chunks stay whole
+    # (banks <= Q): identical received bytes at 2, 4, 8 and 16 banks
+    flat_ring = {am.merge_traffic_bytes(b, 256, 128, merge="ring",
+                                        n_rows=b * 256) * b // (b - 1)
+                 for b in (2, 4, 8, 16)}
+    assert len(flat_ring) == 1, flat_ring
+    # "auto" resolves through the same decision table on both axes
     assert (am.merge_traffic_bytes(am.TREE_MERGE_MIN_BANKS, q, k)
             == am.merge_traffic_bytes(am.TREE_MERGE_MIN_BANKS, q, k,
                                       merge="tree"))
+    big_k = am.RING_MERGE_MIN_K_PER_BANK * am.TREE_MERGE_MIN_BANKS
+    assert (am.merge_traffic_bytes(am.TREE_MERGE_MIN_BANKS, q, big_k,
+                                   n_rows=10_000)
+            == am.merge_traffic_bytes(am.TREE_MERGE_MIN_BANKS, q, big_k,
+                                      merge="ring", n_rows=10_000))
 
 
 def test_bad_merge_strategy_rejected():
     try:
-        am.resolve_merge("ring", 8)
+        am.resolve_merge("mesh", 8)
     except ValueError as e:
-        assert "ring" in str(e)
+        assert "mesh" in str(e)
     else:
         raise AssertionError("resolve_merge accepted an unknown strategy")
 

@@ -51,7 +51,7 @@ def test_parse_flags_roundtrip():
 
 def test_parse_rejects_unknown_merge():
     with pytest.raises(SystemExit):
-        _mk(["--am-merge", "ring"])
+        _mk(["--am-merge", "mesh"])
 
 
 def test_cache_disabled_builds_no_service():
