@@ -20,14 +20,22 @@ throughput, p50/p99 queue wait, the estimated device-compute fraction a
 pipeline can hide, throughput scaling with concurrent tables, and the
 admission-control shed counters under deliberate oversubmission.
 
+``--snapshot`` runs the durability sweep instead: snapshot/restore wall
+time and bytes-on-disk vs table size, plus the recovery-path numbers the
+chaos harness bounds — time from ``restore()`` to the first resolved
+lookup, on the same and on a different bank count (elastic reshard).
+
   PYTHONPATH=src:. python benchmarks/bench_am_serve.py
   PYTHONPATH=src:. python benchmarks/bench_am_serve.py --smoke    # CI guard
   PYTHONPATH=src:. python benchmarks/bench_am_serve.py --smoke --saturation
+  PYTHONPATH=src:. python benchmarks/bench_am_serve.py --smoke --snapshot
 """
 
 from __future__ import annotations
 
 import argparse
+import pathlib
+import tempfile
 import time
 
 import numpy as np
@@ -246,6 +254,51 @@ def run_saturation(smoke: bool = False, *, dim: int = 64,
          f"admitted={4 * batch - hot['shed']};max_queue={batch}")
 
 
+def run_snapshot(smoke: bool = False, *, dim: int = 64,
+                 sizes=(1024, 8192), backend: str = "ref") -> None:
+    """Durability sweep: snapshot/restore cost + elastic recovery time."""
+    import jax
+    from jax.sharding import Mesh
+
+    if smoke:
+        sizes = (128, 512)
+    rng = np.random.default_rng(0)
+    devs = jax.devices()
+    meshes = {1: None}
+    for banks in (2, 4):
+        if banks <= len(devs):
+            meshes[banks] = Mesh(
+                np.array(devs[:banks]).reshape(banks,), ("model",))
+
+    for rows in sizes:
+        codes = rng.integers(0, 8, (rows, dim)).astype(np.int32)
+        svc = AMService(max_batch=32)
+        svc.create_table("kv", width=dim, bits=3, capacity=rows,
+                         backend=backend)
+        svc.append("kv", codes, values=list(range(rows)))
+        query = codes[rng.integers(rows)]
+        svc.lookup("kv", query)        # warm the dispatch compile
+
+        with tempfile.TemporaryDirectory() as d:
+            t0 = time.perf_counter()
+            svc.snapshot(d)
+            snap_s = time.perf_counter() - t0
+            size_mb = sum(p.stat().st_size
+                          for p in pathlib.Path(d).rglob("*")
+                          if p.is_file()) / 1e6
+            recov = {}
+            for banks, mesh in meshes.items():
+                t0 = time.perf_counter()
+                restored = AMService.restore(d, mesh=mesh)
+                resp = restored.lookup("kv", query)
+                recov[banks] = time.perf_counter() - t0
+                assert resp.hit, "restored table lost the queried row"
+        emit(f"am_snapshot_rows{rows}", 1e6 * snap_s,
+             f"disk_mb={size_mb:.2f};"
+             + ";".join(f"recovery_b{b}_ms={1e3 * s:.0f}"
+                        for b, s in sorted(recov.items())))
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -253,11 +306,16 @@ if __name__ == "__main__":
     ap.add_argument("--saturation", action="store_true",
                     help="pipelined-driver saturation sweep instead of the "
                          "Zipfian capacity sweep")
+    ap.add_argument("--snapshot", action="store_true",
+                    help="durability sweep (snapshot/restore cost + elastic "
+                         "recovery time) instead of the capacity sweep")
     ap.add_argument("--backend", default="ref")
     ap.add_argument("--batch", type=int, default=64)
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.saturation:
         run_saturation(smoke=args.smoke, backend=args.backend)
+    elif args.snapshot:
+        run_snapshot(smoke=args.smoke, backend=args.backend)
     else:
         run(smoke=args.smoke, backend=args.backend, batch=args.batch)

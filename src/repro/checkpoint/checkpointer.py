@@ -14,9 +14,24 @@ Design (multi-host ready, exercised single-process here):
 * **Async**: ``save_async`` snapshots to host memory synchronously (cheap),
   serialises on a daemon thread, and overlaps with the next training steps;
   ``wait()`` joins before the next save or shutdown.
+* **Concurrency contract**: one internal I/O lock serialises writes, GC and
+  restores, and *every* save path first joins an in-flight async write — a
+  sync ``save`` racing a ``save_async`` can therefore never interleave two
+  writers in one tmp dir (which corrupted committed checkpoints: writer A's
+  leaves under writer B's manifest), and ``_gc`` can never delete a step
+  while it is being written or read.
 * Restore reads via ``np.load(mmap_mode="r")`` and materialises per-device
   slices through ``jax.make_array_from_callback`` — only the local shard of
   each leaf is ever copied.
+
+Leaf identity is the stringified *key path* of the target tree
+(``tree_flatten_with_path``), so pytrees registered with keys (e.g.
+:class:`repro.core.am.AMTable` — ``.codes`` / ``.meta`` / ``.care``) get
+self-describing manifests that stay stable when optional children are
+``None``.  ``restore`` is strict by default: a checkpoint leaf with no
+matching leaf in the restore template raises (silently dropping saved
+state — e.g. restoring a table saved *with* meta into a ``meta=None``
+template — is a data-loss bug, not a default).
 """
 
 from __future__ import annotations
@@ -48,59 +63,77 @@ class Checkpointer:
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self._thread: threading.Thread | None = None
+        # Serialises _write (incl. its trailing _gc) and restore's file
+        # reads: a committed step can never be GC'd mid-restore, and two
+        # writers can never share a tmp dir.
+        self._io_lock = threading.RLock()
+        # Guards the save_async wait-then-spawn handoff so two concurrent
+        # save_async calls cannot both observe "no thread" and leak one.
+        self._spawn_lock = threading.Lock()
 
     # -- save ----------------------------------------------------------------
 
     def save(self, step: int, tree: Any, metadata: dict | None = None):
-        """Synchronous checkpoint of ``tree`` at ``step``."""
+        """Synchronous checkpoint of ``tree`` at ``step``.
+
+        Joins any in-flight :meth:`save_async` first, so the two paths can
+        be mixed freely without ordering races.
+        """
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self.wait()
         self._write(step, host_tree, metadata or {})
 
     def save_async(self, step: int, tree: Any, metadata: dict | None = None):
         """Snapshot now, serialise on a background thread."""
-        self.wait()
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
-        self._thread = threading.Thread(
-            target=self._write, args=(step, host_tree, metadata or {}),
-            daemon=True)
-        self._thread.start()
+        with self._spawn_lock:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_tree, metadata or {}),
+                daemon=True)
+            self._thread.start()
 
     def wait(self):
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+        t = self._thread
+        if t is not None:
+            t.join()
+            # only clear if no newer save_async already replaced it
+            if self._thread is t:
+                self._thread = None
 
     def _write(self, step: int, host_tree: Any, metadata: dict):
-        paths, leaves, _ = _flatten_with_paths(host_tree)
-        tmp = self.dir / f".tmp-step_{step:08d}"
-        final = self.dir / f"step_{step:08d}"
-        if tmp.exists():
-            shutil.rmtree(tmp)
-        tmp.mkdir(parents=True)
-        manifest = {"step": step, "metadata": metadata, "leaves": []}
-        for i, (path, leaf) in enumerate(zip(paths, leaves)):
-            arr = np.asarray(leaf)
-            logical_dtype = str(arr.dtype)
-            if arr.dtype == np.dtype(BF16):
-                arr = arr.view(np.uint16)
-                logical_dtype = "bfloat16"
-            np.save(tmp / f"leaf_{i}.npy", arr)
-            manifest["leaves"].append(
-                {"path": path, "file": f"leaf_{i}.npy",
-                 "shape": list(leaf.shape), "dtype": logical_dtype})
-        with open(tmp / "manifest.json", "w") as f:
-            json.dump(manifest, f)
-            f.flush()
-            os.fsync(f.fileno())
-        if final.exists():
-            shutil.rmtree(final)
-        os.rename(tmp, final)
-        self._gc()
+        with self._io_lock:
+            paths, leaves, _ = _flatten_with_paths(host_tree)
+            tmp = self.dir / f".tmp-step_{step:08d}"
+            final = self.dir / f"step_{step:08d}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            manifest = {"step": step, "metadata": metadata, "leaves": []}
+            for i, (path, leaf) in enumerate(zip(paths, leaves)):
+                arr = np.asarray(leaf)
+                logical_dtype = str(arr.dtype)
+                if arr.dtype == np.dtype(BF16):
+                    arr = arr.view(np.uint16)
+                    logical_dtype = "bfloat16"
+                np.save(tmp / f"leaf_{i}.npy", arr)
+                manifest["leaves"].append(
+                    {"path": path, "file": f"leaf_{i}.npy",
+                     "shape": list(leaf.shape), "dtype": logical_dtype})
+            with open(tmp / "manifest.json", "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            if final.exists():
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
 
     def _gc(self):
-        steps = sorted(self.all_steps())
-        for s in steps[:-self.keep] if self.keep else []:
-            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+        with self._io_lock:
+            steps = sorted(self.all_steps())
+            for s in steps[:-self.keep] if self.keep else []:
+                shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
 
     # -- restore ---------------------------------------------------------------
 
@@ -115,43 +148,86 @@ class Checkpointer:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def manifest(self, step: int | None = None) -> dict:
+        """The raw manifest of ``step`` (default: latest committed).
+
+        Restore flows that must build their template *from* the checkpoint
+        (e.g. :mod:`repro.serve.snapshot` reconstructing table slabs from
+        recorded shapes + metadata) read this before calling
+        :meth:`restore`.
+        """
+        with self._io_lock:
+            # resolve "latest" under the lock: a step observed outside it
+            # can be GC'd by a concurrent writer before the read starts
+            if step is None:
+                step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.dir}")
+            return json.loads(
+                (self.dir / f"step_{step:08d}" / "manifest.json").read_text())
+
     def restore(self, target: Any, step: int | None = None,
-                shardings: Any = None) -> tuple[Any, dict]:
+                shardings: Any = None, *, strict: bool = True
+                ) -> tuple[Any, dict]:
         """Restore into the structure of ``target``.
 
-        ``shardings``: optional matching tree of NamedSharding — leaves are
-        materialised shard-by-shard (elastic: any mesh shape works).
-        Returns (tree, metadata).
-        """
-        if step is None:
-            step = self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        d = self.dir / f"step_{step:08d}"
-        manifest = json.loads((d / "manifest.json").read_text())
-        by_path = {e["path"]: e for e in manifest["leaves"]}
+        ``shardings``: optional tree of :class:`jax.sharding.Sharding`
+        leaves — matched to target leaves *by key path*, so it may mirror
+        the target exactly, carry ``None`` at any position (that leaf is
+        materialised unsharded), or cover only a subset of the leaves.
+        Leaves with a sharding are materialised shard-by-shard (elastic:
+        any mesh shape works).
 
-        paths, leaves, treedef = _flatten_with_paths(target)
-        shard_leaves = [None] * len(leaves)
-        if shardings is not None:
-            shard_leaves = jax.tree.leaves(
-                shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
-        out = []
-        for path, leaf, sh in zip(paths, leaves, shard_leaves):
-            entry = by_path.get(path)
-            if entry is None:
-                raise KeyError(f"checkpoint missing leaf {path!r}")
-            arr = np.load(d / entry["file"], mmap_mode="r")
-            if entry["dtype"] == "bfloat16":
-                arr = arr.view(BF16)
-            want_shape = tuple(leaf.shape)
-            if tuple(arr.shape) != want_shape:
-                raise ValueError(
-                    f"shape mismatch for {path}: ckpt {arr.shape} vs "
-                    f"target {want_shape}")
-            if sh is None:
-                out.append(jnp.asarray(arr))
-            else:
-                out.append(jax.make_array_from_callback(
-                    want_shape, sh, lambda idx, a=arr: np.asarray(a[idx])))
-        return jax.tree_util.tree_unflatten(treedef, out), manifest["metadata"]
+        ``strict`` (default): every checkpoint leaf must be consumed by a
+        target leaf; unmatched saved leaves raise :class:`ValueError`
+        instead of being silently dropped (the restore-into-template
+        data-loss trap when the template's optional children are ``None``
+        but the checkpoint's were not).  Returns (tree, metadata).
+        """
+        with self._io_lock:
+            if step is None:
+                step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.dir}")
+            d = self.dir / f"step_{step:08d}"
+            manifest = json.loads((d / "manifest.json").read_text())
+            by_path = {e["path"]: e for e in manifest["leaves"]}
+
+            paths, leaves, treedef = _flatten_with_paths(target)
+            shard_of: dict[str, jax.sharding.Sharding] = {}
+            if shardings is not None:
+                s_flat, _ = jax.tree_util.tree_flatten_with_path(
+                    shardings,
+                    is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
+                shard_of = {
+                    "/".join(str(k) for k in p): s for p, s in s_flat
+                    if isinstance(s, jax.sharding.Sharding)}
+            if strict:
+                extra = sorted(set(by_path) - set(paths))
+                if extra:
+                    raise ValueError(
+                        f"checkpoint step {step} has leaves the restore "
+                        f"template does not: {extra} — restoring would "
+                        "silently drop saved state (pass strict=False to "
+                        "restore the template's subset anyway)")
+            out = []
+            for path, leaf in zip(paths, leaves):
+                entry = by_path.get(path)
+                if entry is None:
+                    raise KeyError(f"checkpoint missing leaf {path!r}")
+                arr = np.load(d / entry["file"], mmap_mode="r")
+                if entry["dtype"] == "bfloat16":
+                    arr = arr.view(BF16)
+                want_shape = tuple(leaf.shape)
+                if tuple(arr.shape) != want_shape:
+                    raise ValueError(
+                        f"shape mismatch for {path}: ckpt {arr.shape} vs "
+                        f"target {want_shape}")
+                sh = shard_of.get(path)
+                if sh is None:
+                    out.append(jnp.asarray(arr))
+                else:
+                    out.append(jax.make_array_from_callback(
+                        want_shape, sh, lambda idx, a=arr: np.asarray(a[idx])))
+            return jax.tree_util.tree_unflatten(treedef, out), \
+                manifest["metadata"]

@@ -134,7 +134,7 @@ DISTANCES = ("hamming", "l1")
 # AMTable — the immutable code store
 # ---------------------------------------------------------------------------
 
-@jax.tree_util.register_pytree_node_class
+@jax.tree_util.register_pytree_with_keys_class
 @dataclasses.dataclass(frozen=True)
 class AMTable:
     """Immutable multi-bit code table (a registered pytree).
@@ -147,6 +147,12 @@ class AMTable:
     ``care == 0`` never count as mismatches).  ``bits`` and ``distance``
     are static aux data, so a jitted function specialises on them exactly
     like on shapes.
+
+    Registered *with keys* so key-path flattens name the children
+    (``.codes`` / ``.meta`` / ``.care``) instead of positional flat
+    indices — checkpoint manifests built from key paths
+    (:mod:`repro.checkpoint.checkpointer`) stay self-describing and
+    stable across the optional children being present or ``None``.
     """
 
     codes: jnp.ndarray
@@ -158,6 +164,12 @@ class AMTable:
     def tree_flatten(self):
         """Flatten into (codes, meta, care) children + (bits, distance) aux."""
         return (self.codes, self.meta, self.care), (self.bits, self.distance)
+
+    def tree_flatten_with_keys(self):
+        """Keyed flatten: ``.codes`` / ``.meta`` / ``.care`` named children."""
+        ga = jax.tree_util.GetAttrKey
+        return ((ga("codes"), self.codes), (ga("meta"), self.meta),
+                (ga("care"), self.care)), (self.bits, self.distance)
 
     @classmethod
     def tree_unflatten(cls, aux, children):

@@ -29,6 +29,7 @@ Specs factories (shapes they describe):
   ``am_queries_dp``  (Q, D)        associative-search queries, batch on dp
   ``am_meta``        (N, M)        per-row serving meta/timestamps (replicated)
   ``am_index``       (S, ...)      set-associative index per-set arrays, S on tp
+  ``am_state``       {leaf: spec}  durable table-state tree (snapshot layer)
 
 The associative-memory specs are one half of the search-stack contract
 documented in ``docs/ARCHITECTURE.md`` (the other half is the backend tier
@@ -190,6 +191,39 @@ class Rules:
         replicated, outside the banked region.
         """
         return P(self.tp)
+
+    def am_state(self, *, ternary: bool = False,
+                 indexed: bool = False) -> dict:
+        """Spec tree for one durable table-state dict (the snapshot layer).
+
+        The logical partition specs of every array leaf
+        :mod:`repro.serve.snapshot` serialises per table, keyed exactly like
+        its state dict: ``codes`` row-banked per :meth:`am_table`, ``meta``
+        replicated per :meth:`am_meta`, the pickled ``values`` byte plane
+        replicated (host payloads have no device layout), plus — when the
+        flags say the table carries them — the ternary ``care`` plane
+        (row-banked with its codes) and the five ``index`` arrays
+        (set-banked per :meth:`am_index`, except the replicated coarse
+        ``centroids``).  Feeding this tree to
+        :func:`repro.checkpoint.elastic.reshard_restore` restores a
+        snapshot onto a mesh with a *different* bank count — the elastic
+        warm-restart path.  Leaves whose leading dimension does not divide
+        the new bank width are scrubbed to replication by the snapshot
+        layer before the restore (uneven GSPMD tiling is invalid).
+        """
+        state: dict = {"codes": self.am_table(), "meta": self.am_meta(),
+                       "values": P()}
+        if ternary:
+            state["care"] = self.am_table()
+        if indexed:
+            state["index"] = {
+                "centroids": P(),
+                "slabs": self.am_index(),
+                "row_ids": self.am_index(),
+                "set_sizes": self.am_index(),
+                "set_radius": self.am_index(),
+            }
+        return state
 
     # -- outputs -------------------------------------------------------------
 

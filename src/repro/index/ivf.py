@@ -96,7 +96,7 @@ class IndexSpec:
                 f"expected one of {partition.METHODS}")
 
 
-@jax.tree_util.register_pytree_node_class
+@jax.tree_util.register_pytree_with_keys_class
 @dataclasses.dataclass(frozen=True)
 class IVFIndex:
     """Immutable set-associative index over one table (a registered pytree).
@@ -129,6 +129,16 @@ class IVFIndex:
         """Flatten into the five index arrays + (bits, distance) aux."""
         return ((self.centroids, self.slabs, self.row_ids, self.set_sizes,
                  self.set_radius), (self.bits, self.distance))
+
+    def tree_flatten_with_keys(self):
+        """Keyed flatten: the five index arrays under their field names."""
+        ga = jax.tree_util.GetAttrKey
+        children = ((ga("centroids"), self.centroids),
+                    (ga("slabs"), self.slabs),
+                    (ga("row_ids"), self.row_ids),
+                    (ga("set_sizes"), self.set_sizes),
+                    (ga("set_radius"), self.set_radius))
+        return children, (self.bits, self.distance)
 
     @classmethod
     def tree_unflatten(cls, aux, children):

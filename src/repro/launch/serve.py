@@ -72,6 +72,16 @@ def parse_args(argv=None):
     ap.add_argument("--am-probes", type=int, default=1, metavar="P",
                     help="sets probed per indexed lookup (only with "
                          "--am-index)")
+    ap.add_argument("--am-snapshot-dir", default=None, metavar="DIR",
+                    help="durable-cache directory: commit a snapshot of the "
+                         "AM cache there on exit (repro.serve.snapshot "
+                         "layout; see docs/ARCHITECTURE.md layer 4.5)")
+    ap.add_argument("--am-restore", action="store_true",
+                    help="warm-restart the AM cache from --am-snapshot-dir "
+                         "before serving (elastic: the mesh may have a "
+                         "different bank count than the snapshotting run); "
+                         "ignored when the directory holds no committed "
+                         "snapshot yet")
     return ap.parse_args(argv)
 
 
@@ -85,9 +95,28 @@ def build_cache_service(args, mesh, *, start_driver=True):
     routed through the IVF tier iff ``--am-index SETS`` with ``--am-probes``
     probes.  ``start_driver=False`` skips the background driver so tests
     can step the service deterministically.
+
+    With ``--am-restore`` and a committed snapshot under
+    ``--am-snapshot-dir``, the service warm-restarts from it instead —
+    tables, payloads and row counts survive the process boundary, and the
+    snapshot's bank layout reshards elastically onto this run's mesh.
     """
     if not args.am_cache:
         return None
+    restored = None
+    if args.am_restore and args.am_snapshot_dir:
+        try:
+            restored = AMService.restore(
+                args.am_snapshot_dir,
+                mesh=mesh if args.am_sharded else None,
+                merge=args.am_merge, max_batch=max(64, args.requests),
+                flush_after=0.005, time_fn=time.monotonic)
+        except FileNotFoundError:
+            restored = None          # cold start: nothing committed yet
+    if restored is not None:
+        if start_driver:
+            restored.start_driver()
+        return restored
     # deadline-batched: submits queue until the 5 ms flush_after expires;
     # the background driver owns the deadline, so a half-full bucket
     # never waits on another submit arriving.
@@ -178,6 +207,10 @@ def main(argv=None):
             resp = fut.result()
             results[i] = resp.value if resp.hit else results[rep_of[i]]
         svc.stop_driver()
+        if args.am_snapshot_dir:
+            step = svc.snapshot(args.am_snapshot_dir)
+            print(f"AM cache snapshot committed: step {step} -> "
+                  f"{args.am_snapshot_dir}")
     wall = time.time() - t0
 
     for i, gen in sorted(results.items()):

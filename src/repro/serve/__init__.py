@@ -9,13 +9,22 @@
   (``create_table(..., index=IndexSpec(...))``), and :class:`AMDriver` —
   the pipelined dispatch driver that overlaps host batching, device
   compute and readback.
+* :mod:`repro.serve.snapshot` — durability: ``AMService.snapshot(dir)``
+  commits every table atomically through ``repro.checkpoint``;
+  ``AMService.restore(dir, mesh=...)`` warm-restarts onto any bank count
+  (elastic reshard) with bitwise-identical search results.
 """
 
 from repro.index.ivf import IndexSpec
 from repro.serve.am_service import (AdmissionError, AMDriver, AMService,
                                     PendingSearch, SearchRequest,
                                     SearchResponse, TableFullError)
+from repro.serve.snapshot import (MANIFEST_FIELDS, SNAPSHOT_FORMAT,
+                                  read_service_manifest, restore_service,
+                                  snapshot_service, table_manifest)
 
 __all__ = ["AdmissionError", "AMDriver", "AMService", "IndexSpec",
-           "PendingSearch", "SearchRequest", "SearchResponse",
-           "TableFullError"]
+           "MANIFEST_FIELDS", "PendingSearch", "SNAPSHOT_FORMAT",
+           "SearchRequest", "SearchResponse", "TableFullError",
+           "read_service_manifest", "restore_service", "snapshot_service",
+           "table_manifest"]

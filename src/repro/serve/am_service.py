@@ -1052,6 +1052,39 @@ class AMService:
             self._drain_req = False
         return ok
 
+    # -- durability (repro.serve.snapshot) -----------------------------------
+
+    def snapshot(self, directory, *, step: int | None = None,
+                 keep: int = 2, app: dict | None = None,
+                 drain_timeout: float | None = 60.0) -> int:
+        """Durable snapshot of every table under ``directory``; returns step.
+
+        Quiesces via :meth:`drain` first (a driver-consistent cut: every
+        acknowledged append is included), then commits one atomic
+        checkpoint per table plus a ``service.json`` commit point — see
+        :mod:`repro.serve.snapshot` for the layout and manifest contract.
+        """
+        from repro.serve import snapshot as _snap
+        return _snap.snapshot_service(self, directory, step=step, keep=keep,
+                                      app=app, drain_timeout=drain_timeout)
+
+    @classmethod
+    def restore(cls, directory, *, mesh=None, rules=None,
+                step: int | None = None, time_fn=None,
+                merge: str | None = None, max_batch: int | None = None,
+                flush_after: float | None = None) -> "AMService":
+        """Warm-restart a service from a :meth:`snapshot` directory.
+
+        ``mesh`` may have a *different* bank count than the snapshotting
+        service (elastic reshard: row slabs re-bank through
+        ``Rules.am_state()`` specs, searches stay bitwise-identical).
+        """
+        from repro.serve import snapshot as _snap
+        return _snap.restore_service(directory, mesh=mesh, rules=rules,
+                                     step=step, time_fn=time_fn, merge=merge,
+                                     max_batch=max_batch,
+                                     flush_after=flush_after)
+
     def _expedite(self, fut: PendingSearch) -> None:
         """Force progress for one future: dispatch its bucket, help retire.
 

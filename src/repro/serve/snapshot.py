@@ -1,0 +1,395 @@
+"""Durable table snapshots + warm restart for :class:`~repro.serve.AMService`.
+
+Layer 4.5 of the stack (see ``docs/ARCHITECTURE.md``): everything below
+serves searches from process memory; this module makes that memory outlive
+the process.  A snapshot serialises every table's full state — code slab,
+serving meta, ternary care plane, host payloads, live-row count, the built
+IVF tier and the admission/eviction config — through
+:class:`repro.checkpoint.Checkpointer` (atomic per-table commits,
+keep-last-k versioning), and a restore rebuilds an equivalent service from
+it, optionally onto a mesh with a *different* bank count.
+
+Layout on disk::
+
+    <dir>/service.json                       # commit point: step + config
+    <dir>/tables/<name>/step_<n>/leaf_*.npy  # one Checkpointer per table
+    <dir>/tables/<name>/step_<n>/manifest.json
+
+Consistency contract:
+
+* :func:`snapshot_service` first quiesces through ``AMService.drain()`` —
+  every in-flight dispatch group retires and every queued lookup resolves
+  before state is captured, so the snapshot is a driver-consistent point:
+  any append acknowledged (returned) before the snapshot call is included.
+  Capture happens under the service lock; serialisation (the slow part)
+  happens outside it.
+* Each table commits atomically via the Checkpointer's tmp-dir rename;
+  ``service.json`` is written (atomically) *last*, naming the step, so a
+  crash mid-snapshot leaves the previous ``service.json`` pointing at the
+  previous, still-retained step — restores never see a torn multi-table
+  snapshot.  ``keep`` must therefore be >= 2.
+* :func:`restore_service` rebuilds tables *elastically*: given a mesh, row
+  slabs reshard through ``Rules.am_table()`` / ``Rules.am_state()`` specs
+  via :func:`repro.checkpoint.elastic.reshard_restore` (checkpoints store
+  full logical arrays, so any bank count works); built IVF indexes restore
+  as logical arrays and re-bank automatically at dispatch
+  (``ivf.search_sharded`` pads sets to the bank count), with their slabs
+  device-sharded per ``Rules.am_index()`` when the set count divides the
+  new bank width.  Leaves whose leading dimension does not divide the new
+  bank width stay replicated — ``am.search_sharded`` reshards at dispatch
+  through its ``shard_map``, so results are bitwise-identical either way.
+* Host payloads (``values``) ride the same atomic commit as a pickled
+  uint8 leaf; restore refuses manifests whose ``n``/``values`` accounting
+  disagrees.
+
+The per-table manifest ``metadata`` dict is a versioned contract
+(:data:`SNAPSHOT_FORMAT`): its field set is :data:`MANIFEST_FIELDS`,
+machine-checked against the durability table in ``docs/ARCHITECTURE.md``
+by ``tests/test_docs_contract.py`` and against live snapshots by
+``tests/test_am_snapshot.py``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import pickle
+import urllib.parse
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import elastic
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core import am
+from repro.index import ivf
+from repro.index.ivf import IndexSpec
+
+#: Snapshot manifest format version; restore refuses any other value.
+SNAPSHOT_FORMAT = 1
+
+#: The per-table manifest metadata contract: field -> invariant.  The
+#: docs/ARCHITECTURE.md ``snapshot-manifest`` table mirrors this mapping
+#: verbatim (field names machine-checked), and every field is present in
+#: every manifest this module writes.
+MANIFEST_FIELDS = {
+    "format": "== SNAPSHOT_FORMAT; restore refuses unknown versions",
+    "table": "the table's service name (also its directory, URL-quoted)",
+    "n": "live rows; 0 <= n <= capacity",
+    "capacity": "slab rows; codes leaf shape is (capacity, width)",
+    "width": "word width D in symbols",
+    "bits": "bits per stored symbol (static table aux)",
+    "distance": "distance metric, one of am.DISTANCES",
+    "policy": "eviction policy, one of am_service.POLICIES",
+    "ttl": "TTL in clock units; set iff policy == 'ttl'",
+    "backend": "default search backend (am.get_backend-resolvable)",
+    "ternary": "True iff a care plane leaf is present",
+    "version": "table mutation counter at capture (monotone per table)",
+    "clock": "service clock at capture; restore resumes from it",
+    "admission": "qps_budget / burst / max_queue / mode sub-dict",
+    "values_bytes": "byte length of the pickled payload leaf",
+    "index_spec": "IndexSpec fields, or null for unindexed tables",
+    "index_built": "True iff the five IVF index leaves are present",
+    "index_shape": "sets / set_capacity of the built index, else null",
+    "app": "caller-owned dict (snapshot(app=...)); opaque to restore",
+}
+
+#: Keys of the five IVF index arrays inside the state tree's ``index`` dict.
+INDEX_KEYS = ("centroids", "slabs", "row_ids", "set_sizes", "set_radius")
+
+
+def _table_dir(root: pathlib.Path, name: str) -> pathlib.Path:
+    return root / "tables" / urllib.parse.quote(name, safe="")
+
+
+def read_service_manifest(directory: str | os.PathLike) -> dict:
+    """The committed ``service.json`` of a snapshot directory."""
+    p = pathlib.Path(directory) / "service.json"
+    if not p.exists():
+        raise FileNotFoundError(f"no snapshot committed under {directory!r} "
+                                "(service.json missing)")
+    manifest = json.loads(p.read_text())
+    if manifest.get("format") != SNAPSHOT_FORMAT:
+        raise ValueError(
+            f"snapshot format {manifest.get('format')!r} != "
+            f"{SNAPSHOT_FORMAT} (this build)")
+    return manifest
+
+
+def table_manifest(directory: str | os.PathLike, name: str,
+                   step: int | None = None) -> dict:
+    """One table's checkpoint manifest ``metadata`` dict at ``step``.
+
+    ``step=None`` reads the step committed by ``service.json`` (NOT the
+    table's latest — a crash mid-snapshot can leave a newer, uncommitted
+    per-table step behind).
+    """
+    if step is None:
+        step = read_service_manifest(directory)["step"]
+    ckpt = Checkpointer(_table_dir(pathlib.Path(directory), name))
+    return ckpt.manifest(step)["metadata"]
+
+
+# ---------------------------------------------------------------------------
+# Capture
+# ---------------------------------------------------------------------------
+
+def _capture_table(t) -> tuple[dict, dict]:
+    """Service lock held: one table's (state tree, manifest metadata)."""
+    payload = pickle.dumps(list(t.values), protocol=4)
+    state: dict[str, Any] = {
+        "codes": t.table.codes,
+        "meta": t.table.meta,
+        "values": np.frombuffer(payload, np.uint8).copy(),
+    }
+    if t.table.care is not None:
+        state["care"] = t.table.care
+    if t.index is not None:
+        state["index"] = {k: getattr(t.index, k) for k in INDEX_KEYS}
+    metadata = {
+        "format": SNAPSHOT_FORMAT,
+        "table": t.name,
+        "n": int(t.n),
+        "capacity": int(t.capacity),
+        "width": int(t.table.width),
+        "bits": int(t.table.bits),
+        "distance": t.table.distance,
+        "policy": t.policy,
+        "ttl": t.ttl,
+        "backend": t.backend,
+        "ternary": t.table.care is not None,
+        "version": int(t.version),
+        "clock": 0.0,                     # stamped by snapshot_service
+        "admission": {
+            "qps_budget": t.qps_budget,
+            "burst": t.burst,
+            "max_queue": t.max_queue,
+            "mode": t.admission,
+        },
+        "values_bytes": len(payload),
+        "index_spec": (None if t.index_spec is None
+                       else dataclass_dict(t.index_spec)),
+        "index_built": t.index is not None,
+        "index_shape": (None if t.index is None else
+                        {"sets": int(t.index.sets),
+                         "set_capacity": int(t.index.set_capacity)}),
+        "app": {},                        # stamped by snapshot_service
+    }
+    return state, metadata
+
+
+def dataclass_dict(spec: IndexSpec) -> dict:
+    """JSON-safe field dict of an :class:`IndexSpec` (all fields scalar)."""
+    import dataclasses
+    return dataclasses.asdict(spec)
+
+
+def snapshot_service(svc, directory: str | os.PathLike, *,
+                     step: int | None = None, keep: int = 2,
+                     app: dict | None = None,
+                     drain_timeout: float | None = 60.0) -> int:
+    """Quiesce ``svc`` and commit one snapshot of every table; returns step.
+
+    Drains first (in-flight groups retire, queued lookups resolve), captures
+    all table state under the service lock (a consistent cut: acknowledged
+    appends are included, concurrent ones serialise against the capture),
+    then serialises outside the lock — one atomic Checkpointer commit per
+    table, ``service.json`` written last as the cross-table commit point.
+
+    ``keep`` (>= 2) snapshots are retained per table, so an interrupted
+    snapshot never orphans the previously committed step.  ``app`` is an
+    arbitrary JSON-safe dict stored in every manifest (and
+    ``service.json``) for the caller — e.g. replicated-log positions.
+    """
+    if keep < 2:
+        raise ValueError(
+            f"keep must be >= 2 (got {keep}): the previously committed "
+            "step must survive one in-progress snapshot, or a crash "
+            "between a table commit and service.json strands the restore")
+    if not svc.drain(drain_timeout):
+        raise RuntimeError(
+            f"AMService.drain() did not quiesce within {drain_timeout}s; "
+            "snapshot would not be driver-consistent")
+    root = pathlib.Path(directory)
+    root.mkdir(parents=True, exist_ok=True)
+    if step is None:
+        try:
+            step = read_service_manifest(root)["step"] + 1
+        except FileNotFoundError:
+            step = 1
+    app = dict(app or {})
+    with svc._lock:
+        clock = svc._now()
+        captured = []
+        for name, t in svc._tables.items():
+            state, metadata = _capture_table(t)
+            metadata["clock"] = float(clock)
+            metadata["app"] = app
+            captured.append((name, state, metadata))
+    for name, state, metadata in captured:
+        ckpt = Checkpointer(_table_dir(root, name), keep=keep)
+        ckpt.save(step, state, metadata)
+    service = {
+        "format": SNAPSHOT_FORMAT,
+        "step": step,
+        "tables": [name for name, _, _ in captured],
+        "merge": svc._merge,
+        "max_batch": svc.max_batch,
+        "flush_after": svc.flush_after,
+        "clock": float(clock),
+        "app": app,
+    }
+    tmp = root / ".tmp-service.json"
+    with open(tmp, "w") as f:
+        json.dump(service, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, root / "service.json")
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Restore
+# ---------------------------------------------------------------------------
+
+def _template(md: dict) -> dict:
+    """Host-side zero template matching one table's saved state tree."""
+    cap, width = md["capacity"], md["width"]
+    tpl: dict[str, Any] = {
+        "codes": np.zeros((cap, width), np.int32),
+        "meta": np.zeros((cap, 2), np.float32),
+        "values": np.zeros((md["values_bytes"],), np.uint8),
+    }
+    if md["ternary"]:
+        tpl["care"] = np.zeros((cap, width), np.int32)
+    if md["index_built"]:
+        s, c = md["index_shape"]["sets"], md["index_shape"]["set_capacity"]
+        tpl["index"] = {
+            "centroids": np.zeros((s, width), np.int32),
+            "slabs": np.zeros((s, c, width), np.int32),
+            "row_ids": np.zeros((s, c), np.int32),
+            "set_sizes": np.zeros((s,), np.int32),
+            "set_radius": np.zeros((s,), np.float32),
+        }
+    return tpl
+
+
+def _scrub_indivisible(spec_tree: dict, template: dict, mesh) -> dict:
+    """Replace specs whose sharded dims do not divide the mesh with P().
+
+    GSPMD tiling must divide every sharded dimension exactly; a slab whose
+    row count does not divide the new bank width restores replicated
+    instead (dispatch reshards it on the fly — bitwise-identical results).
+    """
+    def fits(spec, arr):
+        for d, entry in enumerate(spec):
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            width = 1
+            for nm in names:
+                width *= mesh.shape[nm]
+            if d >= arr.ndim or arr.shape[d] % width:
+                return False
+        return True
+
+    return jax.tree.map(
+        lambda s, a: s if fits(s, a) else P(),
+        spec_tree, template, is_leaf=lambda x: isinstance(x, P))
+
+
+def _restore_table(svc, root: pathlib.Path, name: str, step: int,
+                   keep: int) -> None:
+    """Load one table's checkpoint into ``svc`` (elastically, on a mesh)."""
+    from repro.serve import am_service
+
+    ckpt = Checkpointer(_table_dir(root, name), keep=keep)
+    md = ckpt.manifest(step)["metadata"]
+    if md.get("format") != SNAPSHOT_FORMAT:
+        raise ValueError(f"table {name!r}: snapshot format "
+                         f"{md.get('format')!r} != {SNAPSHOT_FORMAT}")
+    tpl = _template(md)
+    if svc._mesh is not None:
+        spec_tree = svc._rules.am_state(ternary=md["ternary"],
+                                        indexed=md["index_built"])
+        spec_tree = _scrub_indivisible(spec_tree, tpl, svc._mesh)
+        state, _ = elastic.reshard_restore(ckpt, tpl, spec_tree, svc._mesh,
+                                           step=step)
+    else:
+        state, _ = ckpt.restore(tpl, step=step)
+
+    values = pickle.loads(np.asarray(state["values"]).tobytes())
+    n = int(md["n"])
+    if not 0 <= n <= md["capacity"] or len(values) != n:
+        raise ValueError(
+            f"table {name!r}: inconsistent manifest — n={n}, "
+            f"capacity={md['capacity']}, {len(values)} payloads")
+    table = am.AMTable(
+        codes=jnp.asarray(state["codes"]),
+        meta=jnp.asarray(state["meta"]),
+        care=None if "care" not in state else jnp.asarray(state["care"]),
+        bits=md["bits"], distance=md["distance"])
+    index = None
+    if md["index_built"]:
+        index = ivf.IVFIndex(
+            **{k: jnp.asarray(state["index"][k]) for k in INDEX_KEYS},
+            bits=md["bits"], distance=md["distance"])
+    spec = (None if md["index_spec"] is None
+            else IndexSpec(**md["index_spec"]))
+    adm = md["admission"]
+    svc._tables[name] = am_service._TableState(
+        name=name, table=table, n=n, capacity=md["capacity"],
+        policy=md["policy"], ttl=md["ttl"], backend=md["backend"],
+        values=values, version=md["version"],
+        qps_budget=adm["qps_budget"], burst=adm["burst"],
+        max_queue=adm["max_queue"], admission=adm["mode"],
+        tokens=adm["burst"], tokens_at=svc._now(),
+        index_spec=spec, index=index)
+
+
+def restore_service(directory: str | os.PathLike, *, mesh=None, rules=None,
+                    step: int | None = None, time_fn=None,
+                    merge: str | None = None, max_batch: int | None = None,
+                    flush_after: float | None = None, keep: int = 2):
+    """Rebuild an :class:`~repro.serve.AMService` from a snapshot directory.
+
+    ``mesh`` may differ (in bank count, or presence) from the mesh the
+    snapshot was taken on — the elastic warm-restart path: row slabs
+    reshard through ``Rules.am_state()`` specs, and search results stay
+    bitwise-identical across the reshard (the sharded-search contract).
+    ``merge`` / ``max_batch`` default to the snapshotted service config;
+    ``flush_after`` is only restored when a real ``time_fn`` is supplied
+    (a deadline on the logical clock warns, see the AMService docstring).
+    The service clock resumes from the snapshotted reading, so restored
+    LRU/TTL timestamps stay ordered against post-restore traffic.
+    """
+    from repro.serve.am_service import AMService
+
+    root = pathlib.Path(directory)
+    manifest = read_service_manifest(root)
+    if step is None:
+        step = manifest["step"]
+    restored_deadline = manifest["flush_after"] if time_fn is not None \
+        else None
+    svc = AMService(
+        mesh=mesh, rules=rules,
+        merge=manifest["merge"] if merge is None else merge,
+        max_batch=manifest["max_batch"] if max_batch is None else max_batch,
+        flush_after=(restored_deadline if flush_after is None
+                     else flush_after),
+        time_fn=time_fn)
+    for name in manifest["tables"]:
+        _restore_table(svc, root, name, step, keep)
+    clock = float(manifest["clock"])
+    if time_fn is None:
+        svc._clock = clock
+    else:
+        # rebase the wall epoch so _now() continues from the saved reading
+        svc._epoch = float(time_fn()) - clock
+    for t in svc._tables.values():
+        t.tokens_at = svc._now()
+    return svc

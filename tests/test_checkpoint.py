@@ -1,0 +1,250 @@
+"""Checkpointer round-trip + concurrency contracts (ISSUE 10 satellites).
+
+Round-trip property tests over :class:`repro.core.am.AMTable` pytrees with
+*optional* children — the restore-into-template path that used to silently
+drop saved leaves (template ``meta=None`` / ``care=None`` vs a checkpoint
+written with them set), plus the async-save / GC / restore interleavings
+that used to corrupt committed checkpoints.
+"""
+
+import tempfile
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core import am
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _table(seed, rows, width, *, with_meta, with_care, bits=3):
+    r = _rng(seed)
+    codes = r.integers(0, 2 ** bits, (rows, width)).astype(np.int32)
+    meta = r.normal(size=(rows, 2)).astype(np.float32) if with_meta else None
+    care = (r.integers(0, 2, (rows, width)).astype(np.int32)
+            if with_care else None)
+    return am.make_table(codes, bits=bits, meta=meta, care_mask=care)
+
+
+def _assert_tables_equal(a: am.AMTable, b: am.AMTable):
+    assert np.array_equal(np.asarray(a.codes), np.asarray(b.codes))
+    for child in ("meta", "care"):
+        x, y = getattr(a, child), getattr(b, child)
+        assert (x is None) == (y is None), child
+        if x is not None:
+            assert np.array_equal(np.asarray(x), np.asarray(y)), child
+    assert a.bits == b.bits and a.distance == b.distance
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: optional-children round trips
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(min_value=0, max_value=33),
+       width=st.integers(min_value=1, max_value=9),
+       with_meta=st.booleans(), with_care=st.booleans(),
+       seed=st.integers(min_value=0, max_value=2 ** 31))
+def test_amtable_roundtrip_optional_children(rows, width, with_meta,
+                                             with_care, seed):
+    """Same-structure restore is exact for every optional-child combo."""
+    t = _table(seed, rows, width, with_meta=with_meta, with_care=with_care)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt = Checkpointer(d)
+        ckpt.save(1, t, {"rows": rows})
+        restored, md = ckpt.restore(
+            _table(seed + 1, rows, width, with_meta=with_meta,
+                   with_care=with_care))
+    assert md == {"rows": rows}
+    _assert_tables_equal(restored, t)
+
+
+def test_keyed_manifest_paths(tmp_path):
+    """AMTable manifests name leaves by field, stable across None children."""
+    ckpt = Checkpointer(tmp_path)
+    ckpt.save(1, _table(0, 4, 3, with_meta=True, with_care=True))
+    paths = [e["path"] for e in ckpt.manifest(1)["leaves"]]
+    assert paths == [".codes", ".meta", ".care"]
+    ckpt.save(2, _table(0, 4, 3, with_meta=False, with_care=True))
+    assert [e["path"] for e in ckpt.manifest(2)["leaves"]] == \
+        [".codes", ".care"]
+
+
+def test_restore_into_none_template_raises_strict(tmp_path):
+    """A checkpoint WITH meta/care must not silently restore into a
+    template WITHOUT them — that drops saved state."""
+    ckpt = Checkpointer(tmp_path)
+    full = _table(1, 8, 4, with_meta=True, with_care=True)
+    ckpt.save(1, full)
+    bare = _table(2, 8, 4, with_meta=False, with_care=False)
+    with pytest.raises(ValueError, match=r"\.care.*\.meta|\.meta.*\.care"):
+        ckpt.restore(bare)
+    # explicit opt-out restores the template's subset
+    got, _ = ckpt.restore(bare, strict=False)
+    assert got.meta is None and got.care is None
+    assert np.array_equal(np.asarray(got.codes), np.asarray(full.codes))
+
+
+def test_restore_missing_leaf_raises(tmp_path):
+    """Template wants a child the checkpoint never saved -> KeyError."""
+    ckpt = Checkpointer(tmp_path)
+    ckpt.save(1, _table(1, 8, 4, with_meta=False, with_care=False))
+    with pytest.raises(KeyError, match=r"\.meta"):
+        ckpt.restore(_table(2, 8, 4, with_meta=True, with_care=False))
+
+
+def test_empty_table_roundtrip(tmp_path):
+    """n=0 tables (zero-row slabs) checkpoint and restore losslessly."""
+    t = _table(3, 0, 5, with_meta=True, with_care=True)
+    ckpt = Checkpointer(tmp_path)
+    ckpt.save(1, t)
+    restored, _ = ckpt.restore(_table(4, 0, 5, with_meta=True,
+                                      with_care=True))
+    _assert_tables_equal(restored, t)
+    assert restored.codes.shape == (0, 5)
+
+
+def test_sharding_tree_with_none_entries(tmp_path):
+    """A shardings tree carrying None leaves maps by key path — it must not
+    silently truncate against the target's flattened leaves."""
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:2]), ("model",))
+    sh = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("model", None))
+    t = _table(5, 8, 4, with_meta=True, with_care=True)
+    ckpt = Checkpointer(tmp_path)
+    ckpt.save(1, t)
+    template = _table(6, 8, 4, with_meta=True, with_care=True)
+    # only .care sharded; .codes/.meta None -> unsharded.  Before the
+    # path-keyed fix the Nones vanished in flattening and the sharding
+    # zipped onto .codes instead.
+    shardings = am.AMTable(codes=None, meta=None, care=sh,
+                           bits=t.bits, distance=t.distance)
+    restored, _ = ckpt.restore(template, shardings=shardings)
+    _assert_tables_equal(restored, t)
+    assert restored.care.sharding == sh
+    assert not isinstance(restored.codes.sharding,
+                          jax.sharding.NamedSharding) or \
+        restored.codes.sharding.is_fully_replicated
+
+
+def test_sharding_subtree_dict(tmp_path):
+    """Nested dict states accept a partial shardings dict (subset of keys)."""
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:2]), ("model",))
+    sh = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("model", None))
+    state = {"codes": np.arange(12, dtype=np.int32).reshape(6, 2),
+             "aux": {"values": np.arange(5, dtype=np.uint8)}}
+    ckpt = Checkpointer(tmp_path)
+    ckpt.save(1, state)
+    got, _ = ckpt.restore(
+        {"codes": np.zeros((6, 2), np.int32),
+         "aux": {"values": np.zeros((5,), np.uint8)}},
+        shardings={"codes": sh, "aux": {"values": None}})
+    assert np.array_equal(np.asarray(got["codes"]), state["codes"])
+    assert got["codes"].sharding == sh
+    assert np.array_equal(np.asarray(got["aux"]["values"]),
+                          state["aux"]["values"])
+
+
+def test_bfloat16_leaf_roundtrip(tmp_path):
+    """bf16 meta survives the uint16-view detour."""
+    meta = jnp.arange(8, dtype=jnp.bfloat16).reshape(4, 2)
+    t = am.make_table(np.zeros((4, 3), np.int32), meta=meta)
+    ckpt = Checkpointer(tmp_path)
+    ckpt.save(1, t)
+    restored, _ = ckpt.restore(
+        am.make_table(np.ones((4, 3), np.int32),
+                      meta=jnp.zeros((4, 2), jnp.bfloat16)))
+    assert restored.meta.dtype == jnp.bfloat16
+    assert np.array_equal(np.asarray(restored.meta, np.float32),
+                          np.asarray(meta, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3: save_async / wait / GC interleavings
+# ---------------------------------------------------------------------------
+
+def test_gc_keep1_does_not_delete_inflight_async_step(tmp_path):
+    """keep=1 with an async save in flight: the step being written commits
+    intact and the GC only ever removes *older* committed steps."""
+    ckpt = Checkpointer(tmp_path, keep=1)
+    trees = {s: {"x": np.full((64, 64), s, np.int32)} for s in range(1, 6)}
+    for s in range(1, 6):
+        ckpt.save_async(s, trees[s])
+    ckpt.wait()
+    assert ckpt.all_steps() == [5]
+    got, _ = ckpt.restore({"x": np.zeros((64, 64), np.int32)})
+    assert np.array_equal(np.asarray(got["x"]), trees[5]["x"])
+
+
+def test_sync_save_joins_inflight_async(tmp_path):
+    """save() after save_async() must not interleave two writers in one tmp
+    dir — both steps commit with their own leaves under their own manifest."""
+    ckpt = Checkpointer(tmp_path, keep=8)
+    a = {"x": np.full((128, 128), 7, np.int32)}
+    b = {"x": np.full((128, 128), 9, np.int32)}
+    ckpt.save_async(1, a)
+    ckpt.save(2, b)        # same-tick overlap: must serialise behind step 1
+    assert ckpt.all_steps() == [1, 2]
+    for step, tree in ((1, a), (2, b)):
+        got, _ = ckpt.restore({"x": np.zeros((128, 128), np.int32)},
+                              step=step)
+        assert np.array_equal(np.asarray(got["x"]), tree["x"]), step
+
+
+def test_concurrent_restore_never_sees_gced_step(tmp_path):
+    """Readers racing writers+GC always get a complete, uncorrupted step."""
+    ckpt = Checkpointer(tmp_path, keep=2)
+    ckpt.save(0, {"x": np.full((32, 32), 0, np.int32)})
+    errors = []
+    stop = threading.Event()
+
+    def reader():
+        tpl = {"x": np.zeros((32, 32), np.int32)}
+        while not stop.is_set():
+            try:
+                got, _ = ckpt.restore(tpl)       # latest committed
+                arr = np.asarray(got["x"])
+                if not (arr == arr.flat[0]).all():
+                    errors.append(f"torn read: {arr.flat[:4]}")
+            except Exception as e:               # noqa: BLE001
+                errors.append(repr(e))
+
+    threads = [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for s in range(1, 20):
+        ckpt.save_async(s, {"x": np.full((32, 32), s, np.int32)})
+    ckpt.wait()
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors, errors[:3]
+    assert ckpt.all_steps() == [18, 19]
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=999))
+def test_wait_idempotent_across_threads(seed):
+    """Concurrent wait() calls all join the same writer without racing the
+    thread-slot clear."""
+    with tempfile.TemporaryDirectory() as d:
+        ckpt = Checkpointer(d)
+        ckpt.save_async(seed, {"x": np.full((256, 64), seed, np.int32)})
+        waiters = [threading.Thread(target=ckpt.wait) for _ in range(4)]
+        for t in waiters:
+            t.start()
+        ckpt.wait()
+        for t in waiters:
+            t.join()
+        assert ckpt._thread is None
+        assert ckpt.all_steps() == [seed]

@@ -336,6 +336,44 @@ def test_completion_ordering_documented():
 
 
 # ---------------------------------------------------------------------------
+# the snapshot-manifest contract table (layer 4.5)
+# ---------------------------------------------------------------------------
+
+def test_snapshot_manifest_table_matches_code():
+    """The durability section's field table must list exactly
+    snapshot.MANIFEST_FIELDS, in order, and every field must appear in a
+    real manifest written by a live snapshot."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.serve import snapshot as snap
+    from repro.serve.am_service import AMService
+
+    rows = _table_rows(_arch_text(), "snapshot-manifest")
+    documented = [row[0].strip("`") for row in rows]
+    assert documented == list(snap.MANIFEST_FIELDS), (
+        "docs/ARCHITECTURE.md snapshot-manifest table must list "
+        "snapshot.MANIFEST_FIELDS in order:\n"
+        f"  doc:  {documented}\n  code: {list(snap.MANIFEST_FIELDS)}")
+    for field, invariant in zip(documented, (r[1] for r in rows)):
+        assert invariant.strip(), f"field {field!r} documents no invariant"
+
+    svc = AMService()
+    svc.create_table("t", width=4, capacity=8)
+    svc.append("t", np.zeros((2, 4), np.int32), values=[0, 1])
+    with tempfile.TemporaryDirectory() as d:
+        svc.snapshot(d)
+        md = snap.table_manifest(d, "t")
+    assert set(md) == set(snap.MANIFEST_FIELDS), (
+        set(md) ^ set(snap.MANIFEST_FIELDS))
+    assert re.search(r"`SNAPSHOT_FORMAT`\s*=\s*\**(\d+)\**", _arch_text()) \
+        .group(1) == str(snap.SNAPSHOT_FORMAT)
+    assert re.search(r"Layer 4\.5 — durability", _arch_text()), (
+        "docs/ARCHITECTURE.md must carry the Layer 4.5 durability section")
+
+
+# ---------------------------------------------------------------------------
 # the link gate, as a test
 # ---------------------------------------------------------------------------
 

@@ -15,7 +15,10 @@ behaviour.  These tests drive :func:`repro.launch.serve.parse_args` and
 * ``--am-sharded``/``--am-merge`` reach the service's mesh/merge wiring and
   its compiled dispatch still resolves lookups end to end;
 * driver lifecycle: ``build_cache_service`` starts a background driver that
-  resolves a submit without an explicit flush, and ``close()`` drains it.
+  resolves a submit without an explicit flush, and ``close()`` drains it;
+* durability: ``--am-snapshot-dir``/``--am-restore`` warm-restart the cache
+  across a build_cache_service boundary (and fall through to a cold start
+  when nothing is committed yet).
 """
 
 import jax
@@ -104,6 +107,37 @@ def test_sharded_and_merge_flags_reach_dispatch():
         assert resp.hit and resp.value == "payload"
     finally:
         svc.close()
+
+
+def test_parse_snapshot_flags():
+    args = _mk(["--am-snapshot-dir", "/tmp/cam", "--am-restore"])
+    assert args.am_snapshot_dir == "/tmp/cam" and args.am_restore is True
+    assert _mk([]).am_snapshot_dir is None
+    assert _mk([]).am_restore is False
+
+
+def test_restore_flag_warm_restarts_the_cache(tmp_path):
+    """snapshot -> build_cache_service(--am-restore) round trip: the stored
+    response survives the service boundary; a cold dir falls through."""
+    args = _mk(["--am-cache", "16", "--am-snapshot-dir", str(tmp_path),
+                "--am-restore"])
+    # cold start: no committed snapshot yet -> a fresh empty table
+    svc = launch_serve.build_cache_service(args, None, start_driver=False)
+    try:
+        key = np.zeros((launch_serve.CACHE_DIM,), np.int32)
+        svc.append("responses", key, values=["warm"])
+        svc.snapshot(tmp_path)
+    finally:
+        svc.close()
+
+    svc2 = launch_serve.build_cache_service(args, None, start_driver=False)
+    try:
+        assert svc2.stats("responses")["rows"] == 1
+        resp = svc2.lookup("responses",
+                           np.zeros((launch_serve.CACHE_DIM,), np.int32))
+        assert resp.hit and resp.value == "warm"
+    finally:
+        svc2.close()
 
 
 def test_driver_started_and_drains():
